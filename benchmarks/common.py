@@ -1,0 +1,79 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    GeneratorConfig,
+    generate_batch,
+    gus_schedule,
+    gus_schedule_batch,
+    local_all,
+    mean_us,
+    offload_all,
+    random_assignment,
+    satisfied_mask,
+    happy_computation,
+    happy_communication,
+)
+
+MC_RUNS = 192          # paper uses 20 000; means stabilize far earlier
+CHUNK = 64
+
+
+def run_policy_mc(name: str, cfg: GeneratorConfig, seed: int = 0, mc: int = MC_RUNS) -> Dict[str, float]:
+    """Monte-Carlo average of satisfied-% / mean-US / served mix for a policy."""
+    sat, us, local_pct, cloud_pct, eo_pct, served = [], [], [], [], [], []
+    n_servers = cfg.n_edge + cfg.n_cloud
+    cloud_mask = jnp.arange(n_servers) >= cfg.n_edge
+
+    for c0 in range(0, mc, CHUNK):
+        n = min(CHUNK, mc - c0)
+        batch = generate_batch(seed + c0, n, cfg)
+        if name == "gus":
+            a = gus_schedule_batch(batch)
+        elif name == "happy_computation":
+            a = gus_schedule_batch(batch, relax_compute=True)
+        elif name == "happy_communication":
+            a = gus_schedule_batch(batch, relax_comm=True)
+        elif name == "local_all":
+            a = jax.vmap(local_all)(batch)
+        elif name == "offload_all":
+            a = jax.vmap(lambda b: offload_all(b, cloud_mask))(batch)
+        elif name == "random":
+            keys = jax.random.split(jax.random.PRNGKey(seed + c0), n)
+            a = jax.vmap(random_assignment)(batch, keys)
+        else:
+            raise ValueError(name)
+        sm = satisfied_mask(batch, a.j, a.l)
+        sat.append(np.asarray(sm.mean(-1)))
+        us.append(np.asarray(mean_us(batch, a.j, a.l)))
+        is_served = np.asarray(a.j) >= 0
+        is_local = is_served & (np.asarray(a.j) == np.asarray(batch.cover))
+        is_cloud = is_served & (np.asarray(a.j) >= cfg.n_edge)
+        served.append(is_served.mean(-1))
+        local_pct.append(is_local.mean(-1))
+        cloud_pct.append(is_cloud.mean(-1))
+        eo_pct.append((is_served & ~is_local & ~is_cloud).mean(-1))
+
+    return {
+        "satisfied_pct": 100 * float(np.mean(np.concatenate(sat))),
+        "mean_us": float(np.mean(np.concatenate(us))),
+        "served_pct": 100 * float(np.mean(np.concatenate(served))),
+        "local_pct": 100 * float(np.mean(np.concatenate(local_pct))),
+        "cloud_pct": 100 * float(np.mean(np.concatenate(cloud_pct))),
+        "edge_offload_pct": 100 * float(np.mean(np.concatenate(eo_pct))),
+    }
+
+
+POLICIES = ("gus", "random", "offload_all", "local_all", "happy_computation", "happy_communication")
+
+
+def csv_row(*cells) -> str:
+    return ",".join(str(c) for c in cells)

@@ -1,0 +1,103 @@
+"""Beyond-paper extension benchmarks (the paper's stated future work):
+
+ 1. ordered-GUS vs GUS on the numerical setup (satisfied-% and mean US);
+ 2. user mobility: satisfied-% vs per-frame move probability — the paper's
+    per-frame formulation should degrade gracefully (scheduling is stateless
+    across frames);
+ 3. priorities: mean US of the top-priority decile under GUS-ordered vs
+    priority-blind GUS.
+
+Prints CSV rows."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    GeneratorConfig,
+    SimConfig,
+    generate_instance,
+    gus_schedule,
+    gus_schedule_np,
+    gus_schedule_ordered,
+    mean_us,
+    satisfied_mask,
+    simulate,
+)
+
+from .common import csv_row
+from .fig1_testbed import HORIZON_MS, make_testbed_spec
+
+
+def ordered_vs_arrival(n_instances: int = 40):
+    print("bench,metric,gus,gus_ordered")
+    cfg = GeneratorConfig()
+    sat_a, sat_o, us_a, us_o = [], [], [], []
+    for seed in range(n_instances):
+        inst = generate_instance(seed, cfg)
+        a = gus_schedule(inst)
+        b = gus_schedule_ordered(inst)
+        sat_a.append(float(satisfied_mask(inst, a.j, a.l).mean()))
+        sat_o.append(float(satisfied_mask(inst, b.j, b.l).mean()))
+        us_a.append(float(mean_us(inst, a.j, a.l)))
+        us_o.append(float(mean_us(inst, b.j, b.l)))
+    print(csv_row("ordered", "satisfied_pct", f"{100*np.mean(sat_a):.2f}", f"{100*np.mean(sat_o):.2f}"))
+    print(csv_row("ordered", "mean_us", f"{np.mean(us_a):.4f}", f"{np.mean(us_o):.4f}"))
+    assert np.mean(us_o) >= np.mean(us_a) - 1e-4
+    return np.mean(us_a), np.mean(us_o)
+
+
+def mobility_sweep(probs=(0.0, 0.2, 0.5), n=800, seeds=(0, 1)):
+    print("bench,move_prob,satisfied_pct,local_pct")
+    spec = make_testbed_spec()
+    spec.gamma_frame = np.array([3900.0, 3900.0, 3000.0], np.float32)
+    spec.eta_frame = np.array([350.0, 350.0, 3500.0], np.float32)
+    out = {}
+    for mp in probs:
+        cfg = SimConfig(
+            horizon_ms=HORIZON_MS,
+            arrival_rate_per_s=n / (spec.n_edge * HORIZON_MS / 1000.0),
+            delay_req_ms=5000.0,
+            acc_req_mean=50.0,
+            move_prob=mp,
+        )
+        rs = [simulate(spec, cfg, gus_schedule_np, seed=s, n_requests=n).as_dict() for s in seeds]
+        r = {k: float(np.mean([x[k] for x in rs])) for k in rs[0]}
+        out[mp] = r
+        print(csv_row("mobility", mp, f"{r['satisfied_pct']:.2f}", f"{r['local_pct']:.2f}"))
+    # graceful degradation: mobility costs < 20 points of satisfaction
+    assert out[probs[-1]]["satisfied_pct"] > out[0.0]["satisfied_pct"] - 20.0
+    return out
+
+
+def priority_decile(n_instances: int = 20):
+    print("bench,metric,blind,priority_aware")
+    cfg = GeneratorConfig()
+    blind, aware = [], []
+    rng = np.random.default_rng(0)
+    for seed in range(n_instances):
+        inst = generate_instance(seed, cfg)
+        pri = jnp.asarray(rng.choice([1.0, 10.0], size=inst.n_requests, p=[0.9, 0.1]))
+        top = np.asarray(pri) > 1.0
+        a = gus_schedule(inst)
+        b = gus_schedule_ordered(inst, priority=pri)
+        sa = np.asarray(satisfied_mask(inst, a.j, a.l))
+        sb = np.asarray(satisfied_mask(inst, b.j, b.l))
+        if top.any():
+            blind.append(sa[top].mean())
+            aware.append(sb[top].mean())
+    print(csv_row("priority", "top_decile_satisfied_pct",
+                  f"{100*np.mean(blind):.2f}", f"{100*np.mean(aware):.2f}"))
+    assert np.mean(aware) >= np.mean(blind) - 1e-9
+    return np.mean(blind), np.mean(aware)
+
+
+def main(fast: bool = False):
+    ordered_vs_arrival(15 if fast else 40)
+    mobility_sweep(seeds=(0,) if fast else (0, 1))
+    priority_decile(8 if fast else 20)
+
+
+if __name__ == "__main__":
+    main()

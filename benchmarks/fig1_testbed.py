@@ -1,0 +1,123 @@
+"""Paper Fig. 1(e)-(h): virtual-testbed results vs total #requests.
+
+The simulator mirrors the paper's testbed protocol (admission queues, 3000 ms
+frames, queue cap 4, EMA bandwidth estimator, lognormal wireless jitter); the
+model zoo is the paper-analog ladder (SqueezeNet/GoogleNet analogs) with
+latencies from the roofline profile of the actual JAX models.
+
+Prints CSV: figure,n_requests,policy,satisfied_pct,local_pct,cloud_pct,
+edge_offload_pct,dropped_pct."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.paper_zoo import GOOGLE_LM, MID_LM, SQUEEZE_LM
+from repro.core import SimConfig, gus_schedule_np, local_all, offload_all, random_assignment, simulate
+from repro.serving import ModelZoo, ServiceSpec, build_cluster_spec, variant_ladder
+
+from .common import csv_row
+
+
+def make_testbed_spec(seed: int = 0):
+    """Two edge servers + one cloud (the paper's RPi4 x2 + desktop),
+    SqueezeNet-analog on edges, GoogleNet-analog on the cloud."""
+    services = [
+        ServiceSpec("imgcls-a", [SQUEEZE_LM, MID_LM, GOOGLE_LM]),
+        ServiceSpec("imgcls-b", [SQUEEZE_LM, MID_LM, GOOGLE_LM]),
+        ServiceSpec("summarize", variant_ladder(get_config("mamba2-130m"), 3)),
+    ]
+    zoo = ModelZoo(services)
+    spec = build_cluster_spec(
+        zoo,
+        edge_classes=["edge-1", "edge-1"],
+        cloud_classes=["cloud-256"],
+        edge_variants=2,          # only the two cheap variants fit on an edge
+        edge_service_frac=1.0,
+        seed=seed,
+    )
+    # calibrate T^proc to the paper's testbed measurements:
+    # SqueezeNet-on-RPi4 ~1300 ms (edge), GoogleNet-on-desktop ~300 ms (cloud)
+    scale_edge = 1300.0 / max(spec.proc_ms[0][spec.placed[0]].max(), 1e-9)
+    spec.proc_ms[: spec.n_edge] *= scale_edge
+    cl = spec.n_edge
+    scale_cloud = 300.0 / max(spec.proc_ms[cl][spec.placed[cl]].max(), 1e-9)
+    spec.proc_ms[cl:] *= scale_cloud
+    return spec
+
+
+POLICIES = {
+    "gus": lambda spec: gus_schedule_np,
+    "random": lambda spec: (
+        lambda inst, _c=[0]: (_c.__setitem__(0, _c[0] + 1), random_assignment(inst, __import__("jax").random.PRNGKey(_c[0])))[1]
+    ),
+    "local_all": lambda spec: (lambda inst: local_all(inst)),
+    "offload_all": lambda spec: (
+        lambda inst: offload_all(inst, jnp.arange(spec.n_servers) >= spec.n_edge)
+    ),
+}
+
+
+HORIZON_MS = 120_000.0
+
+
+def main(n_points=(200, 800, 1600), seeds=(0, 1, 2)):
+    """x-axis = total #requests offered within the fixed 2-minute horizon
+    (the paper raises offered load the same way on its 2-hour runs)."""
+    spec = make_testbed_spec()
+    # capacity calibration mirroring the paper's testbed: edge = 3 concurrent
+    # classification threads (3 x 1300 chip-ms / frame), cloud desktop = 10
+    # requests/frame at 300 ms, comm cap ~5 images/frame off each edge
+    spec.gamma_frame = np.array([3900.0, 3900.0, 3000.0], np.float32)
+    spec.eta_frame = np.array([350.0, 350.0, 3500.0], np.float32)
+    print("figure,n_requests,policy,satisfied_pct,local_pct,cloud_pct,edge_offload_pct,dropped_pct")
+    results = {}
+    for n in n_points:
+        rate = n / (spec.n_edge * HORIZON_MS / 1000.0)
+        cfg = SimConfig(
+            horizon_ms=HORIZON_MS,
+            arrival_rate_per_s=rate,
+            delay_req_ms=5000.0,   # scaled-down from the paper's 53 s to match
+            acc_req_mean=50.0,     # the scaled zoo latencies (same ratios)
+            queue_cap=4,
+            frame_ms=3000.0,
+        )
+        for pol, mk in POLICIES.items():
+            rs = [
+                simulate(spec, cfg, mk(spec), seed=s, n_requests=n).as_dict()
+                for s in seeds
+            ]
+            r = {k: float(np.mean([x[k] for x in rs])) for k in rs[0]}
+            results[(n, pol)] = r
+            print(
+                csv_row(
+                    "fig1e-h", n, pol,
+                    f"{r['satisfied_pct']:.2f}", f"{r['local_pct']:.2f}",
+                    f"{r['cloud_pct']:.2f}", f"{r['edge_offload_pct']:.2f}",
+                    f"{r['dropped_pct']:.2f}",
+                ),
+                flush=True,
+            )
+    # paper claims: GUS satisfied-% >= heuristics, ~50% better under load
+    ratios = []
+    for n in n_points:
+        g = results[(n, "gus")]["satisfied_pct"]
+        for pol in ("random", "local_all", "offload_all"):
+            b = results[(n, pol)]["satisfied_pct"]
+            if b > 1e-6:
+                ratios.append(g / b)
+            assert g >= b - 1.0, (n, pol, g, b)
+    n_hi = max(n_points)
+    hi_ratios = [
+        results[(n_hi, "gus")]["satisfied_pct"] / max(results[(n_hi, p)]["satisfied_pct"], 1e-6)
+        for p in ("random", "local_all", "offload_all")
+    ]
+    print(f"claim,testbed_gus_vs_heuristics_mean_ratio,{np.mean(ratios):.3f}")
+    print(f"claim,testbed_gus_vs_heuristics_at_peak_load,{np.mean(hi_ratios):.3f}")
+    assert np.mean(hi_ratios) >= 1.5, f"GUS should beat heuristics by >=50% under load: {hi_ratios}"
+    return results
+
+
+if __name__ == "__main__":
+    main()

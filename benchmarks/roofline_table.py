@@ -1,0 +1,46 @@
+"""Deliverable (g): the roofline table, assembled from dry-run reports.
+
+Reads reports/dryrun/*.json (produced by `python -m repro.launch.dryrun`) and
+prints the per-(arch x shape x mesh) three-term roofline with the dominant
+bottleneck and the useful-compute ratio.  Prints CSV."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import csv_row
+
+REPORT_DIR = os.environ.get("DRYRUN_DIR", "reports/dryrun")
+
+
+def load_reports(report_dir=REPORT_DIR):
+    out = []
+    for path in sorted(glob.glob(os.path.join(report_dir, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def main():
+    reports = load_reports()
+    if not reports:
+        print(f"no dry-run reports under {REPORT_DIR}; run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all --continue-on-error")
+        return []
+    print("arch,shape,mesh,compute_ms,memory_ms,collective_ms,bottleneck,useful_ratio,flops_per_dev,coll_bytes_per_dev")
+    for r in reports:
+        print(
+            csv_row(
+                r["arch"], r["shape"], r["mesh"],
+                f"{r['compute_s']*1e3:.3f}", f"{r['memory_s']*1e3:.3f}",
+                f"{r['collective_s']*1e3:.3f}", r["bottleneck"],
+                f"{r['useful_ratio']:.3f}", f"{r['flops_per_device']:.3e}",
+                f"{r['coll_bytes_per_device']:.3e}",
+            )
+        )
+    return reports
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark entry point: one function per paper table/figure + systems
+benches.  ``PYTHONPATH=src python -m benchmarks.run [--fast]``.
+
+  fig1a-d   — numerical sweeps (Fig. 1(a)-(d))
+  fig1e-h   — virtual-testbed sweeps (Fig. 1(e)-(h))
+  optimal   — GUS vs exact ILP (the ~90%-of-CPLEX table)
+  sched     — GUS scheduling throughput (jit/vmap systems number)
+  roofline  — per-(arch x shape x mesh) roofline table from dry-run reports
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="fewer MC runs")
+    ap.add_argument(
+        "--only",
+        choices=["fig1num", "fig1test", "optimal", "sched", "serving", "extensions", "roofline"],
+        default=None,
+    )
+    args = ap.parse_args(argv)
+    mc = 64 if args.fast else None
+
+    from . import (
+        fig1_numerical,
+        fig1_testbed,
+        optimal_gap,
+        roofline_table,
+        scheduler_throughput,
+        serving_bench,
+        extensions_bench,
+    )
+
+    jobs = {
+        "fig1num": lambda: fig1_numerical.main(**({"mc": mc} if mc else {})),
+        "fig1test": lambda: fig1_testbed.main(
+            n_points=(200, 1600) if args.fast else (200, 800, 1600),
+            seeds=(0,) if args.fast else (0, 1, 2),
+        ),
+        "optimal": lambda: optimal_gap.main(10 if args.fast else 25),
+        "sched": scheduler_throughput.main,
+        "serving": lambda: serving_bench.main(6 if args.fast else 12),
+        "extensions": lambda: extensions_bench.main(fast=args.fast),
+        "roofline": roofline_table.main,
+    }
+    selected = [args.only] if args.only else list(jobs)
+    for name in selected:
+        t0 = time.time()
+        print(f"\n=== {name} " + "=" * 50, flush=True)
+        jobs[name]()
+        print(f"=== {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

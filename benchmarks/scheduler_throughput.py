@@ -1,0 +1,47 @@
+"""Systems benchmark: GUS scheduling throughput.
+
+The paper argues GUS is a 'polynomial constant-time' online decision
+algorithm; here we measure the jit+vmap implementation's decisions/second —
+the number that determines how many edge frames per second one controller
+can schedule.  Prints CSV: impl,batch,instances_per_s,us_per_call."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import GeneratorConfig, generate_batch, generate_instance, gus_schedule, gus_schedule_batch, gus_schedule_np
+
+from .common import csv_row
+
+CFG = GeneratorConfig()  # paper scale: N=100, M=10, L=10
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def main():
+    print("impl,batch,instances_per_s,us_per_call")
+    inst = generate_instance(0, CFG)
+
+    t_np = _time(lambda i: gus_schedule_np(i), inst, reps=1)
+    print(csv_row("numpy", 1, f"{1/t_np:.1f}", f"{t_np*1e6:.0f}"))
+
+    t_jax = _time(gus_schedule, inst)
+    print(csv_row("jax-jit", 1, f"{1/t_jax:.1f}", f"{t_jax*1e6:.0f}"))
+
+    for bs in (16, 64):
+        batch = generate_batch(0, bs, CFG)
+        t = _time(gus_schedule_batch, batch)
+        print(csv_row("jax-vmap", bs, f"{bs/t:.1f}", f"{t/bs*1e6:.0f}"))
+    return True
+
+
+if __name__ == "__main__":
+    main()

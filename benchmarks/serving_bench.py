@@ -1,0 +1,53 @@
+"""Systems benchmark: continuous batching vs sequential serving.
+
+Measures wall-clock and slot utilization for a bursty queue of requests on
+the paper-analog edge model — the serving-layer number that motivates the
+paper's per-frame admission protocol.  Prints CSV."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_zoo import SQUEEZE_LM
+from repro.models import Model
+from repro.serving import ContinuousBatcher, Request, ServingEngine
+
+from .common import csv_row
+
+
+def main(n_requests: int = 12, gen: int = 8, prompt: int = 16):
+    model = Model(SQUEEZE_LM)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, SQUEEZE_LM.vocab_size, size=prompt).astype(np.int32)
+               for _ in range(n_requests)]
+
+    print("mode,slots,requests,total_s,req_per_s")
+    # sequential (one request at a time)
+    eng = ServingEngine(model, params)
+    eng.generate({"tokens": jnp.asarray(prompts[0])[None]}, gen, max_len=64)  # warm
+    t0 = time.perf_counter()
+    for p in prompts:
+        eng.generate({"tokens": jnp.asarray(p)[None]}, gen, max_len=64)
+    seq_s = time.perf_counter() - t0
+    print(csv_row("sequential", 1, n_requests, f"{seq_s:.2f}", f"{n_requests/seq_s:.2f}"))
+
+    results = {}
+    for slots in (2, 4):
+        cb = ContinuousBatcher(model, params, n_slots=slots, max_len=64)
+        cb.run([Request(900, prompts[0], 2)])  # warm compile
+        cb.reset()
+        t0 = time.perf_counter()
+        out = cb.run([Request(i, p, gen) for i, p in enumerate(prompts)])
+        dt = time.perf_counter() - t0
+        assert len(out) == n_requests
+        results[slots] = dt
+        print(csv_row("continuous", slots, n_requests, f"{dt:.2f}", f"{n_requests/dt:.2f}"))
+    return results
+
+
+if __name__ == "__main__":
+    main()

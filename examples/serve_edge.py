@@ -1,0 +1,148 @@
+"""End-to-end driver (deliverable (b)): the paper's testbed, for real.
+
+Trains the paper-analog zoo (SqueezeNet/GoogleNet-style tiny LMs) on CPU,
+MEASURES each variant's latency and next-token accuracy with the serving
+engine, feeds those measurements into the GUS scheduler — including the
+paper's EMA bandwidth-estimate update rule — and serves a stream of batched
+requests, reporting satisfied-%.
+
+This is the full loop the paper implements in C++ on Raspberry Pis, here as
+one JAX program:   train -> profile -> schedule -> serve -> measure.
+
+Run:  PYTHONPATH=src python examples/serve_edge.py [--steps 120]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.paper_zoo import GOOGLE_LM, MID_LM, SQUEEZE_LM
+from repro.training.data import SyntheticLM
+from repro.core import ClusterSpec, SimConfig, gus_schedule_np, local_all, offload_all, simulate
+from repro.models import Model
+from repro.serving import ServingEngine
+from repro.training import AdamWConfig, batch_iterator, init_state, make_batch, make_train_step
+
+
+# one shared learnable task (peaky Markov chain).  NOTE: at CPU scale (a few
+# hundred steps) all three sizes converge to similar accuracy — the paper's
+# accuracy axis comes from mature pre-trained models (SqueezeNet vs GoogleNet);
+# here the measured LATENCY ladder (size-proportional) drives the trade-off,
+# and examples/schedule_cluster.py demonstrates the accuracy axis with the
+# scaling-law proxy.  Accuracies below are measured, not asserted.
+VOCAB = 128
+SOURCE = SyntheticLM(VOCAB, seed=7, alpha=0.003)
+
+# size ladder shrunk so the example runs in ~3 min on CPU
+SIZES = {
+    "squeeze-lm": dict(num_layers=2, d_model=96, num_heads=4, num_kv_heads=2, d_ff=256),
+    "mid-lm": dict(num_layers=3, d_model=160, num_heads=4, num_kv_heads=2, d_ff=512),
+    "google-lm": dict(num_layers=4, d_model=256, num_heads=4, num_kv_heads=2, d_ff=768),
+}
+
+
+def train_variant(cfg, steps, seed=0):
+    cfg = dataclasses.replace(cfg, vocab_size=VOCAB, **SIZES[cfg.arch_id])
+    model = Model(cfg)
+    opt = AdamWConfig(lr=1e-2, total_steps=steps, warmup_steps=max(steps // 10, 1))
+    step = jax.jit(make_train_step(model, opt), donate_argnums=(0,))
+    state = init_state(model, jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    first = last = None
+    for i in range(steps):
+        state, m = step(state, make_batch(cfg, 8, 64, rng, SOURCE))
+        if i == 0:
+            first = float(m["loss"])
+        last = float(m["loss"])
+    return model, state.params, first, last
+
+
+def main(steps=200):
+    # --- train the zoo (SqueezeNet/GoogleNet analogs) -------------------------
+    variants = [SQUEEZE_LM, MID_LM, GOOGLE_LM]
+    engines, acc, proc_edge, proc_cloud = [], [], [], []
+    rng = np.random.default_rng(0)
+    for cfg in variants:
+        t0 = time.time()
+        model, params, l0, l1 = train_variant(cfg, steps)
+        eng = ServingEngine(model, params)
+        eval_batch = make_batch(model.cfg, 8, 64, rng, SOURCE)
+        a = eng.eval_next_token_accuracy(eval_batch) * 100
+        r = eng.generate(make_batch(model.cfg, 1, 32, rng, SOURCE), max_new_tokens=8)
+        engines.append(eng)
+        acc.append(a)
+        # measured latency; the 'cloud' runs the same hardware here, so model
+        # the paper's RPi4-vs-desktop gap with its measured 1300:300 ratio
+        proc_edge.append(r.total_ms)
+        proc_cloud.append(r.total_ms * 300.0 / 1300.0)
+        print(
+            f"{cfg.arch_id:11s} trained {steps} steps ({time.time()-t0:.0f}s): "
+            f"loss {l0:.2f}->{l1:.2f}, next-token acc {a:.1f}%, "
+            f"measured latency {r.total_ms:.0f}ms",
+            flush=True,
+        )
+    assert max(acc) > 30.0, "zoo should learn the task well beyond chance"
+    if acc[-1] <= acc[0]:
+        print(f"note: accuracy ladder within training noise at CPU scale "
+              f"({acc[0]:.1f}% vs {acc[-1]:.1f}%) — see header comment")
+
+    # --- build the cluster from MEASURED profiles ------------------------------
+    K, L, M = 3, len(variants), 3  # 2 edges + 1 cloud, 3 services sharing the zoo
+    proc = np.zeros((M, K, L), np.float32)
+    placed = np.zeros((M, K, L), bool)
+    for j in range(2):  # edges hold the two cheap variants
+        proc[j, :, :] = np.array(proc_edge)[None, :]
+        placed[j, :, :2] = True
+    proc[2, :, :] = np.array(proc_cloud)[None, :]
+    placed[2, :, :] = True
+    acc_kl = np.broadcast_to(np.array(acc, np.float32)[None, :], (K, L)).copy()
+
+    spec = ClusterSpec(
+        n_edge=2,
+        n_cloud=1,
+        gamma_frame=np.array([3 * max(proc_edge), 3 * max(proc_edge), 10 * max(proc_cloud)], np.float32),
+        eta_frame=np.array([350.0, 350.0, 3500.0], np.float32),
+        proc_ms=proc,
+        placed=placed,
+        acc=acc_kl,
+    )
+
+    # --- serve a request stream through GUS (EMA bandwidth inside) ------------
+    simcfg = SimConfig(
+        horizon_ms=90_000.0,
+        arrival_rate_per_s=4.0,
+        delay_req_ms=4.0 * max(proc_edge),
+        acc_req_mean=max(min(acc) - 1.0, 1.0),  # all variants accuracy-feasible;
+        # the latency/capacity axes drive scheduling (see header comment)
+        frame_ms=3000.0,
+        queue_cap=4,
+    )
+    print("\npolicy        satisfied%  local%  cloud%  edge-off%  dropped%  [bw estimates]")
+    import jax.numpy as jnp
+
+    for name, sched in [
+        ("GUS", gus_schedule_np),
+        ("local-all", lambda i: local_all(i)),
+        ("offload-all", lambda i: offload_all(i, jnp.arange(3) >= 2)),
+    ]:
+        r = simulate(spec, simcfg, sched, seed=1)
+        d = r.as_dict()
+        bw = ", ".join(f"{b:.0f}" for b in r.bandwidth_estimates[:4])
+        print(
+            f"{name:13s} {d['satisfied_pct']:9.1f} {d['local_pct']:7.1f} "
+            f"{d['cloud_pct']:7.1f} {d['edge_offload_pct']:9.1f} "
+            f"{d['dropped_pct']:8.1f}  [{bw}, ...]"
+        )
+        if name == "GUS":
+            gus_sat = d["satisfied_pct"]
+    assert gus_sat >= 50.0, "GUS should satisfy most users in this regime"
+    print("\nend-to-end: trained zoo -> measured profiles -> GUS serving OK")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+    main(args.steps)

@@ -1,0 +1,47 @@
+"""Core of the reproduction: the paper's MUS problem, GUS greedy scheduler,
+exact ILP oracle, baseline heuristics and the virtual-testbed simulator."""
+from .instance import FlatInstance, GeneratorConfig, generate_instance, generate_batch, stack_instances
+from .satisfaction import us_tensor, hard_feasible, mean_us, satisfied_mask
+from .gus import Assignment, gus_schedule, gus_schedule_np, gus_schedule_batch
+from .ilp import solve_bnb, solve_exhaustive
+from .baselines import (
+    random_assignment,
+    offload_all,
+    local_all,
+    happy_computation,
+    happy_communication,
+    BASELINES,
+)
+from .simulator import ClusterSpec, SimConfig, SimResult, simulate
+from .extensions import gus_schedule_ordered, best_us_per_request, apply_mobility
+
+__all__ = [
+    "FlatInstance",
+    "GeneratorConfig",
+    "generate_instance",
+    "generate_batch",
+    "stack_instances",
+    "us_tensor",
+    "hard_feasible",
+    "mean_us",
+    "satisfied_mask",
+    "Assignment",
+    "gus_schedule",
+    "gus_schedule_np",
+    "gus_schedule_batch",
+    "solve_bnb",
+    "solve_exhaustive",
+    "random_assignment",
+    "offload_all",
+    "local_all",
+    "happy_computation",
+    "happy_communication",
+    "BASELINES",
+    "ClusterSpec",
+    "SimConfig",
+    "SimResult",
+    "simulate",
+    "gus_schedule_ordered",
+    "best_us_per_request",
+    "apply_mobility",
+]

@@ -1,0 +1,118 @@
+"""The paper's five baseline heuristics (Sec. IV, "Baseline algorithms").
+
+All share GUS's feasibility rules (2b/2c + capacities) but differ in *which*
+servers they consider:
+
+1. Random-Assignment  — one uniformly-random server per request.
+2. Offload-All        — cloud servers only.
+3. Local-All          — the covering edge server only.
+4. Happy-Computation  — GUS with the computation constraint (2d) relaxed.
+5. Happy-Communication— GUS with the communication constraint (2e) relaxed.
+
+All are jit/vmap-compatible like ``gus_schedule``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .gus import NEG, Assignment, gus_schedule
+from .instance import FlatInstance
+from .satisfaction import hard_feasible, us_tensor
+
+__all__ = [
+    "random_assignment",
+    "offload_all",
+    "local_all",
+    "happy_computation",
+    "happy_communication",
+    "BASELINES",
+]
+
+
+def _restricted_greedy(inst: FlatInstance, server_mask_per_req: jnp.ndarray) -> Assignment:
+    """Greedy sequential assignment restricted to ``server_mask_per_req``
+    ((N, M) bool).  Within the allowed servers, picks the best-US feasible
+    variant; capacities update sequentially as in GUS."""
+    us = us_tensor(inst)
+    feas = hard_feasible(inst) & server_mask_per_req[:, :, None]
+    N, M, L = us.shape
+
+    def body(i, state):
+        gamma, eta, out_j, out_l = state
+        s_i = inst.cover[i]
+        is_local = jnp.arange(M) == s_i
+        ok = (
+            feas[i]
+            & (inst.v[i] <= gamma[:, None])
+            & (is_local[:, None] | (inst.u[i] <= eta[s_i]))
+        )
+        score = jnp.where(ok, us[i], NEG)
+        flat = jnp.argmax(score.reshape(-1))
+        any_ok = score.reshape(-1)[flat] > NEG
+        j = (flat // L).astype(jnp.int32)
+        l = (flat % L).astype(jnp.int32)
+        offload = any_ok & (j != s_i)
+        gamma = gamma.at[j].add(jnp.where(any_ok, -inst.v[i, j, l], 0.0))
+        eta = eta.at[s_i].add(jnp.where(offload, -inst.u[i, j, l], 0.0))
+        out_j = out_j.at[i].set(jnp.where(any_ok, j, -1))
+        out_l = out_l.at[i].set(jnp.where(any_ok, l, -1))
+        return gamma, eta, out_j, out_l
+
+    init = (
+        inst.gamma,
+        inst.eta,
+        jnp.full((N,), -1, jnp.int32),
+        jnp.full((N,), -1, jnp.int32),
+    )
+    _, _, out_j, out_l = jax.lax.fori_loop(0, N, body, init)
+    return Assignment(out_j, out_l)
+
+
+@partial(jax.jit, static_argnames=())
+def random_assignment(inst: FlatInstance, key: jax.Array) -> Assignment:
+    """Paper baseline 1: a single random server is drawn per request; serve
+    there if feasible, else drop."""
+    N, M, _ = inst.acc.shape
+    picks = jax.random.randint(key, (N,), 0, M)
+    mask = jax.nn.one_hot(picks, M, dtype=bool)
+    return _restricted_greedy(inst, mask)
+
+
+@jax.jit
+def offload_all(inst: FlatInstance, cloud_mask: jnp.ndarray) -> Assignment:
+    """Paper baseline 2: every request goes to the cloud tier.
+
+    ``cloud_mask``: (M,) bool marking cloud servers."""
+    N = inst.A.shape[0]
+    mask = jnp.broadcast_to(cloud_mask[None, :], (N, cloud_mask.shape[0]))
+    return _restricted_greedy(inst, mask)
+
+
+@jax.jit
+def local_all(inst: FlatInstance) -> Assignment:
+    """Paper baseline 3: only the covering edge server is considered."""
+    N, M, _ = inst.acc.shape
+    mask = inst.cover[:, None] == jnp.arange(M)[None, :]
+    return _restricted_greedy(inst, mask)
+
+
+def happy_computation(inst: FlatInstance) -> Assignment:
+    """Paper baseline 4: computation constraint (2d) relaxed."""
+    return gus_schedule(inst, relax_compute=True)
+
+
+def happy_communication(inst: FlatInstance) -> Assignment:
+    """Paper baseline 5: communication constraint (2e) relaxed."""
+    return gus_schedule(inst, relax_comm=True)
+
+
+BASELINES = {
+    "random": random_assignment,
+    "offload_all": offload_all,
+    "local_all": local_all,
+    "happy_computation": happy_computation,
+    "happy_communication": happy_communication,
+}

@@ -1,0 +1,98 @@
+"""Beyond-paper extensions to the scheduling core.
+
+1. ``gus_schedule_ordered`` — the paper's GUS processes requests in arrival
+   order; a myopic early pick can burn capacity a later request needed more.
+   Processing requests by *descending best-achievable US* (a 2-approximation
+   flavored greedy) closes part of the gap to the optimum at the same
+   O(|N| (|L||M|)^2) complexity (+ one sort).
+
+2. ``priority`` support — the paper's conclusion lists request priorities as
+   future work.  We scale each request's US contribution by a priority weight
+   p_i (the ILP objective becomes sum p_i US_i X_i); both GUS variants accept
+   it and the ordered variant sorts by p_i * best-US.
+
+3. ``apply_mobility`` — the conclusion's other future-work item.  Between
+   frames users move: each request's covering edge server re-draws with
+   probability ``move_prob`` (a memoryless mobility model).  The simulator
+   applies it per frame; scheduling is unchanged (GUS is stateless per frame),
+   which is exactly why the paper's per-frame formulation tolerates mobility.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .gus import NEG, Assignment
+from .instance import FlatInstance
+from .satisfaction import hard_feasible, us_tensor
+
+__all__ = ["gus_schedule_ordered", "best_us_per_request", "apply_mobility"]
+
+
+def best_us_per_request(inst: FlatInstance) -> jnp.ndarray:
+    """(N,) best achievable US per request ignoring capacity (upper bound)."""
+    us = us_tensor(inst)
+    feas = hard_feasible(inst)
+    return jnp.where(feas, us, NEG).max(axis=(-2, -1))
+
+
+@partial(jax.jit, static_argnames=())
+def gus_schedule_ordered(
+    inst: FlatInstance, priority: Optional[jnp.ndarray] = None
+) -> Assignment:
+    """GUS with requests processed in descending (priority ·) best-US order.
+
+    Same greedy inner rule as Algorithm 1; only the processing order differs.
+    Returns assignments indexed by the ORIGINAL request order."""
+    us = us_tensor(inst)
+    feas = hard_feasible(inst)
+    N, M, L = us.shape
+    if priority is not None:
+        us = us * priority[:, None, None]
+
+    best = jnp.where(feas, us, NEG).max(axis=(-2, -1))
+    order = jnp.argsort(-best)                     # process most-demanding first
+
+    def body(pos, state):
+        gamma, eta, out_j, out_l = state
+        i = order[pos]
+        s_i = inst.cover[i]
+        is_local = jnp.arange(M) == s_i
+        ok = (
+            feas[i]
+            & (inst.v[i] <= gamma[:, None])
+            & (is_local[:, None] | (inst.u[i] <= eta[s_i]))
+        )
+        score = jnp.where(ok, us[i], NEG)
+        flat = jnp.argmax(score.reshape(-1))
+        any_ok = score.reshape(-1)[flat] > NEG
+        j = (flat // L).astype(jnp.int32)
+        l = (flat % L).astype(jnp.int32)
+        offload = any_ok & (j != s_i)
+        gamma = gamma.at[j].add(jnp.where(any_ok, -inst.v[i, j, l], 0.0))
+        eta = eta.at[s_i].add(jnp.where(offload, -inst.u[i, j, l], 0.0))
+        out_j = out_j.at[i].set(jnp.where(any_ok, j, -1))
+        out_l = out_l.at[i].set(jnp.where(any_ok, l, -1))
+        return gamma, eta, out_j, out_l
+
+    init = (
+        inst.gamma,
+        inst.eta,
+        jnp.full((N,), -1, jnp.int32),
+        jnp.full((N,), -1, jnp.int32),
+    )
+    _, _, out_j, out_l = jax.lax.fori_loop(0, N, body, init)
+    return Assignment(out_j, out_l)
+
+
+def apply_mobility(cover: np.ndarray, n_edge: int, move_prob: float, rng) -> np.ndarray:
+    """Memoryless user mobility: each user re-attaches to a random edge with
+    probability ``move_prob`` (numpy; used by the simulator between frames)."""
+    move = rng.random(cover.shape[0]) < move_prob
+    new = rng.integers(0, n_edge, size=cover.shape[0]).astype(cover.dtype)
+    return np.where(move, new, cover)

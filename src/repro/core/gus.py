@@ -1,0 +1,159 @@
+"""GUS — the paper's greedy scheduler (Algorithm 1) as a composable JAX module.
+
+Two implementations:
+
+* ``gus_schedule_np``  — direct NumPy transcription of Algorithm 1 (the oracle).
+* ``gus_schedule``     — pure-JAX: ``lax.fori_loop`` over requests (the greedy
+  is sequential in its capacity state) with fully vectorized masked-argmax over
+  the (M, L) candidate grid per step.  ``jit``-able and ``vmap``-able over a
+  leading instance-batch axis — the paper's 20 000 Monte-Carlo repetitions
+  become one device program.
+
+Both return ``Assignment(j, l)`` with j = l = -1 encoding *drop*.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .instance import FlatInstance
+from .satisfaction import hard_feasible, us_tensor
+
+__all__ = ["Assignment", "gus_schedule", "gus_schedule_np", "gus_schedule_batch"]
+
+NEG = -1e30
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Assignment:
+    """Scheduling decision per request: server j and variant l (-1 = dropped)."""
+
+    j: jnp.ndarray  # (..., N) int32
+    l: jnp.ndarray  # (..., N) int32
+
+    def served(self):
+        return self.j >= 0
+
+    def offloaded(self, inst: FlatInstance):
+        return self.served() & (self.j != inst.cover)
+
+
+# ---------------------------------------------------------------------------
+# NumPy reference (Algorithm 1, line-by-line)
+# ---------------------------------------------------------------------------
+
+def gus_schedule_np(inst: FlatInstance) -> Assignment:
+    cover = np.asarray(inst.cover)
+    A = np.asarray(inst.A)
+    C = np.asarray(inst.C)
+    acc = np.asarray(inst.acc)
+    ctime = np.asarray(inst.ctime)
+    v = np.asarray(inst.v)
+    u = np.asarray(inst.u)
+    avail = np.asarray(inst.avail)
+    gamma = np.asarray(inst.gamma).copy()
+    eta = np.asarray(inst.eta).copy()
+    N, M, L = acc.shape
+
+    us = np.asarray(us_tensor(inst))
+    out_j = np.full(N, -1, np.int32)
+    out_l = np.full(N, -1, np.int32)
+
+    for i in range(N):  # foreach request (line 1)
+        s_i = cover[i]  # line 2
+        # line 3: servers sorted by US descending
+        order = np.argsort(-us[i], axis=None)
+        for flat in order:
+            j, l = divmod(int(flat), L)
+            # line 4: deadline, accuracy floor, compute capacity, placement
+            if not avail[i, j, l]:
+                continue
+            if ctime[i, j, l] > C[i] or acc[i, j, l] < A[i]:
+                continue
+            if v[i, j, l] > gamma[j]:
+                continue
+            if j == s_i:  # lines 5-9: local processing
+                out_j[i], out_l[i] = j, l
+                gamma[j] -= v[i, j, l]
+                break
+            elif u[i, j, l] <= eta[s_i]:  # lines 10-14: offload
+                out_j[i], out_l[i] = j, l
+                gamma[j] -= v[i, j, l]
+                eta[s_i] -= u[i, j, l]
+                break
+        # else: dropped (stays -1)
+    return Assignment(jnp.asarray(out_j), jnp.asarray(out_l))
+
+
+# ---------------------------------------------------------------------------
+# Pure-JAX implementation
+# ---------------------------------------------------------------------------
+
+def _gus_body(i, state, *, inst, us, feas):
+    gamma, eta, out_j, out_l = state
+    M, L = us.shape[1], us.shape[2]
+    s_i = inst.cover[i]
+
+    row_us = us[i]          # (M, L)
+    row_v = inst.v[i]
+    row_u = inst.u[i]
+    is_local = jnp.arange(M) == s_i  # (M,)
+
+    ok = (
+        feas[i]
+        & (row_v <= gamma[:, None])
+        & (is_local[:, None] | (row_u <= eta[s_i]))
+    )
+    score = jnp.where(ok, row_us, NEG)
+    flat = jnp.argmax(score.reshape(-1))
+    any_ok = score.reshape(-1)[flat] > NEG
+    j = (flat // L).astype(jnp.int32)
+    l = (flat % L).astype(jnp.int32)
+
+    served = any_ok
+    offload = served & (j != s_i)
+    gamma = gamma.at[j].add(jnp.where(served, -row_v[j, l], 0.0))
+    eta = eta.at[s_i].add(jnp.where(offload, -row_u[j, l], 0.0))
+    out_j = out_j.at[i].set(jnp.where(served, j, -1))
+    out_l = out_l.at[i].set(jnp.where(served, l, -1))
+    return gamma, eta, out_j, out_l
+
+
+@partial(jax.jit, static_argnames=("relax_compute", "relax_comm"))
+def gus_schedule(
+    inst: FlatInstance,
+    *,
+    relax_compute: bool = False,
+    relax_comm: bool = False,
+) -> Assignment:
+    """Run GUS on one instance.  ``relax_*`` implement the paper's
+    Happy-Computation / Happy-Communication baselines (constraints 2d/2e
+    dropped)."""
+    us = us_tensor(inst)
+    feas = hard_feasible(inst)
+    N = us.shape[0]
+    gamma0 = jnp.full_like(inst.gamma, jnp.inf) if relax_compute else inst.gamma
+    eta0 = jnp.full_like(inst.eta, jnp.inf) if relax_comm else inst.eta
+    out_j = jnp.full((N,), -1, jnp.int32)
+    out_l = jnp.full((N,), -1, jnp.int32)
+    body = partial(_gus_body, inst=inst, us=us, feas=feas)
+    gamma, eta, out_j, out_l = jax.lax.fori_loop(
+        0, N, body, (gamma0, eta0, out_j, out_l)
+    )
+    return Assignment(out_j, out_l)
+
+
+@partial(jax.jit, static_argnames=("relax_compute", "relax_comm"))
+def gus_schedule_batch(
+    batch: FlatInstance, *, relax_compute: bool = False, relax_comm: bool = False
+) -> Assignment:
+    """vmapped GUS over a leading instance-batch axis (Monte-Carlo runs)."""
+    fn = partial(
+        gus_schedule, relax_compute=relax_compute, relax_comm=relax_comm
+    )
+    return jax.vmap(fn)(batch)

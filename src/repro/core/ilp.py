@@ -1,0 +1,131 @@
+"""Exact MUS solver — depth-first branch & bound (CPLEX stand-in).
+
+The MUS ILP (Eq. 2) is NP-hard (Theorem 1), so exact solving is reserved for
+small instances; we use it as the oracle behind the paper's "GUS achieves on
+average 90% of the optimal" claim (Sec. IV).
+
+Bounding: at each node the remaining requests contribute at most their best
+feasible US *ignoring capacity* (an admissible relaxation of 2d/2e), so
+``current + optimistic_suffix <= best`` prunes.  Requests are pre-sorted by
+their optimistic US descending, which tightens the bound early.
+
+``solve_exhaustive`` enumerates every assignment vector — used in tests to
+verify the B&B on tiny instances.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Tuple
+
+import numpy as np
+
+from .gus import Assignment
+from .instance import FlatInstance
+from .satisfaction import hard_feasible, us_tensor
+
+__all__ = ["solve_bnb", "solve_exhaustive"]
+
+
+def _prepare(inst: FlatInstance):
+    us = np.asarray(us_tensor(inst))
+    feas = np.asarray(hard_feasible(inst))
+    v = np.asarray(inst.v)
+    u = np.asarray(inst.u)
+    cover = np.asarray(inst.cover)
+    gamma = np.asarray(inst.gamma, dtype=np.float64)
+    eta = np.asarray(inst.eta, dtype=np.float64)
+    N, M, L = us.shape
+    # Per-request candidate list: (us, j, l, v, u_charged) feasibility-filtered,
+    # sorted by us descending.
+    cands = []
+    for i in range(N):
+        lst = []
+        for j in range(M):
+            for l in range(L):
+                if feas[i, j, l]:
+                    uu = 0.0 if j == cover[i] else float(u[i, j, l])
+                    lst.append((float(us[i, j, l]), j, l, float(v[i, j, l]), uu))
+        lst.sort(key=lambda t: -t[0])
+        cands.append(lst)
+    return us, cands, cover, gamma, eta, N
+
+
+def solve_bnb(inst: FlatInstance, *, node_limit: int = 5_000_000) -> Tuple[Assignment, float]:
+    """Exact optimum of (2).  Returns (assignment, objective = mean US)."""
+    us, cands, cover, gamma0, eta0, N = _prepare(inst)
+
+    # Sort requests so the ones with the largest optimistic US go first.
+    opt_us = np.array([c[0][0] if c else 0.0 for c in cands])
+    order = np.argsort(-opt_us)
+    # optimistic suffix sums over the *sorted* order
+    suffix = np.zeros(N + 1)
+    for pos in range(N - 1, -1, -1):
+        suffix[pos] = suffix[pos + 1] + max(opt_us[order[pos]], 0.0)
+
+    best_val = -np.inf
+    best_assign = [(-1, -1)] * N
+    cur_assign = [(-1, -1)] * N
+    nodes = 0
+
+    gamma = gamma0.copy()
+    eta = eta0.copy()
+
+    def dfs(pos, cur_val):
+        nonlocal best_val, best_assign, nodes
+        nodes += 1
+        if nodes > node_limit:
+            return
+        if cur_val + suffix[pos] <= best_val + 1e-12:
+            return
+        if pos == N:
+            if cur_val > best_val:
+                best_val = cur_val
+                best_assign = list(cur_assign)
+            return
+        i = int(order[pos])
+        s_i = int(cover[i])
+        for usv, j, l, vv, uu in cands[i]:
+            if vv > gamma[j] + 1e-9:
+                continue
+            if uu > eta[s_i] + 1e-9:
+                continue
+            gamma[j] -= vv
+            eta[s_i] -= uu
+            cur_assign[i] = (j, l)
+            dfs(pos + 1, cur_val + usv)
+            gamma[j] += vv
+            eta[s_i] += uu
+            cur_assign[i] = (-1, -1)
+        # drop branch
+        dfs(pos + 1, cur_val)
+
+    dfs(0, 0.0)
+    jv = np.array([a[0] for a in best_assign], np.int32)
+    lv = np.array([a[1] for a in best_assign], np.int32)
+    return Assignment(jv, lv), float(best_val) / N
+
+
+def solve_exhaustive(inst: FlatInstance) -> Tuple[Assignment, float]:
+    """Brute force over all (M*L + 1)^N assignments.  Tiny instances only."""
+    us, cands, cover, gamma0, eta0, N = _prepare(inst)
+    options = [c + [None] for c in cands]  # None = drop
+    best_val, best = -np.inf, None
+    for choice in itertools.product(*options):
+        gamma = gamma0.copy()
+        eta = eta0.copy()
+        val, ok = 0.0, True
+        for i, ch in enumerate(choice):
+            if ch is None:
+                continue
+            usv, j, l, vv, uu = ch
+            gamma[j] -= vv
+            eta[int(cover[i])] -= uu
+            if gamma[j] < -1e-9 or eta[int(cover[i])] < -1e-9:
+                ok = False
+                break
+            val += usv
+        if ok and val > best_val:
+            best_val, best = val, choice
+    jv = np.array([(-1 if c is None else c[1]) for c in best], np.int32)
+    lv = np.array([(-1 if c is None else c[2]) for c in best], np.int32)
+    return Assignment(jv, lv), float(best_val) / N

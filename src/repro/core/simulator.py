@@ -1,0 +1,343 @@
+"""Time-slotted edge-cluster simulator — the paper's testbed, virtualized.
+
+Reproduces the Sec. IV testbed protocol:
+
+* users submit requests to their covering edge server's *admission queue*;
+* a decision algorithm runs at the end of every time frame (or earlier if the
+  queue is full — paper: queue length 4, frame 3000 ms);
+* the queuing delay T^q of a request is the measured wait until its frame's
+  decision, exactly as in the completion-time model;
+* actual communication delays are stochastic (lognormal jitter around
+  size/bandwidth — the "wireless channel");
+* the scheduler sees only an *estimate* of bandwidth, updated by the paper's
+  rule  E[B_{t+1}] = (B_t + B_{t-1}) / 2  from observed transfers;
+* per-frame compute/communication capacities (gamma, eta) refresh each frame.
+
+A request is *satisfied* iff its realized completion time <= C_i and the
+served variant's accuracy >= A_i (Definition II.1's hard form).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from .gus import Assignment, gus_schedule_np
+from .instance import FlatInstance
+
+__all__ = ["ClusterSpec", "SimConfig", "SimResult", "simulate"]
+
+
+@dataclasses.dataclass
+class ClusterSpec:
+    """Static cluster description (servers, services, placement, profiles)."""
+
+    n_edge: int
+    n_cloud: int
+    # per-server
+    gamma_frame: np.ndarray       # (M,) compute capacity per frame (chip-ms)
+    eta_frame: np.ndarray         # (M,) comm capacity per frame (KB)
+    # per (server, service, variant)
+    proc_ms: np.ndarray           # (M, K, L) mean processing delay
+    placed: np.ndarray            # (M, K, L) bool
+    acc: np.ndarray               # (K, L) accuracy (%)
+    bandwidth_true: float = 600.0  # bytes/ms, hidden truth the channel jitters around
+    cloud_extra_delay: float = 100.0
+
+    @property
+    def n_servers(self) -> int:
+        return self.n_edge + self.n_cloud
+
+    def is_cloud(self) -> np.ndarray:
+        return np.arange(self.n_servers) >= self.n_edge
+
+
+@dataclasses.dataclass
+class SimConfig:
+    horizon_ms: float = 120_000.0
+    frame_ms: float = 3000.0
+    queue_cap: int = 4                # paper: fixed queue length of 4
+    arrival_rate_per_s: float = 2.0   # Poisson arrivals per edge server
+    # request QoS draws
+    acc_req_mean: float = 50.0
+    acc_req_std: float = 0.0          # paper testbed: fixed A_i = 50%
+    delay_req_ms: float = 53_000.0    # paper testbed: fixed C_i = 53 s
+    req_size_lo: float = 20_000.0
+    req_size_hi: float = 120_000.0
+    channel_sigma: float = 0.25       # lognormal jitter of the wireless channel
+    proc_sigma: float = 0.05
+    move_prob: float = 0.0            # per-frame user mobility (extensions)
+    w_a: float = 1.0
+    w_c: float = 1.0
+    max_as: float = 100.0
+    max_cs: float = 12_000.0
+    adapt_max_cs: bool = True         # paper: "we may have to adapt Max_cs"
+    bandwidth_init: float = 600.0     # scheduler's initial estimate B_0
+
+
+@dataclasses.dataclass
+class SimResult:
+    n_requests: int
+    n_served: int
+    n_satisfied: int
+    n_local: int
+    n_cloud: int
+    n_edge_offload: int
+    n_dropped: int
+    mean_us: float
+    mean_completion_ms: float
+    mean_queue_ms: float
+    bandwidth_estimates: List[float]
+
+    @property
+    def satisfied_pct(self) -> float:
+        return 100.0 * self.n_satisfied / max(self.n_requests, 1)
+
+    @property
+    def local_pct(self) -> float:
+        return 100.0 * self.n_local / max(self.n_requests, 1)
+
+    @property
+    def cloud_pct(self) -> float:
+        return 100.0 * self.n_cloud / max(self.n_requests, 1)
+
+    @property
+    def edge_offload_pct(self) -> float:
+        return 100.0 * self.n_edge_offload / max(self.n_requests, 1)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "n_requests": self.n_requests,
+            "satisfied_pct": self.satisfied_pct,
+            "local_pct": self.local_pct,
+            "cloud_pct": self.cloud_pct,
+            "edge_offload_pct": self.edge_offload_pct,
+            "dropped_pct": 100.0 * self.n_dropped / max(self.n_requests, 1),
+            "mean_us": self.mean_us,
+            "mean_completion_ms": self.mean_completion_ms,
+            "mean_queue_ms": self.mean_queue_ms,
+        }
+
+
+@dataclasses.dataclass
+class _Request:
+    rid: int
+    arrival_ms: float
+    cover: int
+    service: int
+    A: float
+    C: float
+    size_bytes: float
+
+
+def _build_frame_instance(
+    reqs: List[_Request],
+    spec: ClusterSpec,
+    cfg: SimConfig,
+    now_ms: float,
+    bw_est: float,
+    max_cs: float,
+    gamma=None,
+    eta=None,
+) -> FlatInstance:
+    """FlatInstance for the requests pending in this frame, using the
+    scheduler's *estimated* bandwidth for comm delays."""
+    import jax.numpy as jnp
+
+    M = spec.n_servers
+    L = spec.acc.shape[1]
+    N = len(reqs)
+    is_cloud = spec.is_cloud()
+
+    cover = np.array([r.cover for r in reqs], np.int32)
+    A = np.array([r.A for r in reqs], np.float32)
+    C = np.array([r.C for r in reqs], np.float32)
+    Tq = np.array([now_ms - r.arrival_ms for r in reqs], np.float32)
+    size = np.array([r.size_bytes for r in reqs], np.float32)
+    svc = np.array([r.service for r in reqs], np.int32)
+
+    local = cover[:, None] == np.arange(M)[None, :]
+    comm = size[:, None] / bw_est + np.where(is_cloud[None, :], spec.cloud_extra_delay, 0.0)
+    comm = np.where(local, 0.0, comm)
+
+    proc = spec.proc_ms[:, svc, :].transpose(1, 0, 2)       # (N, M, L)
+    ctime = Tq[:, None, None] + proc + comm[:, :, None]
+    avail = spec.placed[:, svc, :].transpose(1, 0, 2)
+    acc = np.broadcast_to(spec.acc[svc][:, None, :], (N, M, L)).copy()
+    u = np.where(local[:, :, None], 0.0, (size / 1024.0)[:, None, None])
+
+    return FlatInstance(
+        cover=jnp.asarray(cover),
+        A=jnp.asarray(A),
+        C=jnp.asarray(C),
+        w_a=jnp.full((N,), cfg.w_a, jnp.float32),
+        w_c=jnp.full((N,), cfg.w_c, jnp.float32),
+        acc=jnp.asarray(acc, jnp.float32),
+        ctime=jnp.asarray(ctime, jnp.float32),
+        v=jnp.asarray(proc, jnp.float32),
+        u=jnp.asarray(np.broadcast_to(u, (N, M, L)), jnp.float32),
+        avail=jnp.asarray(avail),
+        gamma=jnp.asarray(spec.gamma_frame if gamma is None else gamma, jnp.float32),
+        eta=jnp.asarray(spec.eta_frame if eta is None else eta, jnp.float32),
+        max_as=jnp.float32(cfg.max_as),
+        max_cs=jnp.float32(max_cs),
+    )
+
+
+def simulate(
+    spec: ClusterSpec,
+    cfg: SimConfig,
+    scheduler: Callable[[FlatInstance], Assignment] = gus_schedule_np,
+    *,
+    seed: int = 0,
+    n_requests: Optional[int] = None,
+) -> SimResult:
+    """Run the virtual testbed.  ``scheduler`` maps FlatInstance -> Assignment
+    (GUS, any baseline, or a custom policy).  If ``n_requests`` is given, the
+    arrival process stops after that many submissions (the paper's x-axis in
+    Fig. 1(e)-(h) is total #requests)."""
+    rng = np.random.default_rng(seed)
+    M, K, L = spec.proc_ms.shape
+
+    # --- arrivals ------------------------------------------------------------
+    reqs: List[_Request] = []
+    rid = 0
+    for e in range(spec.n_edge):
+        t = 0.0
+        while t < cfg.horizon_ms:
+            t += rng.exponential(1000.0 / cfg.arrival_rate_per_s)
+            if t >= cfg.horizon_ms:
+                break
+            reqs.append(
+                _Request(
+                    rid=rid,
+                    arrival_ms=t,
+                    cover=e,
+                    service=int(rng.integers(0, K)),
+                    A=float(np.clip(rng.normal(cfg.acc_req_mean, cfg.acc_req_std), 1, 99)),
+                    C=float(cfg.delay_req_ms),
+                    size_bytes=float(rng.uniform(cfg.req_size_lo, cfg.req_size_hi)),
+                )
+            )
+            rid += 1
+    reqs.sort(key=lambda r: r.arrival_ms)
+    if n_requests is not None:
+        reqs = reqs[:n_requests]
+
+    # --- frame loop ----------------------------------------------------------
+    bw_prev = bw_cur = cfg.bandwidth_init  # B_{t-1}, B_t for the EMA rule
+    bw_log = [bw_cur]
+    max_cs = cfg.max_cs
+
+    n_served = n_sat = n_local = n_cloud = n_eo = n_drop = 0
+    us_sum = 0.0
+    comp_sum = 0.0
+    q_sum = 0.0
+    pending: List[_Request] = []
+    ridx = 0
+    t = 0.0
+    is_cloud = spec.is_cloud()
+
+    # capacity budgets deplete WITHIN a wall-clock frame (queue-full decisions
+    # fire early but do not refresh gamma/eta — they share the frame budget)
+    rem_gamma = spec.gamma_frame.astype(np.float64).copy()
+    rem_eta = spec.eta_frame.astype(np.float64).copy()
+    frame_boundary = cfg.frame_ms
+
+    while t < cfg.horizon_ms + 10 * cfg.frame_ms:
+        frame_end = t + cfg.frame_ms
+        # admit arrivals in this frame; queue_cap per covering server
+        qlen = {e: sum(1 for r in pending if r.cover == e) for e in range(spec.n_edge)}
+        early_close = None
+        while ridx < len(reqs) and reqs[ridx].arrival_ms < frame_end:
+            r = reqs[ridx]
+            if qlen.get(r.cover, 0) >= cfg.queue_cap:
+                # queue full -> decision fires early (paper testbed behaviour)
+                early_close = r.arrival_ms
+                break
+            pending.append(r)
+            qlen[r.cover] = qlen.get(r.cover, 0) + 1
+            ridx += 1
+        decision_time = early_close if early_close is not None else frame_end
+        if decision_time >= frame_boundary:  # new wall-clock frame: budgets refresh
+            rem_gamma = spec.gamma_frame.astype(np.float64).copy()
+            rem_eta = spec.eta_frame.astype(np.float64).copy()
+            frame_boundary += cfg.frame_ms * np.ceil(
+                (decision_time - frame_boundary + 1e-9) / cfg.frame_ms
+            )
+
+        if pending:
+            if cfg.move_prob > 0:  # user mobility: re-attach covering edges
+                from .extensions import apply_mobility
+
+                cov = np.array([r.cover for r in pending], np.int32)
+                cov = apply_mobility(cov, spec.n_edge, cfg.move_prob, rng)
+                for r, c in zip(pending, cov):
+                    r.cover = int(c)
+            bw_est = 0.5 * (bw_cur + bw_prev)  # E[B_{t+1}] = (B_t + B_{t-1})/2
+            inst = _build_frame_instance(
+                pending, spec, cfg, decision_time, bw_est, max_cs,
+                gamma=rem_gamma, eta=rem_eta,
+            )
+            assign = scheduler(inst)
+            jv = np.asarray(assign.j)
+            lv = np.asarray(assign.l)
+
+            observed_bw = []
+            for idx, r in enumerate(pending):
+                j, l = int(jv[idx]), int(lv[idx])
+                if j < 0:
+                    n_drop += 1
+                    continue
+                n_served += 1
+                local = j == r.cover
+                rem_gamma[j] -= spec.proc_ms[j, r.service, l]
+                if not local:
+                    rem_eta[r.cover] -= r.size_bytes / 1024.0
+                # realized delays
+                proc = spec.proc_ms[j, r.service, l] * rng.lognormal(0.0, cfg.proc_sigma)
+                if local:
+                    comm = 0.0
+                else:
+                    bw_real = spec.bandwidth_true * rng.lognormal(0.0, cfg.channel_sigma)
+                    comm = r.size_bytes / bw_real + (
+                        spec.cloud_extra_delay if is_cloud[j] else 0.0
+                    )
+                    observed_bw.append(r.size_bytes / max(comm - (spec.cloud_extra_delay if is_cloud[j] else 0.0), 1e-6))
+                tq = decision_time - r.arrival_ms
+                ct = tq + proc + comm
+                acc = spec.acc[r.service, l]
+                sat = (ct <= r.C) and (acc >= r.A)
+                n_sat += int(sat)
+                n_local += int(local)
+                n_cloud += int((not local) and is_cloud[j])
+                n_eo += int((not local) and (not is_cloud[j]))
+                us_sum += cfg.w_a * (acc - r.A) / cfg.max_as + cfg.w_c * (r.C - ct) / max_cs
+                comp_sum += ct
+                q_sum += tq
+                if cfg.adapt_max_cs:
+                    max_cs = max(max_cs, ct)
+            pending = []
+            if observed_bw:
+                bw_prev, bw_cur = bw_cur, float(np.mean(observed_bw))
+                bw_log.append(0.5 * (bw_cur + bw_prev))
+
+        t = decision_time if early_close is not None else frame_end
+        if ridx >= len(reqs) and not pending:
+            break
+
+    n_total = len(reqs)
+    return SimResult(
+        n_requests=n_total,
+        n_served=n_served,
+        n_satisfied=n_sat,
+        n_local=n_local,
+        n_cloud=n_cloud,
+        n_edge_offload=n_eo,
+        n_dropped=n_total - n_served,
+        mean_us=us_sum / max(n_total, 1),
+        mean_completion_ms=comp_sum / max(n_served, 1),
+        mean_queue_ms=q_sum / max(n_served, 1),
+        bandwidth_estimates=bw_log,
+    )

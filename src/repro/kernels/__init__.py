@@ -1,0 +1,19 @@
+"""Pallas-TPU kernels for the serving hot spots (validated interpret=True on
+CPU against the pure-jnp oracles in ref.py):
+
+  flash_attention  — blocked online-softmax prefill attention (causal/window)
+  decode_attention — single-token GQA attention over a long KV cache
+  ssd_scan         — Mamba-2 chunked SSD scan with VMEM state carry
+"""
+from . import ops, ref
+from .flash_attention import flash_attention as flash_attention_kernel
+from .decode_attention import decode_attention as decode_attention_kernel
+from .ssd_scan import ssd_scan as ssd_scan_kernel
+
+__all__ = [
+    "ops",
+    "ref",
+    "flash_attention_kernel",
+    "decode_attention_kernel",
+    "ssd_scan_kernel",
+]

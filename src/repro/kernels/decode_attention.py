@@ -1,0 +1,108 @@
+"""Single-token GQA decode attention Pallas-TPU kernel.
+
+Serving hot spot: one query per sequence against a long KV cache.  On TPU the
+decode step is HBM-bandwidth-bound (the whole cache streams through VMEM
+once), so the kernel:
+
+  * batches all ``rep = H // KV`` query heads of a KV group into ONE MXU
+    matmul per cache block — (rep × hd) @ (hd × block_k) — instead of rep
+    vector-matrix products;
+  * streams the cache in (block_k, hd) VMEM tiles along the innermost
+    sequential grid axis with f32 online-softmax scratch carried across
+    blocks;
+  * consumes a per-token validity mask (ring-buffer caches pass their
+    occupancy/window mask) as a (1, block_k) SMEM-friendly tile.
+
+Layouts: q (B, KV, rep, hd); k/v (B, KV, T, hd); valid (B, T) bool.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, n_k: int, block_k: int, seq_k: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (rep, hd)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+    valid = valid_ref[0]                           # (bk,) bool
+    # guard the ragged tail: padded block positions are never valid, and the
+    # padded k/v payload must be zeroed (garbage * 0 would still poison acc)
+    cols = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (valid.shape[0],), 0)
+    inb = cols < seq_k
+    valid = valid & inb
+    k = jnp.where(inb[:, None], k, 0.0)
+    v = jnp.where(inb[:, None], v, 0.0)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                      # (rep, bk)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (rep,)
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    p = jnp.where(valid[None, :], p, 0.0)          # kill exp(NEG-NEG)=1 artifacts
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        l = l_ref[...]
+        safe = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, valid, *, block_k: int = 512, interpret: bool = False):
+    """q: (B, KV, rep, hd); k/v: (B, KV, T, hd); valid: (B, T) -> (B, KV, rep, hd)."""
+    B, KV, rep, hd = q.shape
+    T = k.shape[2]
+    block_k = max(min(block_k, T), 8)
+    n_k = pl.cdiv(T, block_k)
+    # pad T to a block multiple via the validity mask semantics: BlockSpec
+    # handles the ragged tail (Pallas pads; the mask must cover it)
+    grid = (B, KV, n_k)
+
+    kernel = functools.partial(
+        _kernel, scale=1.0 / math.sqrt(hd), n_k=n_k, block_k=block_k, seq_k=T
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, hd), lambda b, g, ik: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, g, ik: (b, g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, g, ik: (b, g, ik, 0)),
+            pl.BlockSpec((1, block_k), lambda b, g, ik: (b, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, hd), lambda b, g, ik: (b, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, rep, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, valid)

@@ -1,0 +1,134 @@
+"""Flash-attention forward Pallas-TPU kernel (causal / sliding-window, GQA).
+
+TPU adaptation of the blocked online-softmax algorithm:
+  * grid (B, H, n_q_blocks, n_k_blocks) — the k-block axis is innermost and
+    sequential on a TensorCore, so the f32 (m, l, acc) running statistics
+    live in VMEM scratch and persist across k-steps;
+  * BlockSpecs tile q/k/v/out into (block_q|block_k, head_dim) VMEM tiles;
+    block sizes default to 128 to keep MXU matmul dims hardware-aligned;
+  * GQA is handled in the k/v index_map (query head h reads kv head
+    h // (H // KV)) — no materialized repeat;
+  * masking (causal and/or sliding window) is applied inside the kernel from
+    global row/col indices.
+
+VMEM working set per program:
+  q (bq·hd) + k,v (2·bk·hd) + acc (bq·hd f32) + out ≈ 260 KiB at 128×128,
+well within v5e VMEM (~16 MiB), leaving room for the compiler's double
+buffering of the k/v streams.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: Optional[int],
+            block_q: int, block_k: int, n_k: int, seq_q: int, seq_k: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    # zero the ragged-tail padding (garbage would poison acc via 0*NaN)
+    kcols = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (k.shape[0],), 0)
+    inb = (kcols < seq_k)[:, None]
+    k = jnp.where(inb, k, 0.0)
+    v = jnp.where(inb, v, 0.0)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                     # (bq, bk)
+
+    rows = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    cols = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = (rows < seq_q) & (cols < seq_k)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                           # (bq,)
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])               # (bq, bk)
+    p = jnp.where(mask, p, 0.0)                   # kill exp(NEG-NEG)=1 artifacts
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        # fully-masked rows (e.g. padding) have l == 0; emit zeros not NaNs
+        l = l_ref[...]
+        safe = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q, k, v, *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """q: (B, H, S, hd); k/v: (B, KV, T, hd) -> (B, H, S, hd)."""
+    B, H, S, hd = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    assert H % KV == 0, (H, KV)
+    rep = H // KV
+    block_q = max(min(block_q, S), 8)
+    block_k = max(min(block_k, T), 8)
+    n_q = pl.cdiv(S, block_q)
+    n_k = pl.cdiv(T, block_k)
+    grid = (B, H, n_q, n_k)
+
+    kernel = functools.partial(
+        _kernel,
+        scale=1.0 / math.sqrt(hd),
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        n_k=n_k,
+        seq_q=S,
+        seq_k=T,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, iq, ik: (b, h // rep, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, iq, ik: (b, h // rep, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),       # m
+            pltpu.VMEM((block_q,), jnp.float32),       # l
+            pltpu.VMEM((block_q, hd), jnp.float32),    # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` contract).
+
+Shapes use the *kernel* layouts (ops.py adapts from model layouts):
+  flash_attention_ref : q (B,H,S,hd),  k/v (B,KV,T,hd)
+  decode_attention_ref: q (B,H,hd),    k/v (B,KV,T,hd), valid (B,T)
+  ssd_ref             : x (B,H,S,P), dt (B,H,S), A (H,), Bm/Cm (B,H,S,N)
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref", "decode_attention_ref", "ssd_ref"]
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: Optional[int] = None):
+    B, H, S, hd = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    rep = H // KV
+    kr = jnp.repeat(k, rep, axis=1)
+    vr = jnp.repeat(v, rep, axis=1)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, kr).astype(jnp.float32) / math.sqrt(hd)
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bhtd->bhsd", w, vr)
+
+
+def decode_attention_ref(q, k, v, valid):
+    """q: (B,H,hd) one query; k/v: (B,KV,T,hd); valid: (B,T) bool."""
+    B, H, hd = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    rep = H // KV
+    kr = jnp.repeat(k, rep, axis=1)
+    vr = jnp.repeat(v, rep, axis=1)
+    logits = jnp.einsum("bhd,bhtd->bht", q, kr).astype(jnp.float32) / math.sqrt(hd)
+    logits = jnp.where(valid[:, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bht,bhtd->bhd", w, vr)
+
+
+def ssd_ref(x, dt, A, Bm, Cm, chunk: int):
+    """Head-major SSD oracle.  x: (B,H,S,P), dt: (B,H,S), A: (H,),
+    Bm/Cm: (B,H,S,N) (groups already broadcast to heads)."""
+    from ..models.ssm import ssd_reference
+
+    xs = x.transpose(0, 2, 1, 3)          # (B,S,H,P)
+    dts = dt.transpose(0, 2, 1)           # (B,S,H)
+    Bs = Bm.transpose(0, 2, 1, 3)         # (B,S,H,N) == groups-as-heads
+    Cs = Cm.transpose(0, 2, 1, 3)
+    y = ssd_reference(xs, dts, A, Bs, Cs, chunk)
+    return y.transpose(0, 2, 1, 3)        # (B,H,S,P)

@@ -1,0 +1,98 @@
+"""Mamba-2 SSD chunked-scan Pallas-TPU kernel.
+
+TPU adaptation of the state-space-duality algorithm (arXiv:2405.21060):
+the sequence is processed in chunks of Q tokens; within a chunk the quadratic
+(C·Bᵀ ⊙ decay) form runs on the MXU as (Q×N)@(N×Q) and (Q×Q)@(Q×P) matmuls;
+across chunks the (N×P) recurrent state is carried in VMEM scratch along the
+innermost sequential grid axis — the classic scan-as-grid-walk pattern.
+
+Grid: (B, H, n_chunks).  Per-program VMEM working set at Q=128, N=128, P=64:
+x (Q·P) + B,C (2·Q·N) + decay (Q·Q) + state (N·P f32) ≈ 200 KiB.
+
+Layouts (head-major; ops.py adapts): x (B,H,S,P), dt (B,H,S), A (H,),
+Bm/Cm (B,H,S,N) with SSM groups pre-broadcast to heads.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan"]
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *, chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)            # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)          # (Q,)
+    A = a_ref[0].astype(jnp.float32)               # scalar
+    Bm = b_ref[0, 0].astype(jnp.float32)           # (Q, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)           # (Q, N)
+
+    dA = dt * A                                    # (Q,) negative
+    cs = jnp.cumsum(dA)                            # (Q,)
+
+    # ---- intra-chunk: y_intra[i] = sum_{j<=i} exp(cs_i - cs_j) dt_j (C_i·B_j) x_j
+    seg = cs[:, None] - cs[None, :]                # (Q, Q)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(cols <= rows, jnp.exp(seg), 0.0)  # causal decay matrix
+    scores = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                              # (Q, Q)
+    w = scores * L * dt[None, :]
+    y = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                              # (Q, P)
+
+    # ---- inter-chunk: y += (C_i exp(cs_i)) @ state_prev
+    carry_in = state_ref[...]                      # (N, P) f32
+    y = y + jax.lax.dot_general(
+        Cm * jnp.exp(cs)[:, None], carry_in,
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+
+    # ---- state update: state = exp(sum dA) * state + sum_j exp(cs_Q - cs_j) dt_j B_j ⊗ x_j
+    total = cs[-1]
+    decay_to_end = jnp.exp(total - cs)             # (Q,)
+    wB = Bm * (decay_to_end * dt)[:, None]         # (Q, N)
+    new_state = jax.lax.dot_general(
+        wB, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                              # (N, P)
+    state_ref[...] = jnp.exp(total) * carry_in + new_state
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128, interpret: bool = False):
+    """x: (B,H,S,P), dt: (B,H,S), A: (H,), Bm/Cm: (B,H,S,N) -> y (B,H,S,P)."""
+    B, H, S, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    grid = (B, H, nc)
+
+    kernel = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)

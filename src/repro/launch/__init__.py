@@ -1,0 +1,17 @@
+"""Launchers: production mesh, multi-pod dry-run, train and serve drivers.
+
+NOTE: do not import .dryrun from here — it sets XLA_FLAGS at import time and
+must be the first jax-touching import of its process."""
+from .mesh import make_production_mesh, make_test_mesh, mesh_name
+from .specs import SHAPES, ShapeSpec, input_specs, shape_config, model_flops
+
+__all__ = [
+    "make_production_mesh",
+    "make_test_mesh",
+    "mesh_name",
+    "SHAPES",
+    "ShapeSpec",
+    "input_specs",
+    "shape_config",
+    "model_flops",
+]

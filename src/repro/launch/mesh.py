@@ -1,0 +1,33 @@
+"""Production mesh definitions.
+
+As a FUNCTION (not module-level constant) so importing never touches jax
+device state — the dry-run sets XLA_FLAGS for 512 host devices before any
+jax import; tests/benches see the real single device."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh", "mesh_name"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 v5e pod (256 chips) or 2x16x16 two-pod fleet (512 chips).
+
+    Axes: `pod` (DCN, pure-DP) x `data` (batch) x `model` (tensor/expert)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_test_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many (host) devices are available."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def mesh_name(mesh) -> str:
+    return "x".join(str(s) for s in mesh.devices.shape)

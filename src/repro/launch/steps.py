@@ -1,0 +1,177 @@
+"""Sharded (pjit) step builders: train / prefill / serve, with in/out
+shardings resolved from the logical-axis rule tables in ``repro.sharding``.
+
+Rule profiles:
+  * TRAIN_RULES — 2-D weight sharding: model-parallel dim on `model`, the
+    complementary dim on `data` (FSDP-style; AdamW moments inherit it, so
+    optimizer state is fully sharded across the pod).
+  * SERVE_RULES — tensor-parallel weights on `model`, replicated across
+    `data`; decode must not all-gather weights every token.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..models.model import DecodeCache, Model
+from ..sharding import DEFAULT_RULES, named_sharding_for, use_sharding
+from ..training.optimizer import AdamWConfig
+from ..training.train_loop import TrainState, make_train_step
+from ..serving.engine import make_serve_step
+from .specs import ShapeSpec, abstract_cache, abstract_state, input_specs
+
+__all__ = [
+    "TRAIN_RULES",
+    "SERVE_RULES",
+    "params_shardings",
+    "state_shardings",
+    "batch_shardings",
+    "cache_shardings",
+    "build_train_step",
+    "build_prefill_step",
+    "build_serve_step",
+]
+
+TRAIN_RULES = dict(DEFAULT_RULES, embed="data", d_inner_in=None)
+SERVE_RULES = dict(DEFAULT_RULES)
+
+
+def _ns(mesh, shape, logical, rules):
+    return named_sharding_for(shape, logical, mesh, rules)
+
+
+def params_shardings(model: Model, mesh: Mesh, rules) -> Any:
+    aparams = model.abstract_params()
+    logical = model.param_logical_specs()
+    return jax.tree.map(
+        lambda p, lg: _ns(mesh, p.shape, lg, rules), aparams, logical
+    )
+
+
+def state_shardings(model: Model, mesh: Mesh, rules) -> TrainState:
+    ps = params_shardings(model, mesh, rules)
+    rep = NamedSharding(mesh, P())
+    from ..training.optimizer import AdamWState
+
+    return TrainState(
+        params=ps, opt=AdamWState(step=rep, m=ps, v=ps)
+    )
+
+
+def batch_shardings(cfg: ModelConfig, specs: Dict[str, Any], mesh: Mesh, rules) -> Dict[str, Any]:
+    out = {}
+    for k, v in specs.items():
+        logical = ["batch"] + [None] * (len(v.shape) - 1)
+        out[k] = _ns(mesh, v.shape, logical, rules)
+    return out
+
+
+def cache_shardings(model: Model, acache: DecodeCache, mesh: Mesh, rules) -> DecodeCache:
+    def kv_spec(x):
+        return _ns(mesh, x.shape, ("layers", "batch", "kv_seq", "kv_heads", "head_dim"), rules)
+
+    attn = (
+        {k: kv_spec(v) for k, v in acache.attn.items()} if acache.attn is not None else None
+    )
+    cross = (
+        {k: kv_spec(v) for k, v in acache.cross.items()} if acache.cross is not None else None
+    )
+    conv = (
+        _ns(mesh, acache.conv.shape, ("layers", "batch", "conv", "d_inner"), rules)
+        if acache.conv is not None
+        else None
+    )
+    ssm = (
+        _ns(mesh, acache.ssm.shape, ("layers", "batch", "ssm_heads", "state", "head_dim"), rules)
+        if acache.ssm is not None
+        else None
+    )
+    return DecodeCache(
+        index=NamedSharding(mesh, P()), attn=attn, conv=conv, ssm=ssm, cross=cross
+    )
+
+
+# ---------------------------------------------------------------------------
+# step builders — each returns (jitted_fn, example_abstract_args)
+# ---------------------------------------------------------------------------
+
+def build_train_step(
+    model: Model,
+    mesh: Mesh,
+    shape: ShapeSpec,
+    rules: Optional[dict] = None,
+    opt_cfg: Optional[AdamWConfig] = None,
+):
+    rules = rules or TRAIN_RULES
+    raw_step = make_train_step(model, opt_cfg or AdamWConfig())
+
+    def step(state, batch):
+        with use_sharding(mesh, rules):
+            return raw_step(state, batch)
+
+    astate = abstract_state(model)
+    aspecs = input_specs(model.cfg, shape)
+    st_sh = state_shardings(model, mesh, rules)
+    b_sh = batch_shardings(model.cfg, aspecs, mesh, rules)
+    rep = NamedSharding(mesh, P())
+    metrics_sh = {k: rep for k in ("loss", "ce", "router_aux", "grad_norm", "lr")}
+    fn = jax.jit(
+        step,
+        in_shardings=(st_sh, b_sh),
+        out_shardings=(st_sh, metrics_sh),
+        donate_argnums=(0,),
+    )
+    return fn, (astate, aspecs)
+
+
+def build_prefill_step(model: Model, mesh: Mesh, shape: ShapeSpec, rules=None):
+    from ..serving.engine import make_prefill_step
+
+    rules = rules or SERVE_RULES
+    raw = make_prefill_step(model)
+
+    def step(params, batch, cache):
+        with use_sharding(mesh, rules):
+            return raw(params, batch, cache)
+
+    aparams = model.abstract_params()
+    aspecs = input_specs(model.cfg, shape)
+    acache = abstract_cache(model, shape)
+    p_sh = params_shardings(model, mesh, rules)
+    b_sh = batch_shardings(model.cfg, aspecs, mesh, rules)
+    c_sh = cache_shardings(model, acache, mesh, rules)
+    tok_sh = _ns(mesh, (shape.global_batch, 1), ("batch", None), rules)
+    fn = jax.jit(
+        step,
+        in_shardings=(p_sh, b_sh, c_sh),
+        out_shardings=(tok_sh, c_sh),
+        donate_argnums=(2,),
+    )
+    return fn, (aparams, aspecs, acache)
+
+
+def build_serve_step(model: Model, mesh: Mesh, shape: ShapeSpec, rules=None):
+    rules = rules or SERVE_RULES
+    raw = make_serve_step(model)
+
+    def step(params, tokens, cache):
+        with use_sharding(mesh, rules):
+            return raw(params, tokens, cache)
+
+    aparams = model.abstract_params()
+    acache = abstract_cache(model, shape)
+    atoks = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    p_sh = params_shardings(model, mesh, rules)
+    c_sh = cache_shardings(model, acache, mesh, rules)
+    tok_sh = _ns(mesh, (shape.global_batch, 1), ("batch", None), rules)
+    fn = jax.jit(
+        step,
+        in_shardings=(p_sh, tok_sh, c_sh),
+        out_shardings=(tok_sh, c_sh),
+        donate_argnums=(2,),
+    )
+    return fn, (aparams, atoks, acache)

@@ -1,0 +1,20 @@
+from .model import Model, DecodeCache
+from .layers import (
+    ParamDecl,
+    init_from_decl,
+    specs_from_decl,
+    apply_attention,
+    apply_mlp,
+    apply_norm,
+    rope,
+    make_positions,
+)
+from .moe import apply_moe, moe_decl, router_aux_loss
+from .ssm import apply_mamba, mamba_decode_step, ssd_reference, init_ssm_state
+
+__all__ = [
+    "Model", "DecodeCache", "ParamDecl", "init_from_decl", "specs_from_decl",
+    "apply_attention", "apply_mlp", "apply_norm", "rope", "make_positions",
+    "apply_moe", "moe_decl", "router_aux_loss",
+    "apply_mamba", "mamba_decode_step", "ssd_reference", "init_ssm_state",
+]

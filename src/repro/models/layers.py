@@ -1,0 +1,390 @@
+"""Core layers: declarative params, norms, RoPE, GQA attention, MLP.
+
+Params are plain nested dicts.  Every parameter is declared once (shape +
+logical sharding axes + init kind) in a *decl* tree; ``init_from_decl``
+materializes values (optionally stacked over a leading layer axis for
+scan-over-layers) and ``specs_from_decl`` yields the matching logical-axis
+pytree consumed by ``repro.sharding``.  One source of truth, no sync bugs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import shard
+
+__all__ = [
+    "ParamDecl",
+    "init_from_decl",
+    "specs_from_decl",
+    "norm_decl",
+    "apply_norm",
+    "mlp_decl",
+    "apply_mlp",
+    "attn_decl",
+    "apply_attention",
+    "rope",
+    "make_positions",
+    "embed_decl",
+]
+
+
+# ---------------------------------------------------------------------------
+# Declarative params
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamDecl:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "fan_in"     # fan_in | zeros | ones | normal | a_log | dt_bias
+    scale: float = 1.0
+
+
+def _leaf_init(key, d: ParamDecl, dtype) -> jnp.ndarray:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "a_log":  # mamba: A in [1, 16) -> log
+        u = jax.random.uniform(key, d.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if d.init == "dt_bias":  # mamba: dt ~ logU[1e-3, 1e-1], inverse softplus
+        u = jax.random.uniform(key, d.shape, jnp.float32)
+        dt = jnp.exp(u * (math.log(1e-1) - math.log(1e-3)) + math.log(1e-3))
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)
+    if d.init == "normal":
+        return (d.scale * jax.random.normal(key, d.shape, jnp.float32)).astype(dtype)
+    # fan_in: truncated-normal-ish scaled by 1/sqrt(fan_in) (first dim = in)
+    fan_in = d.shape[0] if len(d.shape) > 1 else d.shape[0]
+    if len(d.shape) >= 3:  # stacked expert weights (E, in, out): fan_in is dim -2
+        fan_in = d.shape[-2]
+    std = d.scale / math.sqrt(max(fan_in, 1))
+    return (std * jax.random.normal(key, d.shape, jnp.float32)).astype(dtype)
+
+
+def init_from_decl(key, decl: Dict[str, Any], dtype=jnp.float32, stack: Optional[int] = None):
+    """Materialize a decl tree.  ``stack=L`` prepends a layer axis of size L to
+    every leaf (for lax.scan over layers) while keeping fan-in per-layer."""
+    leaves, treedef = jax.tree.flatten(decl, is_leaf=lambda x: isinstance(x, ParamDecl))
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for k, d in zip(keys, leaves):
+        if stack is None:
+            out.append(_leaf_init(k, d, dtype))
+        else:
+            sub = jax.random.split(k, stack)
+            out.append(jnp.stack([_leaf_init(s, d, dtype) for s in sub]))
+    return jax.tree.unflatten(treedef, out)
+
+
+def specs_from_decl(decl: Dict[str, Any], stack: bool = False):
+    def leaf(d: ParamDecl):
+        return (("layers",) + d.logical) if stack else d.logical
+
+    return jax.tree.map(leaf, decl, is_leaf=lambda x: isinstance(x, ParamDecl))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_decl(cfg: ModelConfig, dim: Optional[int] = None) -> Dict[str, ParamDecl]:
+    dim = dim or cfg.d_model
+    d = {"scale": ParamDecl((dim,), ("embed",), "ones")}
+    if cfg.norm == "layernorm":
+        d["bias"] = ParamDecl((dim,), ("embed",), "zeros")
+    return d
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    x32 = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def make_positions(batch: int, seq: int, offset=0) -> jnp.ndarray:
+    return jnp.broadcast_to(jnp.arange(seq)[None, :] + offset, (batch, seq))
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float, rotary_pct: float = 1.0):
+    """x: (B, S, H, hd); positions: (B, S).  Rotates the first
+    ``rotary_dim = even(hd * rotary_pct)`` channels (stablelm-2: 25%)."""
+    hd = x.shape[-1]
+    rot = int(hd * rotary_pct) // 2 * 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[:, :, None, None].astype(jnp.float32) * freqs  # (B,S,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., :half], xr[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1) if rot < hd else out
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_decl(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, ParamDecl]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    decl = {
+        "w_up": ParamDecl((d, f), ("embed", "ff")),
+        "w_down": ParamDecl((f, d), ("ff", "embed")),
+    }
+    if cfg.gated_mlp:
+        decl["w_gate"] = ParamDecl((d, f), ("embed", "ff"))
+    if cfg.mlp_bias:
+        decl["b_up"] = ParamDecl((f,), ("ff",), "zeros")
+        decl["b_down"] = ParamDecl((d,), ("embed",), "zeros")
+        if cfg.gated_mlp:
+            decl["b_gate"] = ParamDecl((f,), ("ff",), "zeros")
+    return decl
+
+
+def _act(cfg: ModelConfig):
+    return jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    u = x @ p["w_up"]
+    if cfg.mlp_bias:
+        u = u + p["b_up"]
+    if cfg.gated_mlp:
+        g = x @ p["w_gate"]
+        if cfg.mlp_bias:
+            g = g + p["b_gate"]
+        h = _act(cfg)(g) * u
+    else:
+        h = _act(cfg)(u)
+    h = shard(h, "batch", None, "ff")
+    y = h @ p["w_down"]
+    if cfg.mlp_bias:
+        y = y + p["b_down"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional sliding window, optional cross-attention, caching)
+# ---------------------------------------------------------------------------
+
+def attn_decl(cfg: ModelConfig, cross: bool = False) -> Dict[str, ParamDecl]:
+    d, hd = cfg.d_model, cfg.head_dim
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    decl = {
+        "w_q": ParamDecl((d, H, hd), ("embed", "heads", "head_dim")),
+        "w_k": ParamDecl((d, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "w_v": ParamDecl((d, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "w_o": ParamDecl((H, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        decl["b_q"] = ParamDecl((H, hd), ("heads", "head_dim"), "zeros")
+        decl["b_k"] = ParamDecl((KV, hd), ("kv_heads", "head_dim"), "zeros")
+        decl["b_v"] = ParamDecl((KV, hd), ("kv_heads", "head_dim"), "zeros")
+    if cfg.attn_out_bias:
+        decl["b_o"] = ParamDecl((d,), ("embed",), "zeros")
+    return decl
+
+
+def _project_qkv(p, x, cfg: ModelConfig, kv_input=None):
+    kv_input = x if kv_input is None else kv_input
+    q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_input, p["w_k"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_input, p["w_v"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["b_q"], k + p["b_k"], v + p["b_v"]
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """Reference scaled-dot-product GQA attention.
+    q: (B,S,H,hd), k/v: (B,T,KV,hd), mask: (B,1,S,T) or (S,T) bool."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qg = q.reshape(B, S, KV, rep, hd)
+    # f32 accumulation INSIDE the dot (bf16 operands stay bf16 in HBM/on the
+    # wire — a materialized f32 convert of the KV cache would double decode's
+    # all-gather traffic, see EXPERIMENTS.md §Perf)
+    logits = jnp.einsum(
+        "bskrh,btkh->bkrst", qg, k, preferred_element_type=jnp.float32
+    )
+    logits = logits / math.sqrt(hd)
+    if mask.ndim == 2:
+        mask = mask[None, None, None]
+    else:  # (B,1,S,T) -> (B,1,1,S,T)
+        mask = mask[:, :, None]
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkrst,btkh->bskrh", w, v)
+    return out.reshape(B, S, H, hd)
+
+
+def _sdpa_chunked(q, k, v, cfg: ModelConfig, *, causal: bool, window: Optional[int]):
+    """Flash-style chunked attention for full-sequence (train/prefill) paths.
+
+    Never materializes the (S, T) score tensor: the q axis is processed in
+    ``cfg.attn_block`` chunks (python loop -> unrolled HLO, so cost analysis
+    sees every chunk), and for causal/windowed masks the k/v range of each
+    chunk is statically SLICED rather than masked — ~2x fewer score FLOPs for
+    causal, O(S·W) for sliding window.  Numerics: f32 score/softmax per chunk
+    (matches the Pallas flash kernel's accumulator behaviour on TPU)."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    KV = k.shape[2]
+    rep = H // KV
+    blk = max(min(cfg.attn_block, S), 1)
+    outs = []
+    for i in range(0, S, blk):
+        b = min(blk, S - i)
+        qb = q[:, i : i + b].reshape(B, b, KV, rep, hd)
+        # static k-range for this chunk
+        hi = min(i + b, T) if causal else T
+        lo = max(0, i + 1 - (window or T)) if (causal and window) else 0
+        kb = k[:, lo:hi]
+        vb = v[:, lo:hi]
+        logits = jnp.einsum(
+            "bskrh,btkh->bkrst", qb, kb, preferred_element_type=jnp.float32
+        ) / math.sqrt(hd)
+        qi = (i + jnp.arange(b))[:, None]
+        kj = (lo + jnp.arange(hi - lo))[None, :]
+        m = jnp.ones((b, hi - lo), bool)
+        if causal:
+            m &= kj <= qi
+        if window is not None:
+            m &= kj > qi - window
+        logits = jnp.where(m[None, None, None], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        ob = jnp.einsum("bkrst,btkh->bskrh", w, vb).reshape(B, b, H, hd)
+        outs.append(ob)
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+def causal_mask(sq: int, skv: int, window: Optional[int] = None, offset: int = 0):
+    """(sq, skv) bool; query i attends key j iff j <= i+offset and within window."""
+    qi = jnp.arange(sq)[:, None] + offset
+    kj = jnp.arange(skv)[None, :]
+    m = kj <= qi
+    if window is not None:
+        m &= kj > qi - window
+    return m
+
+
+def apply_attention(
+    p,
+    x,
+    cfg: ModelConfig,
+    *,
+    positions,
+    mode: str = "causal",          # causal | bidir | cross
+    kv_input=None,                  # encoder memory for cross-attention
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    cache_index: Optional[jnp.ndarray] = None,
+    window: Optional[int] = None,
+):
+    """Returns (y, new_cache).  Caching protocol:
+
+    * prefill/train: ``cache=None`` -> full attention over x, returns the
+      (k, v) to seed a cache when requested by the caller via closure.
+    * decode: ``cache={'k','v'}`` ring buffers (B, W, KV, hd) and
+      ``cache_index`` = #tokens generated so far; x is (B, 1, D).
+    """
+    window = window if window is not None else cfg.sliding_window
+    q, k, v = _project_qkv(p, x, cfg, kv_input)
+    if mode != "cross":
+        # `positions` carries absolute positions for both q and the new k
+        # (decode passes the current position for the single new token).
+        q = rope(q, positions, cfg.rope_theta, cfg.rotary_pct)
+        k = rope(k, positions, cfg.rope_theta, cfg.rotary_pct)
+
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+
+    new_cache = None
+    if cache is not None and mode != "cross":
+        # decode: write the new token into the ring buffer
+        W = cache["k"].shape[1]
+        slot = (cache_index % W).astype(jnp.int32)
+        if "k_scale" in cache:  # int8-quantized cache (kv_cache_dtype="int8")
+            from .quant import dequantize_kv, quantize_kv
+
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0)),
+                "k_scale": jax.lax.dynamic_update_slice(
+                    cache["k_scale"], ks, (0, slot, 0, 0)
+                ),
+                "v_scale": jax.lax.dynamic_update_slice(
+                    cache["v_scale"], vs, (0, slot, 0, 0)
+                ),
+            }
+            ck = dequantize_kv(new_cache["k"], new_cache["k_scale"], k.dtype)
+            cv = dequantize_kv(new_cache["v"], new_cache["v_scale"], v.dtype)
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+            new_cache = {"k": ck, "v": cv}
+        # validity: slot position wrote token (cache_index); others hold
+        # token (cache_index - ((slot - pos) mod W)); valid iff age < min(W, idx+1)
+        pos = jnp.arange(W)
+        age = (slot - pos) % W
+        valid = age <= jnp.minimum(cache_index, W - 1)
+        if window is not None:
+            valid &= age < window
+        mask = valid[None, None, None, :]  # (1,1,1,W) -> broadcasting ok
+        mask = jnp.broadcast_to(mask, (x.shape[0], 1, 1, W))
+        if cfg.use_pallas:
+            from ..kernels import ops as kops
+            y = kops.decode_attention(q[:, 0], ck, cv, mask[:, 0, 0])[:, None]
+        else:
+            y = _sdpa(q, ck, cv, mask, cfg)
+    elif mode == "cross":
+        if cache is not None:  # pre-projected encoder memory
+            k, v = cache["k"], cache["v"]
+        new_cache = {"k": k, "v": v}
+        T = k.shape[1]
+        mask = jnp.ones((x.shape[1], T), bool)
+        y = _sdpa(q, k, v, mask, cfg)
+    else:
+        S = x.shape[1]
+        if cfg.use_pallas and mode == "causal":
+            from ..kernels import ops as kops
+            y = kops.flash_attention(q, k, v, causal=True, window=window)
+        elif cfg.attn_impl == "chunked":
+            y = _sdpa_chunked(q, k, v, cfg, causal=(mode == "causal"), window=window)
+        else:
+            if mode == "bidir":
+                mask = jnp.ones((S, S), bool)
+            else:
+                mask = causal_mask(S, S, window)
+            y = _sdpa(q, k, v, mask, cfg)
+        new_cache = {"k": k, "v": v}
+
+    y = shard(y, "batch", None, "heads", None)
+    out = jnp.einsum("bshk,hkd->bsd", y, p["w_o"])
+    if cfg.attn_out_bias:
+        out = out + p["b_o"]
+    return out, new_cache

@@ -1,0 +1,625 @@
+"""Unified composable model covering all six assigned architecture families.
+
+One ``Model`` class, configured entirely by ``ModelConfig``:
+
+  dense  — pre-norm GQA transformer (yi-9b, qwen2-72b, stablelm-12b,
+           starcoder2-15b)
+  moe    — dense trunk with MoE FFN (qwen2-moe: shared+routed; arctic:
+           routed + dense residual)
+  ssm    — Mamba-2 / SSD stack (mamba2-130m)
+  hybrid — Mamba-2 backbone + one weight-*shared* attention block applied
+           every ``attn_every`` layers (zamba2-1.2b)
+  encdec — bidirectional encoder over stubbed frame embeddings + causal
+           decoder with cross-attention (seamless-m4t-medium)
+  vlm    — decoder trunk consuming token embeddings with stubbed vision patch
+           embeddings scattered at image-token positions (pixtral-12b)
+
+API (all functional, jit/pjit-friendly):
+  init(key) / abstract_params() / param_logical_specs()
+  forward(params, batch)            -> (logits, aux)          train/teacher-forcing
+  init_cache(batch, max_len)        -> DecodeCache
+  prefill(params, batch, cache)     -> (last_logits, cache)
+  decode_step(params, tokens, cache)-> (logits, cache)        one new token
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import shard
+from .layers import (
+    ParamDecl,
+    apply_attention,
+    apply_mlp,
+    apply_norm,
+    attn_decl,
+    init_from_decl,
+    make_positions,
+    mlp_decl,
+    norm_decl,
+    specs_from_decl,
+)
+from .moe import apply_moe, moe_decl
+from .ssm import apply_mamba, init_ssm_state, mamba_decl, mamba_decode_step
+
+__all__ = ["Model", "DecodeCache"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DecodeCache:
+    """Decode-time state.  ``index`` is the absolute #tokens consumed so far.
+
+    attn:  {'k','v'} (L_attn, B, W, KV, hd) ring buffers (None if attn-free)
+    conv:  (L_ssm, B, convw-1, ch)      (None unless ssm/hybrid)
+    ssm:   (L_ssm, B, H, N, P)          (None unless ssm/hybrid)
+    cross: {'k','v'} (L_dec, B, T_enc, KV, hd) projected encoder memory
+    """
+
+    index: jnp.ndarray
+    attn: Optional[Dict[str, jnp.ndarray]] = None
+    conv: Optional[jnp.ndarray] = None
+    ssm: Optional[jnp.ndarray] = None
+    cross: Optional[Dict[str, jnp.ndarray]] = None
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _remat_policy(cfg: ModelConfig):
+    """None = full remat; 'dots' saves matmul outputs and recomputes only the
+    cheap elementwise chain (softmax/norms/masks) in the backward pass."""
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return None
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ decl
+    def _block_decl(self, cross: bool = False) -> Dict[str, Any]:
+        cfg = self.cfg
+        if cfg.family in ("dense", "vlm"):
+            return {
+                "ln1": norm_decl(cfg),
+                "attn": attn_decl(cfg),
+                "ln2": norm_decl(cfg),
+                "mlp": mlp_decl(cfg),
+            }
+        if cfg.family == "moe":
+            return {
+                "ln1": norm_decl(cfg),
+                "attn": attn_decl(cfg),
+                "ln2": norm_decl(cfg),
+                "moe": moe_decl(cfg),
+            }
+        if cfg.family in ("ssm", "hybrid"):
+            return {"ln": norm_decl(cfg), "mamba": mamba_decl(cfg)}
+        if cfg.family == "encdec":
+            d = {
+                "ln1": norm_decl(cfg),
+                "attn": attn_decl(cfg),
+                "ln2": norm_decl(cfg),
+                "mlp": mlp_decl(cfg),
+            }
+            if cross:
+                d["ln_x"] = norm_decl(cfg)
+                d["xattn"] = attn_decl(cfg, cross=True)
+            return d
+        raise ValueError(cfg.family)
+
+    def decl(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        d: Dict[str, Any] = {
+            "embed": ParamDecl(
+                (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), "normal", 0.02
+            ),
+            "ln_f": norm_decl(cfg),
+        }
+        if not cfg.tie_embeddings:
+            d["lm_head"] = ParamDecl(
+                (cfg.d_model, cfg.vocab_size), ("embed", "vocab")
+            )
+        if cfg.family == "encdec":
+            d["enc_layers"] = self._block_decl(cross=False)
+            d["dec_layers"] = self._block_decl(cross=True)
+            d["ln_enc"] = norm_decl(cfg)
+        else:
+            d["layers"] = self._block_decl()
+        if cfg.family == "hybrid":
+            d["shared_attn"] = {
+                "ln1": norm_decl(cfg),
+                "attn": attn_decl(cfg),
+                "ln2": norm_decl(cfg),
+                "mlp": mlp_decl(cfg),
+            }
+        return d
+
+    # ------------------------------------------------------------------ init
+    def _stack_sizes(self) -> Dict[str, int]:
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return {"enc_layers": cfg.num_enc_layers, "dec_layers": cfg.num_layers}
+        return {"layers": cfg.num_layers}
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        decl = self.decl()
+        dt = jnp.dtype(cfg.param_dtype)
+        stacks = self._stack_sizes()
+        keys = jax.random.split(key, len(decl))
+        out = {}
+        for k, (name, sub) in zip(keys, decl.items()):
+            if name in stacks:
+                out[name] = init_from_decl(k, sub, dt, stack=stacks[name])
+            else:
+                out[name] = init_from_decl(k, sub, dt)
+        return out
+
+    def abstract_params(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    def param_logical_specs(self):
+        decl = self.decl()
+        stacks = self._stack_sizes()
+        return {
+            name: specs_from_decl(sub, stack=name in stacks)
+            for name, sub in decl.items()
+        }
+
+    # -------------------------------------------------------------- embedding
+    def _embed(self, params, batch) -> jnp.ndarray:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        h = params["embed"][tokens].astype(_dtype(cfg))
+        if cfg.family == "vlm" and "vision_embeds" in batch:
+            ve = batch["vision_embeds"].astype(_dtype(cfg))
+            vp = batch["vision_positions"]  # (B, P) int32 indices into S
+
+            def merge(h_b, pos_b, emb_b):
+                return h_b.at[pos_b].set(emb_b)
+
+            h = jax.vmap(merge)(h, vp, ve)
+        return shard(h, "batch", None, "embed")
+
+    def _unembed(self, params, h) -> jnp.ndarray:
+        cfg = self.cfg
+        h = apply_norm(params["ln_f"], h, cfg)
+        if cfg.tie_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", h, params["embed"])
+        else:
+            logits = h @ params["lm_head"]
+        if cfg.logits_softcap:
+            logits = cfg.logits_softcap * jnp.tanh(logits / cfg.logits_softcap)
+        return shard(logits.astype(jnp.float32), "batch", None, "vocab")
+
+    # ----------------------------------------------------------------- blocks
+    def _dense_block(self, p, h, positions, *, window=None, cache=None, index=None):
+        cfg = self.cfg
+        a, kv = apply_attention(
+            p["attn"],
+            apply_norm(p["ln1"], h, cfg),
+            cfg,
+            positions=positions,
+            cache=cache,
+            cache_index=index,
+            window=window,
+        )
+        h = h + a
+        x = apply_norm(p["ln2"], h, cfg)
+        if cfg.family == "moe":
+            m, aux = apply_moe(p["moe"], x, cfg)
+        else:
+            m, aux = apply_mlp(p["mlp"], x, cfg), jnp.float32(0.0)
+        return h + m, kv, aux
+
+    # ---------------------------------------------------------------- forward
+    def forward(self, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        """Teacher-forcing forward over full sequences (train / eval)."""
+        cfg = self.cfg
+        h = self._embed(params, batch)
+        B, S = batch["tokens"].shape
+        positions = batch.get("positions", make_positions(B, S))
+        aux_total = jnp.float32(0.0)
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            h, aux_total = self._run_stack(params["layers"], h, positions)
+        elif cfg.family == "ssm":
+            h = self._run_ssm_stack(params["layers"], h)
+        elif cfg.family == "hybrid":
+            h = self._run_hybrid(params, h, positions)
+        elif cfg.family == "encdec":
+            mem = self._encode(params, batch)
+            h, aux_total = self._run_decoder(params, h, positions, mem)
+        logits = self._unembed(params, h)
+        return logits, {"router_aux": aux_total}
+
+    # stacked scan (dense/moe/vlm)
+    def _run_stack(self, layers, h, positions):
+        cfg = self.cfg
+
+        def body(carry, lp):
+            hh, aux = carry
+            hh, _, a = self._dense_block(lp, hh, positions)
+            return (hh, aux + a), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False, policy=_remat_policy(cfg))
+        if cfg.scan_layers:
+            (h, aux), _ = jax.lax.scan(body, (h, jnp.float32(0.0)), layers)
+        else:
+            aux = jnp.float32(0.0)
+            for i in range(cfg.num_layers):
+                lp = jax.tree.map(lambda x: x[i], layers)
+                (h, aux), _ = body((h, aux), lp)
+        return h, aux
+
+    def _run_ssm_stack(self, layers, h):
+        cfg = self.cfg
+
+        def body(hh, lp):
+            y = apply_mamba(lp["mamba"], apply_norm(lp["ln"], hh, cfg), cfg)
+            return hh + y, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False, policy=_remat_policy(cfg))
+        if cfg.scan_layers:
+            h, _ = jax.lax.scan(body, h, layers)
+        else:
+            for i in range(cfg.num_layers):
+                lp = jax.tree.map(lambda x: x[i], layers)
+                h, _ = body(h, lp)
+        return h
+
+    def _run_hybrid(self, params, h, positions):
+        """Mamba backbone; the weight-shared attention block fires on layers
+        i ≡ 0 (mod attn_every).  Unrolled (sites need distinct cache slots)."""
+        cfg = self.cfg
+        sp = params["shared_attn"]
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda x: x[i], params["layers"])
+            if cfg.attn_every and i % cfg.attn_every == 0:
+                a, _ = apply_attention(
+                    sp["attn"], apply_norm(sp["ln1"], h, cfg), cfg, positions=positions
+                )
+                h = h + a
+                h = h + apply_mlp(sp["mlp"], apply_norm(sp["ln2"], h, cfg), cfg)
+            y = apply_mamba(lp["mamba"], apply_norm(lp["ln"], h, cfg), cfg)
+            h = h + y
+        return h
+
+    def _encode(self, params, batch) -> jnp.ndarray:
+        """Encoder over stubbed frame embeddings (B, T_enc, d_model)."""
+        cfg = self.cfg
+        mem = batch["enc_embeds"].astype(_dtype(cfg))
+        mem = shard(mem, "batch", None, "embed")
+        B, T = mem.shape[:2]
+        pos = make_positions(B, T)
+
+        def body(hh, lp):
+            a, _ = apply_attention(
+                lp["attn"], apply_norm(lp["ln1"], hh, cfg), cfg,
+                positions=pos, mode="bidir",
+            )
+            hh = hh + a
+            hh = hh + apply_mlp(lp["mlp"], apply_norm(lp["ln2"], hh, cfg), cfg)
+            return hh, None
+
+        if cfg.scan_layers:
+            mem, _ = jax.lax.scan(body, mem, params["enc_layers"])
+        else:
+            for i in range(cfg.num_enc_layers):
+                lp = jax.tree.map(lambda x: x[i], params["enc_layers"])
+                mem, _ = body(mem, lp)
+        return apply_norm(params["ln_enc"], mem, cfg)
+
+    def _run_decoder(self, params, h, positions, mem):
+        cfg = self.cfg
+
+        def body(hh, lp):
+            a, _ = apply_attention(
+                lp["attn"], apply_norm(lp["ln1"], hh, cfg), cfg, positions=positions
+            )
+            hh = hh + a
+            xa, _ = apply_attention(
+                lp["xattn"], apply_norm(lp["ln_x"], hh, cfg), cfg,
+                positions=positions, mode="cross", kv_input=mem,
+            )
+            hh = hh + xa
+            hh = hh + apply_mlp(lp["mlp"], apply_norm(lp["ln2"], hh, cfg), cfg)
+            return hh, None
+
+        if cfg.scan_layers:
+            h, _ = jax.lax.scan(body, h, params["dec_layers"])
+        else:
+            for i in range(cfg.num_layers):
+                lp = jax.tree.map(lambda x: x[i], params["dec_layers"])
+                h, _ = body(h, lp)
+        return h, jnp.float32(0.0)
+
+    # ------------------------------------------------------------------ cache
+    def n_attn_sites(self) -> int:
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe", "vlm"):
+            return cfg.num_layers
+        if cfg.family == "encdec":
+            return cfg.num_layers
+        if cfg.family == "hybrid":
+            return -(-cfg.num_layers // cfg.attn_every) if cfg.attn_every else 0
+        return 0
+
+    def cache_window(self, max_len: int) -> int:
+        w = self.cfg.sliding_window
+        return min(max_len, w) if w else max_len
+
+    def init_cache(self, batch: int, max_len: int, enc_len: Optional[int] = None) -> DecodeCache:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        attn = conv = ssm = cross = None
+        n_attn = self.n_attn_sites()
+        if n_attn:
+            W = self.cache_window(max_len)
+            kvshape = (n_attn, batch, W, cfg.num_kv_heads, cfg.head_dim)
+            if cfg.kv_cache_dtype == "int8":
+                sshape = kvshape[:-1] + (1,)
+                attn = {
+                    "k": jnp.zeros(kvshape, jnp.int8),
+                    "v": jnp.zeros(kvshape, jnp.int8),
+                    "k_scale": jnp.ones(sshape, jnp.float32),
+                    "v_scale": jnp.ones(sshape, jnp.float32),
+                }
+            else:
+                attn = {"k": jnp.zeros(kvshape, dt), "v": jnp.zeros(kvshape, dt)}
+        if cfg.family in ("ssm", "hybrid"):
+            c1, s1 = init_ssm_state(cfg, batch, dt)
+            conv = jnp.broadcast_to(c1, (cfg.num_layers, *c1.shape)).copy()
+            ssm = jnp.broadcast_to(s1, (cfg.num_layers, *s1.shape)).copy()
+        if cfg.family == "encdec":
+            T = enc_len or cfg.enc_seq_len
+            xshape = (cfg.num_layers, batch, T, cfg.num_kv_heads, cfg.head_dim)
+            cross = {"k": jnp.zeros(xshape, dt), "v": jnp.zeros(xshape, dt)}
+        return DecodeCache(index=jnp.int32(0), attn=attn, conv=conv, ssm=ssm, cross=cross)
+
+    # ---------------------------------------------------------------- prefill
+    def prefill(self, params, batch, cache: DecodeCache) -> Tuple[jnp.ndarray, DecodeCache]:
+        """Consume a prompt, fill the cache, return last-position logits."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = make_positions(B, S)
+        h = self._embed(params, batch)
+
+        def fill_ring(ring, kv):
+            # keep the last W tokens; slot = pos % W matches decode protocol
+            W = ring.shape[1]
+            keep = min(S, W)
+            src = kv[:, S - keep :]
+            slots = (jnp.arange(S - keep, S) % W).astype(jnp.int32)
+            return ring.at[:, slots].set(src.astype(ring.dtype))
+
+        def fill_ring_kv(cache_site, site_idx, kv):
+            """Fill one layer/site's {k,v[,scales]} from full-sequence k/v."""
+            from .quant import quantize_kv
+
+            out = {}
+            for name in ("k", "v"):
+                ring = cache_site[name][site_idx]
+                if cfg.kv_cache_dtype == "int8":
+                    q, sc = quantize_kv(kv[name])
+                    out[name] = fill_ring(ring, q)
+                    out[name + "_scale"] = fill_ring(
+                        cache_site[name + "_scale"][site_idx], sc
+                    )
+                else:
+                    out[name] = fill_ring(ring, kv[name])
+            return out
+
+        attn_cache = cache.attn
+        conv_cache, ssm_cache = cache.conv, cache.ssm
+        cross_cache = cache.cross
+        site = 0
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            sites = []
+            for i in range(cfg.num_layers):
+                lp = jax.tree.map(lambda x: x[i], params["layers"])
+                h, kv, _ = self._dense_block(lp, h, positions)
+                sites.append(fill_ring_kv(cache.attn, i, kv))
+            attn_cache = {
+                key: jnp.stack([st[key] for st in sites]) for key in sites[0]
+            }
+        elif cfg.family == "ssm":
+            convs, ssms = [], []
+            for i in range(cfg.num_layers):
+                lp = jax.tree.map(lambda x: x[i], params["layers"])
+                y, (cv, st) = apply_mamba(
+                    lp["mamba"], apply_norm(lp["ln"], h, cfg), cfg, return_state=True
+                )
+                h = h + y
+                convs.append(cv)
+                ssms.append(st.astype(cache.ssm.dtype))
+            conv_cache, ssm_cache = jnp.stack(convs), jnp.stack(ssms)
+        elif cfg.family == "hybrid":
+            sp = params["shared_attn"]
+            convs, ssms, ak, av = [], [], [], []
+            for i in range(cfg.num_layers):
+                lp = jax.tree.map(lambda x: x[i], params["layers"])
+                if cfg.attn_every and i % cfg.attn_every == 0:
+                    a, kv = apply_attention(
+                        sp["attn"], apply_norm(sp["ln1"], h, cfg), cfg, positions=positions
+                    )
+                    h = h + a
+                    h = h + apply_mlp(sp["mlp"], apply_norm(sp["ln2"], h, cfg), cfg)
+                    sites_h = fill_ring_kv(cache.attn, site, kv)
+                    ak.append(sites_h)
+                    site += 1
+                y, (cv, st) = apply_mamba(
+                    lp["mamba"], apply_norm(lp["ln"], h, cfg), cfg, return_state=True
+                )
+                h = h + y
+                convs.append(cv)
+                ssms.append(st.astype(cache.ssm.dtype))
+            conv_cache, ssm_cache = jnp.stack(convs), jnp.stack(ssms)
+            attn_cache = {key: jnp.stack([st[key] for st in ak]) for key in ak[0]}
+        elif cfg.family == "encdec":
+            mem = self._encode(params, batch)
+            ak, av, xk, xv = [], [], [], []
+            for i in range(cfg.num_layers):
+                lp = jax.tree.map(lambda x: x[i], params["dec_layers"])
+                a, kv = apply_attention(
+                    lp["attn"], apply_norm(lp["ln1"], h, cfg), cfg, positions=positions
+                )
+                h = h + a
+                xa, xkv = apply_attention(
+                    lp["xattn"], apply_norm(lp["ln_x"], h, cfg), cfg,
+                    positions=positions, mode="cross", kv_input=mem,
+                )
+                h = h + xa
+                h = h + apply_mlp(lp["mlp"], apply_norm(lp["ln2"], h, cfg), cfg)
+                ak.append(fill_ring_kv(cache.attn, i, kv))
+                xk.append(xkv["k"])
+                xv.append(xkv["v"])
+            attn_cache = {key: jnp.stack([st[key] for st in ak]) for key in ak[0]}
+            cross_cache = {"k": jnp.stack(xk), "v": jnp.stack(xv)}
+
+        logits = self._unembed(params, h[:, -1:, :])
+        return logits, DecodeCache(
+            index=jnp.int32(S),
+            attn=attn_cache,
+            conv=conv_cache,
+            ssm=ssm_cache,
+            cross=cross_cache,
+        )
+
+    # ------------------------------------------------------------ decode step
+    def decode_step(self, params, tokens, cache: DecodeCache) -> Tuple[jnp.ndarray, DecodeCache]:
+        """One new token per sequence.  tokens: (B, 1) int32."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        idx = cache.index
+        positions = jnp.broadcast_to(idx, (B, 1))
+        h = params["embed"][tokens].astype(_dtype(cfg))
+        h = shard(h, "batch", None, "embed")
+
+        attn_cache, conv_cache, ssm_cache = cache.attn, cache.conv, cache.ssm
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            def body(carry, xs):
+                hh, aux = carry
+                lp, lc = xs
+                hh, kv, a = self._dense_block(
+                    lp, hh, positions, cache=lc, index=idx
+                )
+                return (hh, aux + a), kv
+
+            if cfg.scan_layers:
+                (h, _), attn_cache = jax.lax.scan(
+                    body, (h, jnp.float32(0.0)), (params["layers"], cache.attn)
+                )
+            else:
+                per_layer = []
+                aux = jnp.float32(0.0)
+                for i in range(cfg.num_layers):
+                    lp = jax.tree.map(lambda x: x[i], params["layers"])
+                    lc = jax.tree.map(lambda x: x[i], cache.attn)
+                    (h, aux), kv = body((h, aux), (lp, lc))
+                    per_layer.append(kv)
+                attn_cache = {
+                    key: jnp.stack([kv[key] for kv in per_layer])
+                    for key in per_layer[0]
+                }
+        elif cfg.family == "ssm":
+            def body(hh, xs):
+                lp, cv, st = xs
+                y, ncv, nst = mamba_decode_step(
+                    lp["mamba"], apply_norm(lp["ln"], hh, cfg), cfg, cv, st
+                )
+                return hh + y, (ncv, nst)
+
+            if cfg.scan_layers:
+                h, (conv_cache, ssm_cache) = jax.lax.scan(
+                    body, h, (params["layers"], cache.conv, cache.ssm)
+                )
+            else:
+                ncs, nss = [], []
+                for i in range(cfg.num_layers):
+                    lp = jax.tree.map(lambda x: x[i], params["layers"])
+                    h, (ncv, nst) = body(h, (lp, cache.conv[i], cache.ssm[i]))
+                    ncs.append(ncv)
+                    nss.append(nst)
+                conv_cache, ssm_cache = jnp.stack(ncs), jnp.stack(nss)
+        elif cfg.family == "hybrid":
+            sp = params["shared_attn"]
+            site = 0
+            ncs, nss, per_site = [], [], []
+            for i in range(cfg.num_layers):
+                lp = jax.tree.map(lambda x: x[i], params["layers"])
+                if cfg.attn_every and i % cfg.attn_every == 0:
+                    lc = jax.tree.map(lambda x: x[site], cache.attn)
+                    a, kv = apply_attention(
+                        sp["attn"], apply_norm(sp["ln1"], h, cfg), cfg,
+                        positions=positions, cache=lc, cache_index=idx,
+                    )
+                    h = h + a
+                    h = h + apply_mlp(sp["mlp"], apply_norm(sp["ln2"], h, cfg), cfg)
+                    per_site.append(kv)
+                    site += 1
+                y, ncv, nst = mamba_decode_step(
+                    lp["mamba"], apply_norm(lp["ln"], h, cfg), cfg,
+                    cache.conv[i], cache.ssm[i],
+                )
+                h = h + y
+                ncs.append(ncv)
+                nss.append(nst)
+            conv_cache, ssm_cache = jnp.stack(ncs), jnp.stack(nss)
+            attn_cache = {
+                key: jnp.stack([kv[key] for kv in per_site]) for key in per_site[0]
+            }
+        elif cfg.family == "encdec":
+            def body(hh, xs):
+                lp, lc, xc = xs
+                a, kv = apply_attention(
+                    lp["attn"], apply_norm(lp["ln1"], hh, cfg), cfg,
+                    positions=positions, cache=lc, cache_index=idx,
+                )
+                hh = hh + a
+                xa, _ = apply_attention(
+                    lp["xattn"], apply_norm(lp["ln_x"], hh, cfg), cfg,
+                    positions=positions, mode="cross", cache=xc,
+                )
+                hh = hh + xa
+                hh = hh + apply_mlp(lp["mlp"], apply_norm(lp["ln2"], hh, cfg), cfg)
+                return hh, kv
+
+            if cfg.scan_layers:
+                h, attn_cache = jax.lax.scan(
+                    body, h, (params["dec_layers"], cache.attn, cache.cross)
+                )
+            else:
+                per_layer = []
+                for i in range(cfg.num_layers):
+                    lp = jax.tree.map(lambda x: x[i], params["dec_layers"])
+                    lc = jax.tree.map(lambda x: x[i], cache.attn)
+                    xc = jax.tree.map(lambda x: x[i], cache.cross)
+                    h, kv = body(h, (lp, lc, xc))
+                    per_layer.append(kv)
+                attn_cache = {
+                    key: jnp.stack([kv[key] for kv in per_layer])
+                    for key in per_layer[0]
+                }
+
+        logits = self._unembed(params, h)
+        return logits, DecodeCache(
+            index=idx + 1,
+            attn=attn_cache,
+            conv=conv_cache,
+            ssm=ssm_cache,
+            cross=cache.cross,
+        )

@@ -1,0 +1,264 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) layer.
+
+Implements the chunked matmul-rich SSD form for training/prefill (TPU/MXU
+friendly; optionally routed through the Pallas kernel) and the O(1)-state
+recurrent update for decode.
+
+Block layout (mamba2-130m / zamba2 style):
+  in_proj : d -> [z (d_inner), x (d_inner), B (G*N), C (G*N), dt (H)]
+  conv1d  : depthwise causal width-w over the (x | B | C) channels
+  SSD     : y = SSD(x·, dt, A, B, C) + D ⊙ x
+  gate    : y = RMSNormGated(y * silu(z))
+  out_proj: d_inner -> d
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import shard
+from .layers import ParamDecl
+
+__all__ = [
+    "mamba_decl",
+    "apply_mamba",
+    "mamba_decode_step",
+    "init_ssm_state",
+    "ssd_reference",
+]
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    H = cfg.ssm_nheads
+    P = cfg.ssm_headdim
+    G = cfg.ssm_ngroups
+    N = cfg.ssm_state
+    return di, H, P, G, N
+
+
+def mamba_decl(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    di, H, P, G, N = _dims(cfg)
+    conv_ch = di + 2 * G * N
+    return {
+        "in_proj": ParamDecl((d, 2 * di + 2 * G * N + H), ("embed", "d_inner")),
+        "conv_w": ParamDecl((cfg.ssm_conv, conv_ch), ("conv", "d_inner"), "normal", 0.2),
+        "conv_b": ParamDecl((conv_ch,), ("d_inner",), "zeros"),
+        "A_log": ParamDecl((H,), ("ssm_heads",), "a_log"),
+        "dt_bias": ParamDecl((H,), ("ssm_heads",), "dt_bias"),
+        "D": ParamDecl((H,), ("ssm_heads",), "ones"),
+        "norm_scale": ParamDecl((di,), ("d_inner",), "ones"),
+        "out_proj": ParamDecl((di, d), ("d_inner", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD — chunked reference (pure jnp; the Pallas kernel mirrors this)
+# ---------------------------------------------------------------------------
+
+def _segsum(x):
+    """x: (..., Q).  Returns (..., Q, Q) with out[i, j] = sum_{j < m <= i} x_m
+    for i >= j, -inf otherwise (log of the causal decay matrix)."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_reference(x, dt, A, B, C, chunk: int, initial_state=None, return_final_state=False):
+    """Chunked SSD (Algorithm in the Mamba-2 paper, matmul form).
+
+    x : (b, S, H, P)   inputs per head
+    dt: (b, S, H)      positive step sizes (softplus already applied)
+    A : (H,)           negative decay rates
+    B : (b, S, G, N)   input projections  (G groups, broadcast over H)
+    C : (b, S, G, N)   output projections
+    -> y: (b, S, H, P)  [, final_state (b, H, N, P)]
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    if S % chunk:
+        # Right-pad with dt=0 tokens: decay exp(0)=1 and zero dt-weighted
+        # contribution, so both outputs at real positions and the final state
+        # are exactly preserved (outputs at pad positions are sliced off).
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        out = ssd_reference(x, dt, A, B, C, chunk, initial_state, return_final_state)
+        if return_final_state:
+            return out[0][:, :S], out[1]
+        return out[:, :S]
+    nc, Q = S // chunk, chunk
+    rep = H // G
+
+    in_dtype = x.dtype
+    # SSD state recurrence is done in f32 (exp/cumsum are precision-critical)
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    B = B.astype(jnp.float32)
+    C = C.astype(jnp.float32)
+
+    xc = x.reshape(b, nc, Q, H, P)
+    dtc = dt.reshape(b, nc, Q, H)
+    Bc = B.reshape(b, nc, Q, G, N)
+    Cc = C.reshape(b, nc, Q, G, N)
+    dA = dtc * A  # (b, nc, Q, H), negative
+
+    # broadcast groups to heads
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (b, nc, Q, H, N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    # ---- intra-chunk (quadratic within the chunk) ---------------------------
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))          # (b, nc, H, Q, Q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh)       # (b, nc, H, Q, Q)
+    y_intra = jnp.einsum(
+        "bchqk,bchqk,bckh,bckhp->bcqhp", scores, L, dtc, xc
+    )
+
+    # ---- chunk states ---------------------------------------------------------
+    dA_cum = jnp.cumsum(dA, axis=2)                          # (b, nc, Q, H)
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)    # (b, nc, Q, H)
+    states = jnp.einsum(
+        "bcqh,bcqh,bcqhn,bcqhp->bchnp", decay_to_end, dtc, Bh, xc
+    )                                                        # (b, nc, H, N, P)
+
+    # ---- inter-chunk recurrence (scan over chunks) ----------------------------
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])               # (b, nc, H)
+
+    def step(carry, inp):
+        s_prev = carry                                       # (b, H, N, P)
+        s_c, g_c = inp                                       # state, decay of chunk c
+        s_new = s_prev * g_c[..., None, None] + s_c
+        return s_new, s_prev
+
+    init = (
+        jnp.zeros((b, H, N, P), x.dtype)
+        if initial_state is None
+        else initial_state.astype(x.dtype)
+    )
+    final_state, prev_states = jax.lax.scan(
+        step,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # (b, nc, H, N, P)
+
+    # ---- inter-chunk output ----------------------------------------------------
+    in_decay = jnp.exp(dA_cum)                               # decay from chunk start
+    y_inter = jnp.einsum(
+        "bcqhn,bcqh,bchnp->bcqhp", Ch, in_decay, prev_states
+    )
+    y = (y_intra + y_inter).reshape(b, S, H, P).astype(in_dtype)
+    if return_final_state:
+        return y, final_state
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Layer forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _split_proj(z_all, cfg: ModelConfig):
+    di, H, P, G, N = _dims(cfg)
+    z, xBC, dt = jnp.split(z_all, [di, 2 * di + 2 * G * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b, conv_state=None):
+    """Depthwise causal conv1d.  xBC: (B, S, Ch); w: (W, Ch).
+    If conv_state (B, W-1, Ch) is given, it is prepended (decode/streaming)."""
+    W = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xBC.shape[0], W - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xBC], axis=1)                 # (B, S+W-1, Ch)
+    out = sum(xp[:, i : i + xBC.shape[1], :] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1) :, :] if W > 1 else None
+    return out + b, new_state
+
+
+def _gated_rmsnorm(y, z, scale, eps):
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (y.astype(jnp.float32) * jax.lax.rsqrt(var + eps) * scale).astype(y.dtype)
+
+
+def apply_mamba(p, x, cfg: ModelConfig, conv_state=None, ssm_state=None, return_state=False):
+    """Full-sequence forward.  x: (B, S, D) -> y  or  (y, (conv_state, ssm_state))
+    when ``return_state`` (used by prefill to seed the decode cache)."""
+    B, S, D = x.shape
+    di, H, P, G, N = _dims(cfg)
+    zall = x @ p["in_proj"]
+    z, xBC, dt = _split_proj(zall, cfg)
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    xs, Bm, Cm = jnp.split(xBC, [di, di + G * N], axis=-1)
+    xs = shard(xs.reshape(B, S, H, P), "batch", None, "ssm_heads", "ssm_headdim")
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt + p["dt_bias"])                  # (B, S, H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if cfg.use_pallas and not return_state:
+        from ..kernels import ops as kops
+        y = kops.ssd(xs, dt, A, Bm, Cm, chunk=cfg.ssd_chunk)
+        final_state = None
+    else:
+        y, final_state = ssd_reference(
+            xs, dt, A, Bm, Cm, cfg.ssd_chunk,
+            initial_state=ssm_state, return_final_state=True,
+        )
+    y = y + p["D"][None, None, :, None] * xs
+    y = y.reshape(B, S, di)
+    y = _gated_rmsnorm(y, z, p["norm_scale"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, (new_conv, final_state)
+    return out
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di, H, P, G, N = _dims(cfg)
+    conv_ch = di + 2 * G * N
+    return (
+        jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        jnp.zeros((batch, H, N, P), dtype),
+    )
+
+
+def mamba_decode_step(p, x, cfg: ModelConfig, conv_state, ssm_state):
+    """Single-token recurrent update.  x: (B, 1, D).
+    conv_state: (B, W-1, Ch); ssm_state: (B, H, N, P)."""
+    B = x.shape[0]
+    di, H, P, G, N = _dims(cfg)
+    zall = x @ p["in_proj"]
+    z, xBC, dt = _split_proj(zall, cfg)
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    xs, Bm, Cm = jnp.split(xBC, [di, di + G * N], axis=-1)
+    xs = xs.reshape(B, H, P)
+    Bm = Bm.reshape(B, G, N)
+    Cm = Cm.reshape(B, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)                          # (B, H, N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    dt1 = jax.nn.softplus(dt[:, 0] + p["dt_bias"])            # (B, H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    decay = jnp.exp(dt1 * A)[..., None, None]                 # (B, H, 1, 1)
+    upd = (dt1[..., None, None] * Bh.astype(jnp.float32)[..., :, None]) * xs.astype(jnp.float32)[..., None, :]
+    new_state = ssm_state.astype(jnp.float32) * decay + upd   # (B, H, N, P) f32
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), new_state)
+    y = y.astype(x.dtype) + p["D"][None, :, None].astype(x.dtype) * xs
+    y = y.reshape(B, 1, di)
+    y = _gated_rmsnorm(y, z, p["norm_scale"], cfg.norm_eps)
+    out = (y @ p["out_proj"]).astype(x.dtype)
+    return out, new_conv, new_state.astype(ssm_state.dtype)

@@ -1,0 +1,209 @@
+"""Roofline analysis from compiled dry-run artifacts (spec deliverable (g)).
+
+Per (arch × shape × mesh) we derive three terms from the compiled module:
+
+  compute   = HLO_FLOPs_per_device / peak_FLOP/s            (197 TF bf16, v5e)
+  memory    = HLO_bytes_per_device / HBM_bw                 (819 GB/s)
+  collective= collective_bytes_per_device / link_bw         (~50 GB/s ICI)
+
+``cost_analysis()`` gives FLOPs/bytes of the per-device partitioned program.
+Collective bytes are NOT in cost_analysis: we parse the compiled HLO text and
+sum the *output* shape bytes of every all-gather / all-reduce / reduce-scatter
+/ all-to-all / collective-permute (output size ~= wire traffic per device for
+these ops; all-reduce moves ~2x in a ring, folded into a method note, not the
+numbers).  MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (inference) and
+the useful-compute ratio MODEL_FLOPS/HLO_FLOPs catches remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+__all__ = ["HWSpec", "V5E", "collective_bytes", "roofline_terms", "RooflineReport"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HWSpec:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12    # bf16 per chip
+    hbm_bw: float = 819e9         # bytes/s per chip
+    link_bw: float = 50e9         # bytes/s per ICI link
+
+
+V5E = HWSpec()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum bytes over every `dtype[dims]` occurrence in a shape string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+_OP_LINE_RE = re.compile(
+    r"=\s*(?P<shape>\([^=]*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+(?P<op>[a-z0-9-]+)\("
+)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind *output* bytes summed over the module.
+
+    Matches both sync ops (`all-gather(...)`) and async starts
+    (`all-gather-start(...)`); `-done` ops are ignored (same payload)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_LINE_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        for kind in _COLLECTIVES:
+            if op == kind or op == kind + "-start":
+                shape = m.group("shape")
+                if shape.startswith("("):
+                    # async start: tuple (operand, result, ...) — count the
+                    # largest member once (all-gather: result; all-reduce:
+                    # either; avoids double counting operand+result)
+                    val = max(
+                        (_shape_bytes(s) for s in re.findall(r"[a-z0-9]+\[[0-9,]*\]", shape)),
+                        default=0,
+                    )
+                else:
+                    val = _shape_bytes(shape)
+                out[kind] += val
+                break
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_per_device: float
+    useful_ratio: float
+    memory_analysis: Optional[str] = None
+    # XLA:CPU cost_analysis counts while-loop (lax.scan) bodies ONCE; for
+    # scan-over-layers models the table values above are loop-corrected by
+    # linear extrapolation from 1-layer/2-layer unrolled compiles.  The raw
+    # (uncorrected) per-device counts are kept for reference:
+    loop_corrected: bool = False
+    raw_flops_per_device: Optional[float] = None
+    raw_bytes_per_device: Optional[float] = None
+    raw_coll_bytes_per_device: Optional[float] = None
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+    def save(self, path: str):
+        with open(path, "w") as f:
+            json.dump(self.as_dict(), f, indent=2, default=str)
+
+    @staticmethod
+    def load(path: str) -> "RooflineReport":
+        with open(path) as f:
+            return RooflineReport(**json.load(f))
+
+    def row(self) -> str:
+        return (
+            f"{self.arch:22s} {self.shape:12s} {self.mesh:10s} "
+            f"comp={self.compute_s*1e3:9.3f}ms mem={self.memory_s*1e3:9.3f}ms "
+            f"coll={self.collective_s*1e3:9.3f}ms -> {self.bottleneck:10s} "
+            f"useful={self.useful_ratio:6.1%}"
+        )
+
+
+def counts_from_artifacts(cost_analysis: Dict[str, float], hlo_text: str) -> Dict[str, float]:
+    """(flops, bytes, collective bytes) per device from a compiled artifact."""
+    coll = collective_bytes(hlo_text)
+    return {
+        "flops": float(cost_analysis.get("flops", 0.0)),
+        "bytes": float(
+            cost_analysis.get("bytes accessed", cost_analysis.get("bytes_accessed", 0.0))
+        ),
+        "coll": float(sum(coll.values())),
+        "coll_breakdown": coll,
+    }
+
+
+def roofline_terms(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    n_devices: int,
+    cost_analysis: Dict[str, float],
+    hlo_text: str,
+    model_flops_total: float,
+    hw: HWSpec = V5E,
+    memory_analysis: Optional[str] = None,
+    corrected_counts: Optional[Dict[str, float]] = None,
+) -> RooflineReport:
+    raw = counts_from_artifacts(cost_analysis, hlo_text)
+    use = corrected_counts or raw
+    flops = use["flops"]
+    bytes_accessed = use["bytes"]
+    coll = use.get("coll_breakdown", raw["coll_breakdown"])
+    coll_total = use["coll"]
+
+    compute_s = flops / hw.peak_flops
+    memory_s = bytes_accessed / hw.hbm_bw
+    collective_s = coll_total / hw.link_bw
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+
+    model_pd = model_flops_total / n_devices
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        n_devices=n_devices,
+        flops_per_device=flops,
+        bytes_per_device=bytes_accessed,
+        coll_bytes_per_device=coll_total,
+        coll_breakdown={k: int(v) for k, v in coll.items()},
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops_per_device=model_pd,
+        useful_ratio=(model_pd / flops) if flops else 0.0,
+        memory_analysis=memory_analysis,
+        loop_corrected=corrected_counts is not None,
+        raw_flops_per_device=raw["flops"],
+        raw_bytes_per_device=raw["bytes"],
+        raw_coll_bytes_per_device=raw["coll"],
+    )

@@ -1,0 +1,11 @@
+from .profiles import HardwareClass, HW_CLASSES, step_costs, request_latency_ms, accuracy_proxy
+from .zoo import ServiceSpec, ModelZoo, variant_ladder, build_cluster_spec
+from .engine import ServingEngine, make_serve_step, make_prefill_step, GenerationResult
+from .continuous import ContinuousBatcher, Request
+
+__all__ = [
+    "HardwareClass", "HW_CLASSES", "step_costs", "request_latency_ms", "accuracy_proxy",
+    "ServiceSpec", "ModelZoo", "variant_ladder", "build_cluster_spec",
+    "ServingEngine", "make_serve_step", "make_prefill_step", "GenerationResult",
+    "ContinuousBatcher", "Request",
+]

@@ -1,0 +1,146 @@
+"""Continuous batching — the production serving pattern the paper's
+per-frame scheduler feeds into.
+
+A fixed pool of ``n_slots`` decode slots runs in lock-step; new requests are
+prefLilled individually and *admitted* into free slots without stopping the
+running batch; finished sequences vacate their slot.  Per-slot positions are
+handled by ``vmap``-ing the (already-validated) single-sequence decode step
+over a slot-major cache pytree, so every slot carries its own cache index —
+no change to the core model decode path.
+
+This composes with GUS exactly as the paper intends: the scheduler assigns
+(request -> server, variant); each server runs one ContinuousBatcher per
+hosted variant and admits its assigned requests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import DecodeCache, Model
+
+__all__ = ["ContinuousBatcher", "Request"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _slotify(cache: DecodeCache) -> DecodeCache:
+    """Prepend a slot axis to every leaf (the inner batch=1 axis is kept —
+    the vmapped decode sees exactly the cache a batch-1 model expects)."""
+    return jax.tree.map(lambda x: x[None], cache)
+
+
+class ContinuousBatcher:
+    """Fixed-slot continuous batching around a Model.
+
+    Slot-major cache layout: every leaf is (n_slots, ...) where the inner
+    model sees batch=1.  ``step()`` vmaps decode over slots; ``admit()``
+    prefills one request (batch=1) and writes its cache into a free slot.
+    """
+
+    def __init__(self, model: Model, params, n_slots: int = 4, max_len: int = 256):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.requests: List[Optional[Request]] = [None] * n_slots
+        self._last_tok = jnp.zeros((n_slots, 1, 1), jnp.int32)
+
+        # slot-major empty cache: build a batch=1 cache and stack n_slots copies
+        c1 = _slotify(model.init_cache(1, max_len))
+        self._cache = jax.tree.map(
+            lambda x: jnp.concatenate([x] * n_slots, axis=0), c1
+        )
+
+        def single_decode(params, tok, cache):
+            # cache leaves carry inner batch=1; index is per-slot scalar
+            logits, new_cache = model.decode_step(params, tok, cache)
+            nxt = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)[:, None]
+            return nxt, new_cache
+
+        self._vstep = jax.jit(
+            jax.vmap(single_decode, in_axes=(None, 0, 0), out_axes=(0, 0))
+        )
+        self._prefill = jax.jit(model.prefill)
+
+    def reset(self):
+        """Clear all slots (keeps compiled step functions — cheap reuse)."""
+        self.requests = [None] * self.n_slots
+        self._last_tok = jnp.zeros((self.n_slots, 1, 1), jnp.int32)
+        self._cache = jax.tree.map(jnp.zeros_like, self._cache)
+        self._cache = dataclasses.replace(
+            self._cache, index=jnp.zeros((self.n_slots,), jnp.int32)
+        )
+
+    # ------------------------------------------------------------------ admin
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.requests) if r is None]
+
+    def active(self) -> List[Request]:
+        return [r for r in self.requests if r is not None]
+
+    def admit(self, req: Request) -> bool:
+        free = self.free_slots()
+        if not free:
+            return False
+        slot = free[0]
+        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
+        cache1 = self.model.init_cache(1, self.max_len)
+        logits, cache1 = self._prefill(self.params, batch, cache1)
+        tok = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)[:, None]
+        req.generated.append(int(tok[0, 0]))
+
+        slot_cache = _slotify(cache1)
+        self._cache = jax.tree.map(
+            lambda full, one: full.at[slot].set(one[0]), self._cache, slot_cache
+        )
+        self._last_tok = self._last_tok.at[slot].set(tok)
+        self.requests[slot] = req
+        return True
+
+    # ------------------------------------------------------------------ step
+    def step(self):
+        """One lock-step decode across all occupied slots."""
+        if not self.active():
+            return
+        nxt, self._cache = self._vstep(self.params, self._last_tok, self._cache)
+        self._last_tok = nxt
+        for i, r in enumerate(self.requests):
+            if r is None or r.done:
+                continue
+            r.generated.append(int(nxt[i, 0, 0]))
+            if len(r.generated) >= r.max_new_tokens:
+                r.done = True
+                self.requests[i] = None  # vacate; cache slot is reusable
+
+    # ------------------------------------------------------------------ drive
+    def run(self, incoming: List[Request], max_steps: int = 10_000) -> Dict[int, List[int]]:
+        """Serve a queue to completion; admits whenever slots free up."""
+        queue = list(incoming)
+        out: Dict[int, List[int]] = {}
+        steps = 0
+        pending = {r.rid: r for r in queue}
+        while (queue or self.active()) and steps < max_steps:
+            while queue and self.free_slots():
+                self.admit(queue.pop(0))
+            self.step()
+            steps += 1
+            for rid, r in list(pending.items()):
+                if r.done:
+                    out[rid] = r.generated
+                    del pending[rid]
+        # collect any still-active at step limit
+        for r in self.active():
+            out.setdefault(r.rid, r.generated)
+        return out

@@ -1,0 +1,98 @@
+"""Analytic performance profiles: ModelConfig -> (FLOPs, bytes) -> latency.
+
+This is the bridge between the JAX substrate and the paper's scheduler: the
+processing-delay table T^proc_{jkl} that GUS consumes is *derived from the
+models themselves* — either analytically (this module), from the compiled
+dry-run cost analysis (``repro.roofline``), or measured live (the serve_edge
+example).  Hardware classes model the paper's heterogeneous edge/cloud tiers
+with TPU-v5e-like constants."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from ..configs.base import ModelConfig
+
+__all__ = ["HardwareClass", "HW_CLASSES", "step_costs", "request_latency_ms", "accuracy_proxy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareClass:
+    name: str
+    chips: int
+    peak_flops: float = 197e12     # bf16 FLOP/s per chip (TPU v5e)
+    hbm_bw: float = 819e9          # bytes/s per chip
+    link_bw: float = 50e9          # ICI bytes/s per link
+
+
+# The paper's three edge classes + a cloud tier, in chip counts.
+HW_CLASSES: Dict[str, HardwareClass] = {
+    "edge-1": HardwareClass("edge-1", 1),
+    "edge-4": HardwareClass("edge-4", 4),
+    "edge-8": HardwareClass("edge-8", 8),
+    "cloud-256": HardwareClass("cloud-256", 256),
+}
+
+
+def step_costs(cfg: ModelConfig, batch: int, seq: int, mode: str) -> Dict[str, float]:
+    """Approximate FLOPs and HBM bytes for one step.
+
+    mode: 'prefill' (process `seq` tokens) or 'decode' (1 token, cache len=seq).
+    Uses the 6·N (train) / 2·N (inference) rules on *active* params plus
+    attention terms; bytes = params + KV-cache traffic."""
+    n_act = cfg.n_active_params()
+    p_bytes = n_act * 2  # bf16
+    hd, H, KV = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    L = cfg.num_layers
+    if mode == "prefill":
+        toks = batch * seq
+        flops = 2.0 * n_act * toks
+        if not cfg.is_attention_free:
+            flops += 2.0 * 2.0 * L * H * hd * batch * seq * seq / 2  # causal attn
+        bytes_ = p_bytes + toks * cfg.d_model * 2 * L
+    else:  # decode
+        toks = batch
+        flops = 2.0 * n_act * toks
+        cache_tokens = min(seq, cfg.sliding_window or seq)
+        if cfg.family in ("ssm", "hybrid"):
+            state = cfg.num_layers * cfg.ssm_nheads * cfg.ssm_state * cfg.ssm_headdim
+            cache_bytes = batch * state * 2
+            flops += 4.0 * batch * state
+        else:
+            cache_bytes = batch * cache_tokens * KV * hd * 2 * L * 2
+            flops += 2.0 * 2.0 * L * H * hd * batch * cache_tokens
+        bytes_ = p_bytes + cache_bytes
+    return {"flops": flops, "bytes": bytes_}
+
+
+def request_latency_ms(
+    cfg: ModelConfig,
+    hw: HardwareClass,
+    prompt_tokens: int = 128,
+    gen_tokens: int = 32,
+    batch: int = 1,
+    efficiency: float = 0.5,
+) -> float:
+    """Roofline latency of one request = prefill + gen_tokens decode steps."""
+    pf = step_costs(cfg, batch, prompt_tokens, "prefill")
+    t_pf = max(
+        pf["flops"] / (hw.chips * hw.peak_flops),
+        pf["bytes"] / (hw.chips * hw.hbm_bw),
+    )
+    t_dec = 0.0
+    dc = step_costs(cfg, batch, prompt_tokens + gen_tokens, "decode")
+    t_dec = gen_tokens * max(
+        dc["flops"] / (hw.chips * hw.peak_flops),
+        dc["bytes"] / (hw.chips * hw.hbm_bw),
+    )
+    return 1000.0 * (t_pf + t_dec) / efficiency
+
+
+def accuracy_proxy(n_params: int, a_max: float = 95.0, a_min: float = 35.0) -> float:
+    """Scaling-law accuracy proxy, calibrated so the SqueezeNet/GoogleNet gap
+    of the paper's testbed is reproduced by the small/large zoo variants:
+    ~1M params -> ~a_min, ~100B -> ~a_max (monotone, diminishing returns)."""
+    import math
+
+    decades = max(math.log10(max(n_params, 1) / 1e6), 0.0)
+    return a_max - (a_max - a_min) * math.exp(-0.9 * decades)

@@ -1,0 +1,151 @@
+"""Logical-axis sharding (MaxText-style) with a divisibility fallback.
+
+Model code annotates tensors with *logical* axis names ("vocab", "heads",
+"ff", "experts", "batch", ...).  A rules table maps logical axes to mesh axes;
+at resolve time any mesh axis that does not evenly divide the dim is dropped
+(e.g. kv_heads=4 on a model=16 mesh axis -> replicated), so the same model
+code lowers on every mesh without per-arch special cases.
+
+Activation constraints go through a context (``sharding_ctx``) so the model
+code stays mesh-agnostic: outside a context they are no-ops (CPU tests), and
+under ``use_sharding(mesh, rules)`` they become ``with_sharding_constraint``.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "DEFAULT_RULES",
+    "resolve_spec",
+    "shard",
+    "use_sharding",
+    "current_ctx",
+    "spec_for_shape",
+    "named_sharding_for",
+]
+
+MeshAxes = Union[str, Tuple[str, ...], None]
+
+# Logical axis -> mesh axis/axes.  "pod" composes with "data" for pure-DP
+# across pods (DCN-friendly: only gradient/infeed collectives cross pods).
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "vocab": "model",
+    "embed": None,            # d_model replicated (Megatron-style)
+    "heads": "model",         # query heads
+    "kv_heads": "model",      # falls back to replication when kv < mesh
+    "head_dim": None,
+    "ff": "model",
+    "experts": "model",       # expert parallelism
+    "expert_ff": None,
+    "seq": None,              # no context parallelism in the baseline
+    "kv_seq": None,
+    "d_inner": "model",       # mamba inner channels
+    "ssm_heads": "model",
+    "ssm_headdim": None,   # fallback when ssm_heads cannot divide the mesh
+    "state": None,
+    "conv": None,
+    "layers": None,           # stacked-scan leading axis
+    "capacity": None,
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Dict[str, MeshAxes] = DEFAULT_RULES
+
+
+_ctx = _Ctx()
+
+
+def current_ctx() -> Tuple[Optional[Mesh], Dict[str, MeshAxes]]:
+    return _ctx.mesh, _ctx.rules
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh, rules: Optional[Dict[str, MeshAxes]] = None):
+    """Activate activation-sharding constraints for model code in scope."""
+    prev = (_ctx.mesh, _ctx.rules)
+    _ctx.mesh = mesh
+    _ctx.rules = dict(DEFAULT_RULES, **(rules or {}))
+    try:
+        yield
+    finally:
+        _ctx.mesh, _ctx.rules = prev
+
+
+def _axis_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
+    return size
+
+
+def resolve_spec(
+    shape: Sequence[int],
+    logical: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Optional[Dict[str, MeshAxes]] = None,
+) -> P:
+    """Logical names -> PartitionSpec, dropping non-dividing/absent mesh axes."""
+    rules = rules or _ctx.rules or DEFAULT_RULES
+    assert len(shape) == len(logical), (shape, logical)
+    mesh_axes_present = set(mesh.axis_names)
+    out, used = [], set()
+    for dim, name in zip(shape, logical):
+        mapped = rules.get(name) if name else None
+        if mapped is None:
+            out.append(None)
+            continue
+        axes = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+        keep = []
+        size_so_far = 1
+        for a in axes:
+            if a not in mesh_axes_present or a in used:
+                continue
+            a_size = _axis_size(mesh, a)
+            if dim % (size_so_far * a_size) == 0:
+                keep.append(a)
+                size_so_far *= a_size
+        used.update(keep)
+        if not keep:
+            out.append(None)
+        elif len(keep) == 1:
+            out.append(keep[0])
+        else:
+            out.append(tuple(keep))
+    # trim trailing Nones (cosmetic)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def spec_for_shape(shape, logical, mesh=None, rules=None) -> P:
+    mesh = mesh or _ctx.mesh
+    if mesh is None:
+        return P()
+    return resolve_spec(shape, logical, mesh, rules)
+
+
+def named_sharding_for(shape, logical, mesh, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(shape, logical, mesh, rules))
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Annotate an activation with logical axes; no-op outside use_sharding."""
+    mesh = _ctx.mesh
+    if mesh is None:
+        return x
+    spec = resolve_spec(np.shape(x), logical, mesh, _ctx.rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,11 @@
+from .optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update, cosine_schedule
+from .train_loop import TrainState, cross_entropy, make_loss_fn, make_train_step, make_eval_step, init_state
+from .data import SyntheticLM, batch_iterator, make_batch, vision_stub_batch, audio_stub_batch
+from .checkpoint import save_checkpoint, restore_checkpoint
+
+__all__ = [
+    "AdamWConfig", "AdamWState", "adamw_init", "adamw_update", "cosine_schedule",
+    "TrainState", "cross_entropy", "make_loss_fn", "make_train_step", "make_eval_step",
+    "init_state", "SyntheticLM", "batch_iterator", "make_batch",
+    "vision_stub_batch", "audio_stub_batch", "save_checkpoint", "restore_checkpoint",
+]

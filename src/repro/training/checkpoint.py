@@ -1,0 +1,68 @@
+"""Sharding-aware checkpointing (npz-based, offline-friendly).
+
+Saves the flattened param/opt pytree with '/'-joined key paths; restores into
+the same tree structure.  On a real multi-host fleet each host would write its
+addressable shards — here (single process) we gather to host and write one
+file, but the path layout (one array per key) matches what a tensorstore
+backend would use, so swapping the IO layer does not touch callers."""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "tree_paths"]
+
+
+def tree_paths(tree) -> Dict[str, Any]:
+    flat = {}
+
+    def visit(path, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                visit(f"{path}/{k}" if path else str(k), v)
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                visit(f"{path}/{i}", v)
+        elif node is None:
+            pass
+        else:
+            flat[path] = node
+
+    visit("", tree)
+    return flat
+
+
+def save_checkpoint(path: str, tree, step: int = 0) -> str:
+    flat = {k: np.asarray(v) for k, v in tree_paths(tree).items()}
+    flat["__step__"] = np.int64(step)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **flat)
+    return path
+
+
+def restore_checkpoint(path: str, like):
+    """Restore into the structure of ``like`` (a template pytree)."""
+    if not path.endswith(".npz"):
+        path += ".npz"
+    data = np.load(path)
+    flat_like = tree_paths(like)
+    missing = set(flat_like) - set(data.files)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+
+    def rebuild(path, node):
+        if isinstance(node, dict):
+            return {k: rebuild(f"{path}/{k}" if path else str(k), v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = type(node)
+            vals = [rebuild(f"{path}/{i}", v) for i, v in enumerate(node)]
+            return t(vals) if t is not tuple else tuple(vals)
+        if node is None:
+            return None
+        return jax.numpy.asarray(data[path])
+
+    out = rebuild("", like)
+    return out, int(data["__step__"]) if "__step__" in data.files else 0

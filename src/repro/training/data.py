@@ -1,0 +1,111 @@
+"""Deterministic synthetic data pipeline.
+
+Two sources:
+
+* ``SyntheticLM`` — a seeded Markov-ish token stream with learnable structure
+  (n-gram transitions + copy motifs) so tiny models show real loss curves;
+  used by the end-to-end training example and the serve-edge accuracy evals.
+* ``batch_iterator`` — shardable batches (tokens, labels) with host-side
+  prefetch; labels are next-token shifted.
+
+Also provides modality stubs per the assignment carve-out:
+``vision_stub_batch`` / ``audio_stub_batch`` hand precomputed patch/frame
+embeddings of the right shape (the ViT/conv frontends are NOT implemented).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+__all__ = ["SyntheticLM", "batch_iterator", "make_batch", "vision_stub_batch", "audio_stub_batch"]
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    """Order-1 Markov chain over a vocab with periodic copy motifs — enough
+    structure that cross-entropy falls well below uniform for a trained model.
+
+    ``alpha`` controls difficulty: smaller -> peakier transitions -> higher
+    achievable next-token accuracy (the serve_edge example uses an easy task
+    so its tiny models separate within a few hundred CPU steps)."""
+
+    vocab_size: int
+    seed: int = 0
+    motif_period: int = 17
+    motif_period2: Optional[int] = None   # second, longer-range copy motif
+    alpha: float = 0.05
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        V = min(self.vocab_size, 512)  # transition table kept small
+        self._V = V
+        raw = rng.dirichlet(np.full(V, self.alpha), size=V).astype(np.float32)
+        self._trans = raw / raw.sum(-1, keepdims=True)
+
+    def sample(self, rng: np.random.Generator, batch: int, seq: int) -> np.ndarray:
+        V = self._V
+        out = np.empty((batch, seq), np.int32)
+        state = rng.integers(0, V, size=batch)
+        for t in range(seq):
+            p2 = self.motif_period2
+            if p2 and t % p2 == 0 and t >= p2:
+                state = out[:, t - p2]                 # long-range copy motif
+            elif t % self.motif_period == 0 and t > 0:
+                state = out[:, t - self.motif_period]  # copy motif
+            else:
+                u = rng.random(batch)
+                cdf = np.cumsum(self._trans[state], axis=-1)
+                state = (u[:, None] < cdf).argmax(-1)
+            out[:, t] = state
+        return out % self.vocab_size
+
+
+def make_batch(
+    cfg: ModelConfig,
+    batch: int,
+    seq: int,
+    rng: np.random.Generator,
+    source: Optional[SyntheticLM] = None,
+) -> Dict[str, jnp.ndarray]:
+    """One training batch for any family (adds modality stubs as needed)."""
+    src = source or SyntheticLM(cfg.vocab_size)
+    toks = src.sample(rng, batch, seq + 1)
+    out: Dict[str, jnp.ndarray] = {
+        "tokens": jnp.asarray(toks[:, :-1]),
+        "labels": jnp.asarray(toks[:, 1:]),
+    }
+    if cfg.family == "vlm" and cfg.num_patches:
+        out.update(vision_stub_batch(cfg, batch, seq, rng))
+    if cfg.family == "encdec":
+        out.update(audio_stub_batch(cfg, batch, rng))
+    return out
+
+
+def vision_stub_batch(cfg: ModelConfig, batch: int, seq: int, rng) -> Dict[str, jnp.ndarray]:
+    """STUB vision frontend: precomputed patch embeddings + their positions
+    in the token stream (first num_patches slots by convention)."""
+    P = min(cfg.num_patches, seq)
+    emb = rng.standard_normal((batch, P, cfg.d_model)).astype(np.float32) * 0.02
+    pos = np.broadcast_to(np.arange(P, dtype=np.int32), (batch, P)).copy()
+    return {"vision_embeds": jnp.asarray(emb), "vision_positions": jnp.asarray(pos)}
+
+
+def audio_stub_batch(cfg: ModelConfig, batch: int, rng) -> Dict[str, jnp.ndarray]:
+    """STUB audio frontend: precomputed mel/conv frame embeddings."""
+    T = cfg.enc_seq_len
+    emb = rng.standard_normal((batch, T, cfg.d_model)).astype(np.float32) * 0.02
+    return {"enc_embeds": jnp.asarray(emb)}
+
+
+def batch_iterator(
+    cfg: ModelConfig, batch: int, seq: int, seed: int = 0
+) -> Iterator[Dict[str, jnp.ndarray]]:
+    src = SyntheticLM(cfg.vocab_size, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    while True:
+        yield make_batch(cfg, batch, seq, rng, src)

@@ -1,0 +1,94 @@
+"""AdamW + gradient clipping + LR schedules, in pure JAX (no optax dependency).
+
+Optimizer state is a pytree mirroring the params, so it inherits the params'
+sharding (m/v get the same PartitionSpec as their weight)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update", "cosine_schedule"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamWState(step=jnp.int32(0), m=zeros, v=jax.tree.map(jnp.copy, zeros))
+
+
+def cosine_schedule(cfg: AdamWConfig) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        prog = jnp.clip(
+            (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0,
+            1.0,
+        )
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+    return sched
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def adamw_update(
+    grads, state: AdamWState, params, cfg: AdamWConfig
+) -> Tuple[Any, AdamWState, dict]:
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = cosine_schedule(cfg)(step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        a, b, c = upd(p, g, m, v)
+        new_p.append(a)
+        new_m.append(b)
+        new_v.append(c)
+    return (
+        jax.tree.unflatten(tdef, new_p),
+        AdamWState(step, jax.tree.unflatten(tdef, new_m), jax.tree.unflatten(tdef, new_v)),
+        {"grad_norm": gnorm, "lr": lr},
+    )

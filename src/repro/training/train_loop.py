@@ -1,0 +1,68 @@
+"""Training loop: loss, train_step/eval_step builders (jit/pjit-ready)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.model import Model
+from .optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+__all__ = ["TrainState", "cross_entropy", "make_loss_fn", "make_train_step", "make_eval_step", "init_state"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray, mask=None) -> jnp.ndarray:
+    """Mean next-token CE in nats.  logits: (B, S, V) f32, labels: (B, S)."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()
+
+
+def make_loss_fn(model: Model):
+    cfg = model.cfg
+
+    def loss_fn(params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        logits, aux = model.forward(params, batch)
+        ce = cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+        loss = ce + cfg.router_aux_weight * aux.get("router_aux", 0.0)
+        return loss, {"ce": ce, **aux}
+
+    return loss_fn
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig):
+    loss_fn = make_loss_fn(model)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict[str, jnp.ndarray]]:
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(state.params, batch)
+        new_params, new_opt, om = adamw_update(grads, state.opt, state.params, opt_cfg)
+        metrics = {"loss": loss, **aux, **om}
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    loss_fn = make_loss_fn(model)
+
+    def eval_step(params, batch):
+        loss, aux = loss_fn(params, batch)
+        return {"loss": loss, **aux}
+
+    return eval_step
+
+
+def init_state(model: Model, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params, adamw_init(params))

@@ -1,0 +1,97 @@
+"""Per-architecture smoke tests (spec requirement (f)).
+
+Each assigned architecture is instantiated as a REDUCED same-family variant
+(2 layers, d_model <= 512, <= 4 experts) and runs one forward + one train
+step on CPU, asserting output shapes and absence of NaNs.  Decode-capable
+archs also run a one-token serve step against a fresh cache."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduce_for_smoke
+from repro.models import Model
+from repro.training import AdamWConfig, init_state, make_batch, make_train_step
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch(request):
+    return request.param
+
+
+def _smoke_cfg(arch_id):
+    return reduce_for_smoke(get_config(arch_id))
+
+
+def test_forward_shapes_and_finite(arch):
+    cfg = _smoke_cfg(arch)
+    model = Model(cfg)
+    rng = np.random.default_rng(0)
+    batch = make_batch(cfg, 2, 32, rng)
+    params = model.init(jax.random.PRNGKey(0))
+    logits, aux = jax.jit(model.forward)(params, batch)
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all(), f"{arch}: non-finite logits"
+    assert np.isfinite(float(aux["router_aux"]))
+
+
+def test_one_train_step(arch):
+    cfg = _smoke_cfg(arch)
+    model = Model(cfg)
+    rng = np.random.default_rng(1)
+    batch = make_batch(cfg, 2, 32, rng)
+    state = init_state(model, jax.random.PRNGKey(1))
+    step = jax.jit(make_train_step(model, AdamWConfig(total_steps=10, warmup_steps=2)))
+    state2, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"])), f"{arch}: loss not finite"
+    assert float(metrics["grad_norm"]) > 0
+    # params actually changed
+    l0 = jax.tree.leaves(state.params)[0]
+    l1 = jax.tree.leaves(state2.params)[0]
+    assert not np.allclose(np.asarray(l0), np.asarray(l1))
+
+
+def test_serve_step(arch):
+    cfg = _smoke_cfg(arch)
+    model = Model(cfg)
+    rng = np.random.default_rng(2)
+    batch = make_batch(cfg, 2, 32, rng)
+    params = model.init(jax.random.PRNGKey(2))
+    cache = model.init_cache(2, 48)
+    last, cache = jax.jit(model.prefill)(params, batch, cache)
+    assert last.shape == (2, 1, cfg.vocab_size)
+    tok = jnp.argmax(last, -1).astype(jnp.int32)
+    logits, cache = jax.jit(model.decode_step)(params, tok, cache)
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all(), f"{arch}: non-finite decode"
+    assert int(cache.index) == 33
+
+
+def test_decode_matches_forward(arch):
+    """Teacher-forcing forward and prefill+decode must agree.
+
+    MoE note: capacity dropping differs between full-sequence forward (tokens
+    compete for expert slots) and one-token decode (no competition), so for
+    parity we use a dropless capacity factor — drop semantics are covered by
+    test_moe.py."""
+    import dataclasses
+
+    cfg = _smoke_cfg(arch)
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    model = Model(cfg)
+    rng = np.random.default_rng(3)
+    S = 32
+    batch = make_batch(cfg, 2, S, rng)
+    params = model.init(jax.random.PRNGKey(3))
+    full, _ = model.forward(params, batch)
+    P = S - 4
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :P]
+    cache = model.init_cache(2, S)
+    last, cache = model.prefill(params, pre, cache)
+    errs = [float(jnp.abs(last[:, 0] - full[:, P - 1]).max())]
+    for t in range(P, S):
+        lg, cache = model.decode_step(params, batch["tokens"][:, t : t + 1], cache)
+        errs.append(float(jnp.abs(lg[:, 0] - full[:, t]).max()))
+    assert max(errs) < 5e-3, f"{arch}: decode/forward divergence {errs}"

@@ -1,0 +1,73 @@
+"""Config registry: exact assigned hyperparameters, registry integrity."""
+import pytest
+
+from repro.configs import ARCH_IDS, REGISTRY, get_config, reduce_for_smoke
+
+# the assignment table, verbatim
+ASSIGNED = {
+    "pixtral-12b": dict(family="vlm", num_layers=40, d_model=5120, num_heads=32,
+                        num_kv_heads=8, d_ff=14336, vocab_size=131072),
+    "qwen2-moe-a2.7b": dict(family="moe", num_layers=24, d_model=2048, num_heads=16,
+                            num_kv_heads=16, d_ff=1408, vocab_size=151936,
+                            n_experts=60, top_k=4),
+    "stablelm-12b": dict(family="dense", num_layers=40, d_model=5120, num_heads=32,
+                         num_kv_heads=8, d_ff=13824, vocab_size=100352),
+    "qwen2-72b": dict(family="dense", num_layers=80, d_model=8192, num_heads=64,
+                      num_kv_heads=8, d_ff=29568, vocab_size=152064, qkv_bias=True),
+    "yi-9b": dict(family="dense", num_layers=48, d_model=4096, num_heads=32,
+                  num_kv_heads=4, d_ff=11008, vocab_size=64000),
+    "seamless-m4t-medium": dict(family="encdec", num_layers=12, d_model=1024,
+                                num_heads=16, num_kv_heads=16, d_ff=4096,
+                                vocab_size=256206),
+    "starcoder2-15b": dict(family="dense", num_layers=40, d_model=6144, num_heads=48,
+                           num_kv_heads=4, d_ff=24576, vocab_size=49152),
+    "arctic-480b": dict(family="moe", num_layers=35, d_model=7168, num_heads=56,
+                        num_kv_heads=8, d_ff=4864, vocab_size=32000,
+                        n_experts=128, top_k=2, dense_residual=True),
+    "zamba2-1.2b": dict(family="hybrid", num_layers=38, d_model=2048, num_heads=32,
+                        num_kv_heads=32, d_ff=8192, vocab_size=32000, ssm_state=64),
+    "mamba2-130m": dict(family="ssm", num_layers=24, d_model=768, vocab_size=50280,
+                        ssm_state=128),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_assigned_hparams_exact(arch):
+    cfg = get_config(arch)
+    for k, v in ASSIGNED[arch].items():
+        assert getattr(cfg, k) == v, f"{arch}.{k}: {getattr(cfg, k)} != {v}"
+    assert cfg.source, f"{arch}: missing citation"
+
+
+def test_all_ten_assigned_present():
+    assert len(ARCH_IDS) == 10
+    assert set(ARCH_IDS) <= set(REGISTRY)
+    families = {get_config(a).family for a in ARCH_IDS}
+    assert families == {"vlm", "moe", "dense", "encdec", "hybrid", "ssm"}
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError):
+        get_config("gpt-17")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_reduction_bounds(arch):
+    r = reduce_for_smoke(get_config(arch))
+    assert r.num_layers == 2
+    assert r.d_model <= 512
+    assert r.n_experts <= 4
+    assert r.family == get_config(arch).family
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_sane(arch):
+    """n_params within a sane band of the name-plate size."""
+    nameplate = {
+        "pixtral-12b": 12e9, "qwen2-moe-a2.7b": 14.3e9, "stablelm-12b": 12e9,
+        "qwen2-72b": 72e9, "yi-9b": 8.8e9, "seamless-m4t-medium": 1.2e9,
+        "starcoder2-15b": 16e9, "arctic-480b": 480e9, "zamba2-1.2b": 1.2e9,
+        "mamba2-130m": 0.13e9,
+    }[arch]
+    n = get_config(arch).n_params()
+    assert 0.6 * nameplate <= n <= 1.35 * nameplate, (arch, n)

@@ -1,0 +1,197 @@
+"""Unit + property tests for the paper's core: US metric, GUS, ILP, baselines."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    GeneratorConfig,
+    generate_instance,
+    generate_batch,
+    gus_schedule,
+    gus_schedule_batch,
+    gus_schedule_np,
+    hard_feasible,
+    local_all,
+    mean_us,
+    offload_all,
+    random_assignment,
+    satisfied_mask,
+    solve_bnb,
+    solve_exhaustive,
+    us_tensor,
+    happy_computation,
+    happy_communication,
+)
+
+TINY = GeneratorConfig(n_requests=5, n_edge=2, n_cloud=1, n_services=3, n_variants=2)
+SMALL = GeneratorConfig(n_requests=30, n_edge=4, n_cloud=1, n_services=10, n_variants=4)
+
+
+def _cap_ok(inst, assign):
+    """Capacity constraints (2d)/(2e) hold for an assignment."""
+    j = np.asarray(assign.j)
+    l = np.asarray(assign.l)
+    v = np.asarray(inst.v)
+    u = np.asarray(inst.u)
+    cover = np.asarray(inst.cover)
+    gamma = np.asarray(inst.gamma).copy()
+    eta = np.asarray(inst.eta).copy()
+    for i in range(len(j)):
+        if j[i] < 0:
+            continue
+        gamma[j[i]] -= v[i, j[i], l[i]]
+        if j[i] != cover[i]:
+            eta[cover[i]] -= u[i, j[i], l[i]]
+    return (gamma >= -1e-4).all() and (eta >= -1e-4).all()
+
+
+def _qos_ok(inst, assign):
+    """(2b)/(2c): every served request meets its accuracy floor and deadline."""
+    j = np.asarray(assign.j)
+    l = np.asarray(assign.l)
+    acc = np.asarray(inst.acc)
+    ct = np.asarray(inst.ctime)
+    A = np.asarray(inst.A)
+    C = np.asarray(inst.C)
+    avail = np.asarray(inst.avail)
+    for i in range(len(j)):
+        if j[i] < 0:
+            continue
+        if not avail[i, j[i], l[i]]:
+            return False
+        if acc[i, j[i], l[i]] < A[i] - 1e-5 or ct[i, j[i], l[i]] > C[i] + 1e-3:
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(5))
+def test_gus_jax_matches_numpy(seed):
+    inst = generate_instance(seed)
+    a = gus_schedule_np(inst)
+    b = gus_schedule(inst)
+    np.testing.assert_array_equal(np.asarray(a.j), np.asarray(b.j))
+    np.testing.assert_array_equal(np.asarray(a.l), np.asarray(b.l))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_gus_respects_constraints(seed):
+    inst = generate_instance(seed, SMALL)
+    a = gus_schedule(inst)
+    assert _cap_ok(inst, a)
+    assert _qos_ok(inst, a)
+    # every served request is satisfied (hard-constraint form)
+    sat = np.asarray(satisfied_mask(inst, a.j, a.l))
+    served = np.asarray(a.j) >= 0
+    assert (sat == served).all()
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_bnb_matches_exhaustive(seed):
+    inst = generate_instance(seed, TINY)
+    _, vb = solve_bnb(inst)
+    _, ve = solve_exhaustive(inst)
+    assert abs(vb - ve) < 1e-6
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_gus_near_optimal(seed):
+    """Paper claim: GUS achieves ~90% of the CPLEX optimum on average."""
+    cfg = GeneratorConfig(n_requests=8, n_edge=3, n_cloud=1, n_services=4, n_variants=3)
+    inst = generate_instance(seed + 100, cfg)
+    _, opt = solve_bnb(inst)
+    a = gus_schedule(inst)
+    g = float(mean_us(inst, a.j, a.l))
+    assert g <= opt + 1e-6  # greedy can never beat the optimum
+    if opt > 1e-6:
+        assert g / opt > 0.6  # per-instance floor; the ~0.9 average is in benches
+
+
+def test_gus_dominates_baselines_on_average():
+    vals = {"gus": [], "local": [], "offload": [], "random": []}
+    cloud_mask = None
+    for seed in range(10):
+        inst = generate_instance(seed)
+        if cloud_mask is None:
+            cloud_mask = jnp.arange(inst.n_servers) >= 9
+        for name, a in [
+            ("gus", gus_schedule(inst)),
+            ("local", local_all(inst)),
+            ("offload", offload_all(inst, cloud_mask)),
+            ("random", random_assignment(inst, jax.random.PRNGKey(seed))),
+        ]:
+            vals[name].append(float(satisfied_mask(inst, a.j, a.l).sum()))
+    gus = np.mean(vals["gus"])
+    for name in ("local", "offload", "random"):
+        assert gus >= np.mean(vals[name]), (name, vals)
+
+
+def test_relaxed_variants_dominate():
+    """Happy-* relax a constraint so can only serve more or equal requests."""
+    for seed in range(5):
+        inst = generate_instance(seed, SMALL)
+        base = float(mean_us(inst, *_jl(gus_schedule(inst))))
+        hc = float(mean_us(inst, *_jl(happy_computation(inst))))
+        hm = float(mean_us(inst, *_jl(happy_communication(inst))))
+        assert hc >= base - 1e-5
+        assert hm >= base - 1e-5
+
+
+def _jl(a):
+    return a.j, a.l
+
+
+def test_vmapped_batch_matches_loop():
+    batch = generate_batch(0, 4, SMALL)
+    out = gus_schedule_batch(batch)
+    for i in range(4):
+        inst = generate_instance(i, SMALL)
+        single = gus_schedule(inst)
+        np.testing.assert_array_equal(np.asarray(out.j[i]), np.asarray(single.j))
+
+
+# ---------------------------------------------------------------------------
+# property tests
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_constraints_hold(seed):
+    inst = generate_instance(seed, SMALL)
+    a = gus_schedule(inst)
+    assert _cap_ok(inst, a)
+    assert _qos_ok(inst, a)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), scale=st.floats(0.2, 3.0))
+def test_property_more_capacity_never_hurts(seed, scale):
+    """Scaling all capacities up can only increase total satisfaction."""
+    import dataclasses as dc
+
+    inst = generate_instance(seed, TINY)
+    bigger = dc.replace(
+        inst,
+        gamma=inst.gamma * (1 + scale),
+        eta=inst.eta * (1 + scale),
+    )
+    _, v1 = solve_bnb(inst)
+    _, v2 = solve_bnb(bigger)
+    assert v2 >= v1 - 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_us_definition(seed):
+    """US decomposes into the two normalized head-room terms (Eq. 1)."""
+    inst = generate_instance(seed, TINY)
+    us = np.asarray(us_tensor(inst))
+    acc_term = (np.asarray(inst.acc) - np.asarray(inst.A)[:, None, None]) / float(inst.max_as)
+    t_term = (np.asarray(inst.C)[:, None, None] - np.asarray(inst.ctime)) / float(inst.max_cs)
+    np.testing.assert_allclose(us, acc_term + t_term, rtol=1e-5, atol=1e-5)
+    # feasible assignments always have nonnegative US under hard constraints
+    feas = np.asarray(hard_feasible(inst))
+    assert (us[feas] >= -1e-6).all()

@@ -1,0 +1,65 @@
+"""Roofline machinery: HLO shape parsing, collective-bytes accounting, terms."""
+import numpy as np
+
+from repro.roofline import V5E, collective_bytes, roofline_terms, _shape_bytes
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[16,128]") == 16 * 128 * 2
+    assert _shape_bytes("f32[4,4]{1,0}") == 64
+    assert _shape_bytes("(bf16[8], f32[8])") == 16 + 32
+    assert _shape_bytes("pred[10]") == 10
+    assert _shape_bytes("token[]") == 0  # unknown dtypes ignored
+
+
+HLO = """
+ENTRY main {
+  %p0 = bf16[32,64]{1,0} parameter(0)
+  %ag = bf16[32,1024]{1,0} all-gather(%p0), dimensions={1}
+  %ar = f32[128]{0} all-reduce(%x), to_apply=%add
+  %rs = f32[16]{0} reduce-scatter(%y), dimensions={0}
+  %a2a = bf16[8,8]{1,0} all-to-all(%z), dimensions={0}
+  %cp = bf16[4]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %ags = (bf16[32,64]{1,0}, bf16[32,1024]{1,0}) all-gather-start(%p0), dimensions={1}
+  %agd = bf16[32,1024]{1,0} all-gather-done(%ags)
+  %not = bf16[99]{0} add(%a, %b)
+}
+"""
+
+
+def test_collective_bytes_parses_all_kinds():
+    got = collective_bytes(HLO)
+    assert got["all-gather"] == 32 * 1024 * 2 + 32 * 1024 * 2  # sync + start(max member)
+    assert got["all-reduce"] == 128 * 4
+    assert got["reduce-scatter"] == 16 * 4
+    assert got["all-to-all"] == 64 * 2
+    assert got["collective-permute"] == 4 * 2
+
+
+def test_roofline_terms_bottleneck():
+    rep = roofline_terms(
+        arch="x", shape="s", mesh_name="16x16", n_devices=256,
+        cost_analysis={"flops": 1e15, "bytes accessed": 1e9},
+        hlo_text=HLO,
+        model_flops_total=2.56e17,
+    )
+    assert rep.compute_s == 1e15 / V5E.peak_flops
+    assert rep.memory_s == 1e9 / V5E.hbm_bw
+    assert rep.bottleneck == "compute"
+    assert rep.useful_ratio == (2.56e17 / 256) / 1e15
+    assert not rep.loop_corrected
+
+
+def test_roofline_corrected_counts():
+    rep = roofline_terms(
+        arch="x", shape="s", mesh_name="16x16", n_devices=256,
+        cost_analysis={"flops": 1e12, "bytes accessed": 1e8},
+        hlo_text=HLO,
+        model_flops_total=2.56e17,
+        corrected_counts={"flops": 4e13, "bytes": 4e9, "coll": 123.0,
+                          "coll_breakdown": {"all-gather": 123}},
+    )
+    assert rep.loop_corrected
+    assert rep.flops_per_device == 4e13
+    assert rep.raw_flops_per_device == 1e12
+    assert rep.coll_bytes_per_device == 123.0
