@@ -5,6 +5,7 @@ benches.  ``PYTHONPATH=src python -m benchmarks.run [--fast]``.
   fig1e-h   — virtual-testbed sweeps (Fig. 1(e)-(h))
   optimal   — GUS vs exact ILP (the ~90%-of-CPLEX table)
   sched     — GUS scheduling throughput (jit/vmap systems number)
+  scenarios — satisfied-% per scheduler per registered workload scenario
   roofline  — per-(arch x shape x mesh) roofline table from dry-run reports
 """
 from __future__ import annotations
@@ -19,7 +20,7 @@ def main(argv=None):
     ap.add_argument("--fast", action="store_true", help="fewer MC runs")
     ap.add_argument(
         "--only",
-        choices=["fig1num", "fig1test", "optimal", "sched", "serving", "extensions", "roofline"],
+        choices=["fig1num", "fig1test", "optimal", "sched", "serving", "extensions", "scenarios", "roofline"],
         default=None,
     )
     args = ap.parse_args(argv)
@@ -30,6 +31,7 @@ def main(argv=None):
         fig1_testbed,
         optimal_gap,
         roofline_table,
+        scenario_sweep,
         scheduler_throughput,
         serving_bench,
         extensions_bench,
@@ -45,6 +47,9 @@ def main(argv=None):
         "sched": scheduler_throughput.main,
         "serving": lambda: serving_bench.main(6 if args.fast else 12),
         "extensions": lambda: extensions_bench.main(fast=args.fast),
+        "scenarios": lambda: (
+            scenario_sweep.main(seeds=(0,), n_rep=4) if args.fast else scenario_sweep.main()
+        ),
         "roofline": roofline_table.main,
     }
     selected = [args.only] if args.only else list(jobs)

@@ -1,0 +1,106 @@
+"""Scenario sweep: satisfied-user % per scheduler per registered scenario.
+
+For every scenario in the registry this runs the virtual testbed once per
+seed with each policy (GUS jitted hot path + the paper's heuristics) and,
+for GUS, the vmapped Monte-Carlo fleet runner — the "as many scenarios as
+you can imagine" benchmark the scenario engine exists for.
+
+Prints CSV: sweep,scenario,policy,n_requests,satisfied_pct,dropped_pct,mean_us
+then one fleet line per scenario and a GUS-vs-best-heuristic summary.
+
+Run:  PYTHONPATH=src python -m benchmarks.scenario_sweep [--fast]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    SimConfig,
+    demo_cluster_spec,
+    list_scenarios,
+    local_all,
+    offload_all,
+    random_assignment,
+    simulate,
+    simulate_fleet,
+)
+
+from .common import csv_row
+
+
+def make_policies(spec):
+    """Per-frame policies; every one honors the padding contract (infeasible
+    padded rows are dropped), so they all ride the fixed-shape hot path."""
+    cloud_mask = jnp.arange(spec.n_servers) >= spec.n_edge
+    counter = [0]
+
+    def random_policy(inst):
+        counter[0] += 1
+        return random_assignment(inst, jax.random.PRNGKey(counter[0]))
+
+    return {
+        "gus": None,  # simulate()'s default: jitted gus_schedule
+        "random": random_policy,
+        "local_all": local_all,
+        "offload_all": lambda inst: offload_all(inst, cloud_mask),
+    }
+
+
+def main(seeds=(0, 1, 2), n_rep=16, rate=2.0):
+    spec = demo_cluster_spec()
+    cfg = SimConfig(
+        horizon_ms=60_000.0,
+        arrival_rate_per_s=rate,
+        delay_req_ms=6000.0,
+        acc_req_mean=50.0,
+        acc_req_std=10.0,
+    )
+    print("sweep,scenario,policy,n_requests,satisfied_pct,dropped_pct,mean_us")
+    results = {}
+    for name in list_scenarios():
+        for pol, fn in make_policies(spec).items():
+            rs = [simulate(spec, cfg, fn, scenario=name, seed=s).as_dict() for s in seeds]
+            r = {k: float(np.mean([x[k] for x in rs])) for k in rs[0]}
+            results[(name, pol)] = r
+            print(
+                csv_row(
+                    "scenario", name, pol, int(r["n_requests"]),
+                    f"{r['satisfied_pct']:.2f}", f"{r['dropped_pct']:.2f}",
+                    f"{r['mean_us']:.4f}",
+                ),
+                flush=True,
+            )
+        fleet = simulate_fleet(spec, cfg, scenario=name, n_rep=n_rep, seed=0)
+        print(
+            csv_row(
+                "fleet", name, "gus", fleet.n_requests,
+                f"{fleet.satisfied_pct:.2f}", f"{fleet.satisfied_std:.2f}",
+                f"{fleet.mean_us:.4f}",
+            ),
+            flush=True,
+        )
+
+    # GUS should never trail the best heuristic by more than noise, anywhere
+    for name in list_scenarios():
+        g = results[(name, "gus")]["satisfied_pct"]
+        best_h = max(
+            results[(name, p)]["satisfied_pct"]
+            for p in ("random", "local_all", "offload_all")
+        )
+        print(csv_row("claim", name, "gus_vs_best_heuristic", f"{g - best_h:+.2f}"))
+        assert g >= best_h - 2.0, (name, g, best_h)
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    if args.fast:
+        main(seeds=(0,), n_rep=4)
+    else:
+        main()

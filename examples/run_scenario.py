@@ -1,0 +1,88 @@
+"""Run any registered workload scenario through the virtual testbed.
+
+One entrypoint for the whole scenario registry: pick a scenario, a scheduler
+and a load level; optionally also run the vmapped Monte-Carlo fleet for
+replicated statistics.
+
+    PYTHONPATH=src python examples/run_scenario.py --list
+    PYTHONPATH=src python examples/run_scenario.py --scenario flash-crowd
+    PYTHONPATH=src python examples/run_scenario.py --scenario outage --fleet 32
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+
+from repro.core import (
+    SimConfig,
+    demo_cluster_spec,
+    get_scenario,
+    gus_schedule_np,
+    list_scenarios,
+    local_all,
+    offload_all,
+    simulate,
+    simulate_fleet,
+)
+
+
+def make_scheduler(name, spec):
+    if name == "gus":
+        return None  # simulate()'s default: the jitted gus_schedule hot path
+    if name == "gus-np":
+        return gus_schedule_np
+    if name == "local_all":
+        return local_all
+    if name == "offload_all":
+        cloud = jnp.arange(spec.n_servers) >= spec.n_edge
+        return lambda inst: offload_all(inst, cloud)
+    raise SystemExit(f"unknown scheduler {name!r}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenario", default="paper-default")
+    ap.add_argument("--scheduler", default="gus",
+                    choices=["gus", "gus-np", "local_all", "offload_all"])
+    ap.add_argument("--rate", type=float, default=2.0, help="arrivals/s per edge")
+    ap.add_argument("--horizon-s", type=float, default=60.0)
+    ap.add_argument("--deadline-ms", type=float, default=6000.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fleet", type=int, default=0, metavar="R",
+                    help="also run R vmapped Monte-Carlo replications")
+    ap.add_argument("--list", action="store_true", help="list scenarios and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name in list_scenarios():
+            print(f"{name:15s} {get_scenario(name).description}")
+        return
+
+    spec = demo_cluster_spec()
+    cfg = SimConfig(
+        horizon_ms=args.horizon_s * 1000.0,
+        arrival_rate_per_s=args.rate,
+        delay_req_ms=args.deadline_ms,
+        acc_req_mean=50.0,
+        acc_req_std=10.0,
+    )
+    try:
+        scn = get_scenario(args.scenario)
+    except KeyError as e:
+        raise SystemExit(e.args[0])
+    print(f"=== scenario {scn.name!r}: {scn.description} ===")
+    r = simulate(spec, cfg, make_scheduler(args.scheduler, spec),
+                 scenario=scn, seed=args.seed)
+    for k, v in r.as_dict().items():
+        print(f"  {k:20s} {float(v):10.3f}")
+
+    if args.fleet:
+        fr = simulate_fleet(spec, cfg, scenario=scn, n_rep=args.fleet, seed=args.seed)
+        print(f"=== fleet: {args.fleet} replications, one device program ===")
+        for k, v in fr.as_dict().items():
+            print(f"  {k:20s} {float(v):10.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,13 @@
 """Core of the reproduction: the paper's MUS problem, GUS greedy scheduler,
 exact ILP oracle, baseline heuristics and the virtual-testbed simulator."""
-from .instance import FlatInstance, GeneratorConfig, generate_instance, generate_batch, stack_instances
+from .instance import (
+    FlatInstance,
+    GeneratorConfig,
+    generate_instance,
+    generate_batch,
+    stack_instances,
+    pad_instance,
+)
 from .satisfaction import us_tensor, hard_feasible, mean_us, satisfied_mask
 from .gus import Assignment, gus_schedule, gus_schedule_np, gus_schedule_batch
 from .ilp import solve_bnb, solve_exhaustive
@@ -12,7 +19,23 @@ from .baselines import (
     happy_communication,
     BASELINES,
 )
-from .simulator import ClusterSpec, SimConfig, SimResult, simulate
+from .scenarios import (
+    Request,
+    Scenario,
+    SCENARIOS,
+    register_scenario,
+    get_scenario,
+    list_scenarios,
+)
+from .simulator import (
+    ClusterSpec,
+    SimConfig,
+    SimResult,
+    FleetResult,
+    simulate,
+    simulate_fleet,
+    demo_cluster_spec,
+)
 from .extensions import gus_schedule_ordered, best_us_per_request, apply_mobility
 
 __all__ = [
@@ -21,6 +44,7 @@ __all__ = [
     "generate_instance",
     "generate_batch",
     "stack_instances",
+    "pad_instance",
     "us_tensor",
     "hard_feasible",
     "mean_us",
@@ -37,10 +61,19 @@ __all__ = [
     "happy_computation",
     "happy_communication",
     "BASELINES",
+    "Request",
+    "Scenario",
+    "SCENARIOS",
+    "register_scenario",
+    "get_scenario",
+    "list_scenarios",
     "ClusterSpec",
     "SimConfig",
     "SimResult",
+    "FleetResult",
     "simulate",
+    "simulate_fleet",
+    "demo_cluster_spec",
     "gus_schedule_ordered",
     "best_us_per_request",
     "apply_mobility",

@@ -24,6 +24,7 @@ __all__ = [
     "generate_instance",
     "generate_batch",
     "stack_instances",
+    "pad_instance",
 ]
 
 
@@ -259,6 +260,49 @@ def generate_instance(
     if as_numpy:
         return FlatInstance(**arrays)
     return FlatInstance(**{k: jnp.asarray(val) for k, val in arrays.items()})
+
+
+def pad_instance(inst: FlatInstance, n_pad: int) -> FlatInstance:
+    """Pad the request axis of an (unbatched) instance to ``n_pad`` rows.
+
+    This is the fixed-shape contract the jitted schedulers rely on: padded
+    rows are *infeasible everywhere* (``avail`` False) and *free* (zero
+    v/u and zero US weights), so every scheduler that honors feasibility —
+    ``gus_schedule``, ``gus_schedule_np``, all baselines — drops them
+    (j = l = -1) without touching any capacity.  Because GUS processes
+    requests by ascending index and padded rows sit at the end, the first
+    ``N`` assignments are identical to running on the unpadded instance.
+
+    Server-axis leaves (gamma, eta) and scalars (max_as, max_cs) pass
+    through untouched.
+    """
+    N = inst.A.shape[-1]
+    if n_pad == N:
+        return inst
+    if n_pad < N:
+        raise ValueError(f"cannot pad {N} requests down to {n_pad}")
+    p = n_pad - N
+
+    def _pad(x, fill):
+        x = jnp.asarray(x)
+        return jnp.concatenate([x, jnp.full((p,) + x.shape[1:], fill, x.dtype)])
+
+    return FlatInstance(
+        cover=_pad(inst.cover, 0),
+        A=_pad(inst.A, 1e9),        # unreachable accuracy floor
+        C=_pad(inst.C, -1.0),       # already-expired deadline
+        w_a=_pad(inst.w_a, 0.0),    # padded rows contribute zero US
+        w_c=_pad(inst.w_c, 0.0),
+        acc=_pad(inst.acc, 0.0),
+        ctime=_pad(inst.ctime, 1e9),
+        v=_pad(inst.v, 0.0),
+        u=_pad(inst.u, 0.0),
+        avail=_pad(inst.avail, False),
+        gamma=inst.gamma,
+        eta=inst.eta,
+        max_as=inst.max_as,
+        max_cs=inst.max_cs,
+    )
 
 
 def generate_batch(seed: int, n: int, cfg: Optional[GeneratorConfig] = None):

@@ -1,0 +1,328 @@
+"""Scenario engine — named workload scenarios for the virtual testbed.
+
+The paper's Sec. IV experiments fix one workload: homogeneous Poisson
+arrivals with a fixed (A_i, C_i) QoS draw.  Real edge deployments see far
+richer traffic (diurnal load swings, flash crowds, user mobility,
+heterogeneous user tiers, server outages).  This module turns "the workload"
+into a first-class, registered object so every future experiment adds a
+``Scenario`` subclass instead of forking the simulator.
+
+A :class:`Scenario` shapes three per-frame streams consumed by
+``repro.core.simulator``:
+
+* **arrivals** — a (possibly time- and edge-varying) Poisson process, drawn
+  by :meth:`Scenario.generate_arrivals` via thinning against the scenario's
+  instantaneous rate :meth:`Scenario.rate`;
+* **QoS** — per-request accuracy floor A_i and deadline C_i from
+  :meth:`Scenario.draw_qos` (the paper's fixed draw by default);
+* **capacity** — a per-frame multiplier in [0, 1] on every server's
+  (gamma, eta) frame budgets from :meth:`Scenario.capacity_scale`
+  (1 everywhere by default; an outage zeroes a server's column).
+
+Scenarios are stateless: all randomness flows through the caller's
+``numpy.random.Generator``, so a (scenario, seed) pair is reproducible.
+The ``paper-default`` scenario draws *bit-identical* request streams to the
+pre-scenario-engine simulator (same RNG consumption order).
+
+Registry usage::
+
+    from repro.core import get_scenario, list_scenarios, simulate
+    simulate(spec, cfg, scenario="flash-crowd")
+    for name in list_scenarios():
+        print(name, get_scenario(name).description)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "Request",
+    "Scenario",
+    "PaperDefaultScenario",
+    "DiurnalScenario",
+    "FlashCrowdScenario",
+    "MobilityScenario",
+    "HeteroTiersScenario",
+    "OutageScenario",
+    "SCENARIOS",
+    "register_scenario",
+    "get_scenario",
+    "list_scenarios",
+]
+
+
+@dataclasses.dataclass
+class Request:
+    """One user request as the testbed sees it (shared with the simulator)."""
+
+    rid: int
+    arrival_ms: float
+    cover: int          # covering edge server at submission time
+    service: int        # requested service k_i
+    A: float            # accuracy floor (%)
+    C: float            # deadline (ms)
+    size_bytes: float   # payload shipped off the covering edge when offloading
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """Base scenario: the paper's homogeneous Poisson workload.
+
+    Subclasses override any of :meth:`rate`, :meth:`rate_bound`,
+    :meth:`draw_qos`, :meth:`capacity_scale`, or :attr:`move_prob` — the
+    arrival generator, simulator, and fleet runner consume only this
+    interface.
+    """
+
+    name: str = "paper-default"
+    description: str = "Sec. IV workload: homogeneous Poisson, fixed QoS draw"
+    #: per-frame probability that a user re-attaches to a random edge;
+    #: ``None`` defers to ``SimConfig.move_prob``.
+    move_prob: Optional[float] = None
+
+    # -- arrival process ----------------------------------------------------
+    def rate(self, edge: int, t_ms: float, cfg) -> float:
+        """Instantaneous arrival rate (requests/s) at ``edge`` at time ``t_ms``."""
+        return cfg.arrival_rate_per_s
+
+    def rate_bound(self, edge: int, cfg) -> float:
+        """Upper bound on :meth:`rate` over the horizon (thinning envelope).
+
+        Must satisfy ``rate(edge, t, cfg) <= rate_bound(edge, cfg)`` for all t.
+        """
+        return cfg.arrival_rate_per_s
+
+    # -- QoS draw -----------------------------------------------------------
+    def draw_qos(self, rng: np.random.Generator, cfg) -> Tuple[float, float]:
+        """Draw one request's (A_i, C_i).  Paper default: A ~ N(mean, std)
+        clipped to [1, 99], C fixed."""
+        a = float(np.clip(rng.normal(cfg.acc_req_mean, cfg.acc_req_std), 1, 99))
+        return a, float(cfg.delay_req_ms)
+
+    # -- capacity stream ----------------------------------------------------
+    def capacity_scale(
+        self, frame_start_ms: float, cfg, n_edge: int, n_servers: int
+    ) -> Optional[np.ndarray]:
+        """(M,) multiplier in [0, 1] applied to each server's per-frame
+        (gamma, eta) budgets, or ``None`` for "no scaling" (all ones)."""
+        return None
+
+    # -- generator ----------------------------------------------------------
+    def generate_arrivals(
+        self, rng: np.random.Generator, n_edge: int, n_services: int, cfg
+    ) -> List[Request]:
+        """Draw the full request trace for one replication.
+
+        Per edge: a thinned Poisson process against ``rate_bound``.  When the
+        instantaneous rate equals the bound (constant-rate scenarios) the
+        acceptance draw is skipped, which keeps ``paper-default`` bit-identical
+        to the legacy inline generator.  Requests come back sorted by arrival.
+        """
+        reqs: List[Request] = []
+        rid = 0
+        for e in range(n_edge):
+            rmax = float(self.rate_bound(e, cfg))
+            if rmax <= 0.0:
+                continue
+            t = 0.0
+            while t < cfg.horizon_ms:
+                t += rng.exponential(1000.0 / rmax)
+                if t >= cfg.horizon_ms:
+                    break
+                r_t = float(self.rate(e, t, cfg))
+                if r_t < rmax and rng.random() >= r_t / rmax:
+                    continue  # thinned away
+                service = int(rng.integers(0, n_services))
+                a, c = self.draw_qos(rng, cfg)
+                reqs.append(
+                    Request(
+                        rid=rid,
+                        arrival_ms=t,
+                        cover=e,
+                        service=service,
+                        A=a,
+                        C=c,
+                        size_bytes=float(rng.uniform(cfg.req_size_lo, cfg.req_size_hi)),
+                    )
+                )
+                rid += 1
+        reqs.sort(key=lambda r: r.arrival_ms)
+        for i, r in enumerate(reqs):  # rids in arrival order, like the testbed
+            r.rid = i
+        return reqs
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+SCENARIOS: Dict[str, Scenario] = {}
+
+
+def register_scenario(scenario):
+    """Register a :class:`Scenario` instance — or a Scenario subclass, which
+    is instantiated with its defaults — under its ``name`` (last write wins).
+    Returns the argument unchanged, so it works as a class decorator."""
+    inst = scenario() if isinstance(scenario, type) else scenario
+    SCENARIOS[inst.name] = inst
+    return scenario
+
+
+def get_scenario(scenario) -> Scenario:
+    """Resolve a scenario by name (or pass a :class:`Scenario` through)."""
+    if isinstance(scenario, Scenario):
+        return scenario
+    try:
+        return SCENARIOS[scenario]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {scenario!r}; registered: {', '.join(list_scenarios())}"
+        ) from None
+
+
+def list_scenarios() -> List[str]:
+    return sorted(SCENARIOS)
+
+
+# ---------------------------------------------------------------------------
+# Named scenarios
+# ---------------------------------------------------------------------------
+
+
+@register_scenario
+@dataclasses.dataclass(frozen=True)
+class PaperDefaultScenario(Scenario):
+    """The paper's workload, verbatim (the base class defaults)."""
+
+    name: str = "paper-default"
+    description: str = "Sec. IV workload: homogeneous Poisson, fixed QoS draw"
+
+
+@register_scenario
+@dataclasses.dataclass(frozen=True)
+class DiurnalScenario(Scenario):
+    """Sinusoidal day/night load: rate(t) = base * (1 + amp * sin(2*pi*t/P)).
+
+    One full cycle spans ``period_frac`` of the horizon, so short runs still
+    see both the peak and the trough.
+    """
+
+    name: str = "diurnal"
+    description: str = "sinusoidal day/night load swing around the base rate"
+    amplitude: float = 0.8
+    period_frac: float = 1.0  # cycles = 1 / period_frac over the horizon
+
+    def rate(self, edge, t_ms, cfg):
+        period = max(cfg.horizon_ms * self.period_frac, 1e-9)
+        return cfg.arrival_rate_per_s * (
+            1.0 + self.amplitude * math.sin(2.0 * math.pi * t_ms / period)
+        )
+
+    def rate_bound(self, edge, cfg):
+        return cfg.arrival_rate_per_s * (1.0 + self.amplitude)
+
+
+@register_scenario
+@dataclasses.dataclass(frozen=True)
+class FlashCrowdScenario(Scenario):
+    """A flash crowd hits a subset of edges mid-run: rate jumps ``burst_mult``x
+    inside the [burst_start_frac, burst_end_frac) window of the horizon."""
+
+    name: str = "flash-crowd"
+    description: str = "10x burst on half the edges for the middle fifth of the run"
+    burst_mult: float = 10.0
+    burst_start_frac: float = 0.4
+    burst_end_frac: float = 0.6
+    hot_edge_stride: int = 2  # edges 0, 2, 4, ... catch the crowd
+
+    def _hot(self, edge: int) -> bool:
+        return edge % self.hot_edge_stride == 0
+
+    def rate(self, edge, t_ms, cfg):
+        base = cfg.arrival_rate_per_s
+        in_burst = (
+            self.burst_start_frac * cfg.horizon_ms
+            <= t_ms
+            < self.burst_end_frac * cfg.horizon_ms
+        )
+        return base * self.burst_mult if (self._hot(edge) and in_burst) else base
+
+    def rate_bound(self, edge, cfg):
+        return cfg.arrival_rate_per_s * (self.burst_mult if self._hot(edge) else 1.0)
+
+
+@register_scenario
+@dataclasses.dataclass(frozen=True)
+class MobilityScenario(Scenario):
+    """Paper-default traffic, but users roam: every frame each pending user
+    re-attaches to a uniformly random edge with probability ``move_prob``
+    (the conclusion's future-work item, on by default here)."""
+
+    name: str = "mobility"
+    description: str = "Poisson load with per-frame user re-attachment (roaming)"
+    move_prob: Optional[float] = 0.3
+
+
+@register_scenario
+@dataclasses.dataclass(frozen=True)
+class HeteroTiersScenario(Scenario):
+    """Heterogeneous demand: edges carry unequal load (repeating
+    ``rate_mults`` pattern) and users split into a *strict* tier (high
+    accuracy floor, tight deadline) and a *lenient* tier."""
+
+    name: str = "hetero-tiers"
+    description: str = "unequal per-edge load + strict/lenient user QoS mix"
+    rate_mults: Tuple[float, ...] = (0.5, 1.0, 2.0)
+    strict_frac: float = 0.5
+    strict_acc_mean: float = 70.0
+    strict_acc_std: float = 5.0
+    strict_deadline_mult: float = 0.5
+    lenient_deadline_mult: float = 1.5
+
+    def rate(self, edge, t_ms, cfg):
+        return cfg.arrival_rate_per_s * self.rate_mults[edge % len(self.rate_mults)]
+
+    def rate_bound(self, edge, cfg):
+        return self.rate(edge, 0.0, cfg)
+
+    def draw_qos(self, rng, cfg):
+        if rng.random() < self.strict_frac:
+            a = float(np.clip(rng.normal(self.strict_acc_mean, self.strict_acc_std), 1, 99))
+            return a, float(cfg.delay_req_ms * self.strict_deadline_mult)
+        a = float(np.clip(rng.normal(cfg.acc_req_mean, cfg.acc_req_std), 1, 99))
+        return a, float(cfg.delay_req_ms * self.lenient_deadline_mult)
+
+
+@register_scenario
+@dataclasses.dataclass(frozen=True)
+class OutageScenario(Scenario):
+    """Mid-run server outage: the per-frame (gamma, eta) budgets of
+    ``down_servers`` are masked to zero inside the outage window.  A dead
+    server can neither compute (gamma = 0) nor ship requests off its queue
+    (eta = 0), so requests covered by a dead *edge* are dropped for the
+    window, while the rest of the fleet must route around the hole that the
+    dead server leaves in cluster capacity."""
+
+    name: str = "outage"
+    description: str = "servers lose all capacity for the middle third of the run"
+    outage_start_frac: float = 0.33
+    outage_end_frac: float = 0.66
+    down_servers: Tuple[int, ...] = (0,)
+
+    def capacity_scale(self, frame_start_ms, cfg, n_edge, n_servers):
+        in_outage = (
+            self.outage_start_frac * cfg.horizon_ms
+            <= frame_start_ms
+            < self.outage_end_frac * cfg.horizon_ms
+        )
+        if not in_outage:
+            return None
+        scale = np.ones(n_servers, np.float32)
+        for j in self.down_servers:
+            if 0 <= j < n_servers:
+                scale[j] = 0.0
+        return scale

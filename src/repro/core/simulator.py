@@ -15,18 +15,39 @@ Reproduces the Sec. IV testbed protocol:
 
 A request is *satisfied* iff its realized completion time <= C_i and the
 served variant's accuracy >= A_i (Definition II.1's hard form).
+
+Beyond the paper, two axes are pluggable:
+
+* **workload** — a named :mod:`~repro.core.scenarios` entry shapes arrivals,
+  QoS draws, per-frame capacity masks (outages) and mobility;
+* **decision path** — by default each frame is padded to a fixed shape
+  (see :func:`repro.core.instance.pad_instance`) and scheduled by the
+  *jitted* ``gus_schedule``; ``gus_schedule_np`` stays available as the
+  NumPy parity oracle, and :func:`simulate_fleet` stacks R independent
+  Monte-Carlo replications into one vmapped device program.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
+import jax
 import numpy as np
 
-from .gus import Assignment, gus_schedule_np
-from .instance import FlatInstance
+from .gus import Assignment, gus_schedule, gus_schedule_np
+from .instance import FlatInstance, pad_instance, stack_instances
+from .satisfaction import mean_us, satisfied_mask
+from .scenarios import Request, Scenario, get_scenario
 
-__all__ = ["ClusterSpec", "SimConfig", "SimResult", "simulate"]
+__all__ = [
+    "ClusterSpec",
+    "SimConfig",
+    "SimResult",
+    "FleetResult",
+    "simulate",
+    "simulate_fleet",
+    "demo_cluster_spec",
+]
 
 
 @dataclasses.dataclass
@@ -120,19 +141,14 @@ class SimResult:
         }
 
 
-@dataclasses.dataclass
-class _Request:
-    rid: int
-    arrival_ms: float
-    cover: int
-    service: int
-    A: float
-    C: float
-    size_bytes: float
+def _pad_bucket(n: int) -> int:
+    """Round the frame's queue length up to a power-of-two bucket (min 4) so
+    the jitted scheduler compiles once per bucket, not once per queue length."""
+    return max(4, 1 << max(n - 1, 0).bit_length())
 
 
 def _build_frame_instance(
-    reqs: List[_Request],
+    reqs: Sequence[Request],
     spec: ClusterSpec,
     cfg: SimConfig,
     now_ms: float,
@@ -185,43 +201,66 @@ def _build_frame_instance(
     )
 
 
+def _apply_mobility_inplace(
+    reqs: Sequence[Request], n_edge: int, move_prob: float, rng: np.random.Generator
+) -> None:
+    """Re-attach each pending request's covering edge with prob ``move_prob``."""
+    if move_prob <= 0 or not reqs:
+        return
+    from .extensions import apply_mobility
+
+    cov = np.array([r.cover for r in reqs], np.int32)
+    cov = apply_mobility(cov, n_edge, move_prob, rng)
+    for r, c in zip(reqs, cov):
+        r.cover = int(c)
+
+
+def _frame_budgets(spec: ClusterSpec, cfg: SimConfig, scn: Scenario, frame_start_ms: float):
+    """Fresh per-frame (gamma, eta) budgets, masked by the scenario's
+    capacity stream (outages etc.)."""
+    g = spec.gamma_frame.astype(np.float64)
+    e = spec.eta_frame.astype(np.float64)
+    scale = scn.capacity_scale(frame_start_ms, cfg, spec.n_edge, spec.n_servers)
+    if scale is not None:
+        g = g * scale
+        e = e * scale
+    return g.copy(), e.copy()
+
+
 def simulate(
     spec: ClusterSpec,
     cfg: SimConfig,
-    scheduler: Callable[[FlatInstance], Assignment] = gus_schedule_np,
+    scheduler: Optional[Callable[[FlatInstance], Assignment]] = None,
     *,
+    scenario: Union[str, Scenario] = "paper-default",
     seed: int = 0,
     n_requests: Optional[int] = None,
 ) -> SimResult:
-    """Run the virtual testbed.  ``scheduler`` maps FlatInstance -> Assignment
-    (GUS, any baseline, or a custom policy).  If ``n_requests`` is given, the
-    arrival process stops after that many submissions (the paper's x-axis in
-    Fig. 1(e)-(h) is total #requests)."""
+    """Run the virtual testbed.
+
+    ``scheduler`` maps FlatInstance -> Assignment (GUS, any baseline, or a
+    custom policy); the default is the *jitted* ``gus_schedule``.  Every
+    frame's queue is padded to a power-of-two bucket with infeasible rows
+    (:func:`pad_instance`), so the jitted path compiles once per bucket and
+    returns the same assignments as the NumPy oracle on the real rows.
+
+    ``scenario`` names a registered workload (see
+    :func:`repro.core.scenarios.list_scenarios`) shaping arrivals, QoS,
+    per-frame capacity masks and mobility; ``"paper-default"`` reproduces the
+    paper's Sec. IV workload bit-for-bit.
+
+    If ``n_requests`` is given, the arrival process stops after that many
+    submissions (the paper's x-axis in Fig. 1(e)-(h) is total #requests).
+    """
+    if scheduler is None:
+        scheduler = gus_schedule
+    scn = get_scenario(scenario)
     rng = np.random.default_rng(seed)
     M, K, L = spec.proc_ms.shape
+    move_prob = cfg.move_prob if scn.move_prob is None else scn.move_prob
 
-    # --- arrivals ------------------------------------------------------------
-    reqs: List[_Request] = []
-    rid = 0
-    for e in range(spec.n_edge):
-        t = 0.0
-        while t < cfg.horizon_ms:
-            t += rng.exponential(1000.0 / cfg.arrival_rate_per_s)
-            if t >= cfg.horizon_ms:
-                break
-            reqs.append(
-                _Request(
-                    rid=rid,
-                    arrival_ms=t,
-                    cover=e,
-                    service=int(rng.integers(0, K)),
-                    A=float(np.clip(rng.normal(cfg.acc_req_mean, cfg.acc_req_std), 1, 99)),
-                    C=float(cfg.delay_req_ms),
-                    size_bytes=float(rng.uniform(cfg.req_size_lo, cfg.req_size_hi)),
-                )
-            )
-            rid += 1
-    reqs.sort(key=lambda r: r.arrival_ms)
+    # --- arrivals (scenario-shaped Poisson streams) --------------------------
+    reqs = scn.generate_arrivals(rng, spec.n_edge, K, cfg)
     if n_requests is not None:
         reqs = reqs[:n_requests]
 
@@ -234,15 +273,14 @@ def simulate(
     us_sum = 0.0
     comp_sum = 0.0
     q_sum = 0.0
-    pending: List[_Request] = []
+    pending: List[Request] = []
     ridx = 0
     t = 0.0
     is_cloud = spec.is_cloud()
 
     # capacity budgets deplete WITHIN a wall-clock frame (queue-full decisions
     # fire early but do not refresh gamma/eta — they share the frame budget)
-    rem_gamma = spec.gamma_frame.astype(np.float64).copy()
-    rem_eta = spec.eta_frame.astype(np.float64).copy()
+    rem_gamma, rem_eta = _frame_budgets(spec, cfg, scn, 0.0)
     frame_boundary = cfg.frame_ms
 
     while t < cfg.horizon_ms + 10 * cfg.frame_ms:
@@ -261,28 +299,26 @@ def simulate(
             ridx += 1
         decision_time = early_close if early_close is not None else frame_end
         if decision_time >= frame_boundary:  # new wall-clock frame: budgets refresh
-            rem_gamma = spec.gamma_frame.astype(np.float64).copy()
-            rem_eta = spec.eta_frame.astype(np.float64).copy()
             frame_boundary += cfg.frame_ms * np.ceil(
                 (decision_time - frame_boundary + 1e-9) / cfg.frame_ms
             )
+            rem_gamma, rem_eta = _frame_budgets(
+                spec, cfg, scn, frame_boundary - cfg.frame_ms
+            )
 
         if pending:
-            if cfg.move_prob > 0:  # user mobility: re-attach covering edges
-                from .extensions import apply_mobility
-
-                cov = np.array([r.cover for r in pending], np.int32)
-                cov = apply_mobility(cov, spec.n_edge, cfg.move_prob, rng)
-                for r, c in zip(pending, cov):
-                    r.cover = int(c)
+            _apply_mobility_inplace(pending, spec.n_edge, move_prob, rng)
             bw_est = 0.5 * (bw_cur + bw_prev)  # E[B_{t+1}] = (B_t + B_{t-1})/2
+            n_real = len(pending)
             inst = _build_frame_instance(
                 pending, spec, cfg, decision_time, bw_est, max_cs,
                 gamma=rem_gamma, eta=rem_eta,
             )
-            assign = scheduler(inst)
-            jv = np.asarray(assign.j)
-            lv = np.asarray(assign.l)
+            # fixed-shape hot path: pad to a bucket so jitted schedulers
+            # compile once per bucket; padded rows are infeasible -> dropped
+            assign = scheduler(pad_instance(inst, _pad_bucket(n_real)))
+            jv = np.asarray(assign.j)[:n_real]
+            lv = np.asarray(assign.l)[:n_real]
 
             observed_bw = []
             for idx, r in enumerate(pending):
@@ -340,4 +376,164 @@ def simulate(
         mean_completion_ms=comp_sum / max(n_served, 1),
         mean_queue_ms=q_sum / max(n_served, 1),
         bandwidth_estimates=bw_log,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Vectorized Monte-Carlo fleet runner
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """Aggregate of R independent replications scheduled in one device program."""
+
+    n_rep: int
+    n_frames: int                  # frames per replication
+    n_requests: int                # total across all replications
+    n_served: int
+    satisfied_per_rep: np.ndarray  # (R,) satisfied-% per replication
+    mean_us_per_rep: np.ndarray    # (R,) mean US over that replication's requests
+
+    @property
+    def satisfied_pct(self) -> float:
+        return float(np.mean(self.satisfied_per_rep))
+
+    @property
+    def satisfied_std(self) -> float:
+        return float(np.std(self.satisfied_per_rep))
+
+    @property
+    def mean_us(self) -> float:
+        return float(np.mean(self.mean_us_per_rep))
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "n_rep": self.n_rep,
+            "n_requests": self.n_requests,
+            "satisfied_pct": self.satisfied_pct,
+            "satisfied_std": self.satisfied_std,
+            "served_pct": 100.0 * self.n_served / max(self.n_requests, 1),
+            "mean_us": self.mean_us,
+        }
+
+
+def simulate_fleet(
+    spec: ClusterSpec,
+    cfg: SimConfig,
+    scheduler: Optional[Callable[[FlatInstance], Assignment]] = None,
+    *,
+    scenario: Union[str, Scenario] = "paper-default",
+    n_rep: int = 16,
+    seed: int = 0,
+) -> FleetResult:
+    """Monte-Carlo fleet: R independent replications, one device program.
+
+    Every (replication, frame) pair becomes one fixed-shape padded
+    ``FlatInstance``; the whole fleet is stacked on a leading axis of size
+    ``R * T`` and scheduled by a single vmapped call — this is the
+    throughput path for scenario sweeps (the paper runs 20 000 repetitions).
+
+    Frame semantics are *frame-synchronous*: one decision per frame at the
+    frame boundary (no queue-cap early closes), per-frame budgets refresh
+    through the scenario's capacity stream, and the scheduler sees the true
+    mean bandwidth.  Satisfaction is evaluated on the modeled completion
+    times (like the paper's numerical Monte-Carlo); use :func:`simulate` for
+    stochastic channel realizations and the EMA bandwidth estimator.
+    """
+    scn = get_scenario(scenario)
+    T = max(1, int(np.ceil(cfg.horizon_ms / cfg.frame_ms)))
+    K = spec.proc_ms.shape[1]
+
+    # host-side generation: per-(rep, frame) request buckets
+    fleet_frames: List[List[Request]] = []
+    for rep in range(n_rep):
+        rng = np.random.default_rng(seed + rep)
+        reqs = scn.generate_arrivals(rng, spec.n_edge, K, cfg)
+        buckets: List[List[Request]] = [[] for _ in range(T)]
+        for r in reqs:
+            buckets[min(int(r.arrival_ms // cfg.frame_ms), T - 1)].append(r)
+        move_prob = cfg.move_prob if scn.move_prob is None else scn.move_prob
+        for b in buckets:
+            _apply_mobility_inplace(b, spec.n_edge, move_prob, rng)
+        fleet_frames.extend(buckets)
+
+    n_pad = _pad_bucket(max(len(b) for b in fleet_frames))
+    insts = []
+    n_real = np.array([len(b) for b in fleet_frames], np.int32)
+    for i, bucket in enumerate(fleet_frames):
+        frame_start = (i % T) * cfg.frame_ms
+        gamma, eta = _frame_budgets(spec, cfg, scn, frame_start)
+        inst = _build_frame_instance(
+            bucket, spec, cfg, frame_start + cfg.frame_ms,
+            spec.bandwidth_true, cfg.max_cs, gamma=gamma, eta=eta,
+        )
+        insts.append(pad_instance(inst, n_pad))
+    batch = stack_instances(insts)  # leading axis: R * T frames
+
+    fn = gus_schedule if scheduler is None else scheduler
+    assign = jax.vmap(fn)(batch)
+
+    sat = np.asarray(satisfied_mask(batch, assign.j, assign.l))   # (R*T, n_pad)
+    us = np.asarray(mean_us(batch, assign.j, assign.l))           # (R*T,)
+    real = np.arange(n_pad)[None, :] < n_real[:, None]
+    served = (np.asarray(assign.j) >= 0) & real
+    sat = sat & real
+
+    reqs_per_rep = n_real.reshape(n_rep, T).sum(1)
+    sat_per_rep = sat.reshape(n_rep, T, n_pad).sum((1, 2))
+    # mean_us averages over n_pad rows (padded rows contribute 0); recover the
+    # per-rep sum and renormalize by the rep's true request count
+    us_sum_per_rep = (us * n_pad).reshape(n_rep, T).sum(1)
+    return FleetResult(
+        n_rep=n_rep,
+        n_frames=T,
+        n_requests=int(reqs_per_rep.sum()),
+        n_served=int(served.sum()),
+        satisfied_per_rep=100.0 * sat_per_rep / np.maximum(reqs_per_rep, 1),
+        mean_us_per_rep=us_sum_per_rep / np.maximum(reqs_per_rep, 1),
+    )
+
+
+def demo_cluster_spec(
+    n_edge: int = 4,
+    n_cloud: int = 1,
+    n_services: int = 3,
+    n_variants: int = 3,
+    seed: int = 0,
+) -> ClusterSpec:
+    """A small heterogeneous cluster for examples, sweeps and smoke tests.
+
+    Edges run the cheaper variants of every service at ~1 s latencies (the
+    paper's RPi-class boxes); the cloud runs everything ~4x faster but costs
+    a backhaul hop.  Deterministic given ``seed``.
+    """
+    rng = np.random.default_rng(seed)
+    M = n_edge + n_cloud
+    K, L = n_services, n_variants
+
+    rel = np.geomspace(0.3, 1.0, L)                    # variant cost ladder
+    acc = np.linspace(55.0, 85.0, L)[None, :] + rng.normal(0.0, 1.5, (K, L))
+    acc = np.clip(np.sort(acc, axis=1), 1.0, 99.0).astype(np.float32)
+
+    proc = np.empty((M, K, L), np.float32)
+    placed = np.zeros((M, K, L), bool)
+    for j in range(M):
+        is_cloud = j >= n_edge
+        base = 300.0 if is_cloud else rng.uniform(900.0, 1400.0)
+        proc[j] = base * rel[None, :] * rng.uniform(0.95, 1.05, (K, L))
+        placed[j] = True
+        if not is_cloud and L > 1:
+            placed[j, :, L - 1] = False  # biggest variant is cloud-only
+
+    gamma = np.where(np.arange(M) >= n_edge, 12_000.0, 3900.0).astype(np.float32)
+    eta = np.where(np.arange(M) >= n_edge, 3500.0, 350.0).astype(np.float32)
+    return ClusterSpec(
+        n_edge=n_edge,
+        n_cloud=n_cloud,
+        gamma_frame=gamma,
+        eta_frame=eta,
+        proc_ms=proc,
+        placed=placed,
+        acc=acc,
     )

@@ -2,7 +2,7 @@
 per-frame scheduler feeds into.
 
 A fixed pool of ``n_slots`` decode slots runs in lock-step; new requests are
-prefLilled individually and *admitted* into free slots without stopping the
+prefilled individually and *admitted* into free slots without stopping the
 running batch; finished sequences vacate their slot.  Per-slot positions are
 handled by ``vmap``-ing the (already-validated) single-sequence decode step
 over a slot-major cache pytree, so every slot carries its own cache index —

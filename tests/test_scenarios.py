@@ -1,0 +1,237 @@
+"""Scenario engine + vectorized simulation hot path.
+
+Covers the padding/masking contract (`pad_instance`), jitted-vs-NumPy GUS
+parity on padded random frames, the registry, end-to-end smoke of every
+registered scenario through both `simulate` and `simulate_fleet`, and the
+scenario-specific behaviours (outage masking, diurnal/burst rates,
+hetero QoS tiers, mobility override).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    GeneratorConfig,
+    Scenario,
+    SimConfig,
+    demo_cluster_spec,
+    generate_instance,
+    get_scenario,
+    gus_schedule,
+    gus_schedule_batch,
+    gus_schedule_np,
+    list_scenarios,
+    pad_instance,
+    register_scenario,
+    simulate,
+    simulate_fleet,
+    stack_instances,
+)
+
+SPEC = demo_cluster_spec()
+CFG = SimConfig(
+    horizon_ms=24_000.0,
+    arrival_rate_per_s=1.5,
+    delay_req_ms=6000.0,
+    acc_req_mean=50.0,
+    acc_req_std=10.0,
+)
+
+
+# ---------------------------------------------------------------------------
+# padding / masking contract
+# ---------------------------------------------------------------------------
+
+
+def test_pad_instance_rows_are_dropped_and_assignments_unchanged():
+    cfg = GeneratorConfig(n_requests=13, n_edge=3, n_cloud=1, n_services=4, n_variants=3)
+    inst = generate_instance(7, cfg)
+    padded = pad_instance(inst, 16)
+    a0 = gus_schedule(inst)
+    a1 = gus_schedule(padded)
+    np.testing.assert_array_equal(np.asarray(a0.j), np.asarray(a1.j)[:13])
+    np.testing.assert_array_equal(np.asarray(a0.l), np.asarray(a1.l)[:13])
+    assert (np.asarray(a1.j)[13:] == -1).all()
+    assert (np.asarray(a1.l)[13:] == -1).all()
+
+
+def test_pad_instance_validates():
+    inst = generate_instance(0, GeneratorConfig(n_requests=5, n_edge=2, n_cloud=1,
+                                                n_services=2, n_variants=2))
+    assert pad_instance(inst, 5) is inst
+    with pytest.raises(ValueError):
+        pad_instance(inst, 4)
+
+
+def test_batch_parity_padded_jitted_vs_numpy_oracle():
+    """The acceptance-criterion test: gus_schedule on padded, stacked random
+    frames matches the unpadded NumPy oracle row-for-row."""
+    sizes = [3, 7, 12, 16]
+    cfgs = [
+        GeneratorConfig(n_requests=n, n_edge=3, n_cloud=1, n_services=5, n_variants=3)
+        for n in sizes
+    ]
+    insts = [generate_instance(100 + i, c) for i, c in enumerate(cfgs)]
+    batch = stack_instances([pad_instance(x, 16) for x in insts])
+    ab = gus_schedule_batch(batch)
+    for i, (inst, n) in enumerate(zip(insts, sizes)):
+        ref = gus_schedule_np(inst)
+        np.testing.assert_array_equal(
+            np.asarray(ab.j)[i, :n], np.asarray(ref.j), err_msg=f"frame {i} j"
+        )
+        np.testing.assert_array_equal(
+            np.asarray(ab.l)[i, :n], np.asarray(ref.l), err_msg=f"frame {i} l"
+        )
+        assert (np.asarray(ab.j)[i, n:] == -1).all()
+
+
+def test_simulate_jitted_default_matches_numpy_oracle_end_to_end():
+    a = simulate(SPEC, CFG, seed=0).as_dict()            # default: jitted gus
+    b = simulate(SPEC, CFG, gus_schedule_np, seed=0).as_dict()
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_the_documented_scenarios():
+    names = list_scenarios()
+    for expected in ("paper-default", "diurnal", "flash-crowd", "mobility",
+                     "hetero-tiers", "outage"):
+        assert expected in names
+    assert len(names) >= 5
+
+
+def test_get_scenario_resolves_and_rejects():
+    scn = get_scenario("diurnal")
+    assert scn.name == "diurnal"
+    assert get_scenario(scn) is scn
+    with pytest.raises(KeyError):
+        get_scenario("no-such-scenario")
+
+
+def test_register_scenario_instance_and_class():
+    class Custom(Scenario):
+        pass
+
+    original = get_scenario("paper-default")
+    try:
+        register_scenario(Custom())
+        assert isinstance(get_scenario("paper-default"), Custom)
+    finally:
+        register_scenario(original)
+    assert get_scenario("paper-default") is original
+
+
+# ---------------------------------------------------------------------------
+# every scenario runs end-to-end
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(["paper-default", "diurnal", "flash-crowd",
+                                         "mobility", "hetero-tiers", "outage"]))
+def test_scenario_smoke_simulate(name):
+    r = simulate(SPEC, CFG, scenario=name, seed=2)
+    assert r.n_requests > 0
+    assert 0.0 <= r.satisfied_pct <= 100.0
+    assert r.n_served + r.n_dropped == r.n_requests
+    assert r.n_local + r.n_cloud + r.n_edge_offload == r.n_served
+
+
+@pytest.mark.parametrize("name", sorted(["paper-default", "flash-crowd", "outage"]))
+def test_scenario_smoke_fleet(name):
+    fr = simulate_fleet(SPEC, CFG, scenario=name, n_rep=3, seed=0)
+    assert fr.n_rep == 3
+    assert fr.n_requests > 0
+    assert fr.satisfied_per_rep.shape == (3,)
+    assert 0.0 <= fr.satisfied_pct <= 100.0
+    assert fr.n_served <= fr.n_requests
+
+
+def test_fleet_tracks_per_frame_simulator_on_default_scenario():
+    """Frame-synchronous fleet semantics should land near the sequential
+    testbed's satisfied-% under light load (no queue-cap early closes)."""
+    light = SimConfig(horizon_ms=30_000.0, arrival_rate_per_s=1.0,
+                      delay_req_ms=8000.0, channel_sigma=0.0, proc_sigma=0.0)
+    seq = np.mean([
+        simulate(SPEC, light, seed=s).satisfied_pct for s in range(3)
+    ])
+    fleet = simulate_fleet(SPEC, light, n_rep=3, seed=0).satisfied_pct
+    assert abs(seq - fleet) < 15.0, (seq, fleet)
+
+
+# ---------------------------------------------------------------------------
+# scenario-specific behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_outage_masks_capacity_only_inside_window():
+    scn = get_scenario("outage")
+    m = SPEC.n_servers
+    mid = 0.5 * CFG.horizon_ms
+    scale = scn.capacity_scale(mid, CFG, SPEC.n_edge, m)
+    assert scale is not None and scale[0] == 0.0 and scale[1:].min() == 1.0
+    assert scn.capacity_scale(0.0, CFG, SPEC.n_edge, m) is None
+    # the dead server serves nothing while it is down
+    r_out = simulate(SPEC, CFG, scenario="outage", seed=3)
+    r_base = simulate(SPEC, CFG, scenario="paper-default", seed=3)
+    assert r_out.satisfied_pct <= r_base.satisfied_pct + 1e-9
+
+
+def test_diurnal_and_flash_crowd_rates_vary_in_time():
+    d = get_scenario("diurnal")
+    peak = d.rate(0, 0.25 * CFG.horizon_ms, CFG)
+    trough = d.rate(0, 0.75 * CFG.horizon_ms, CFG)
+    assert peak > CFG.arrival_rate_per_s > trough
+    assert d.rate_bound(0, CFG) >= peak
+
+    f = get_scenario("flash-crowd")
+    assert f.rate(0, 0.5 * CFG.horizon_ms, CFG) == pytest.approx(
+        CFG.arrival_rate_per_s * f.burst_mult
+    )
+    assert f.rate(1, 0.5 * CFG.horizon_ms, CFG) == CFG.arrival_rate_per_s
+    assert f.rate(0, 0.0, CFG) == CFG.arrival_rate_per_s
+
+
+def test_hetero_tiers_qos_mixture():
+    scn = get_scenario("hetero-tiers")
+    rng = np.random.default_rng(0)
+    draws = [scn.draw_qos(rng, CFG) for _ in range(400)]
+    deadlines = {c for _, c in draws}
+    assert deadlines == {
+        CFG.delay_req_ms * scn.strict_deadline_mult,
+        CFG.delay_req_ms * scn.lenient_deadline_mult,
+    }
+    strict_acc = [a for a, c in draws if c == CFG.delay_req_ms * scn.strict_deadline_mult]
+    assert np.mean(strict_acc) > CFG.acc_req_mean + 10
+
+
+def test_mobility_scenario_overrides_config():
+    assert get_scenario("mobility").move_prob == 0.3
+    assert get_scenario("paper-default").move_prob is None
+
+
+def test_paper_default_arrivals_are_bit_identical_to_legacy_generator():
+    """The base generator must consume RNG draws in the legacy inline order."""
+    cfg = CFG
+    rng = np.random.default_rng(11)
+    reqs = get_scenario("paper-default").generate_arrivals(rng, SPEC.n_edge, 3, cfg)
+
+    rng2 = np.random.default_rng(11)
+    legacy = []
+    for e in range(SPEC.n_edge):
+        t = 0.0
+        while t < cfg.horizon_ms:
+            t += rng2.exponential(1000.0 / cfg.arrival_rate_per_s)
+            if t >= cfg.horizon_ms:
+                break
+            legacy.append((
+                t, e, int(rng2.integers(0, 3)),
+                float(np.clip(rng2.normal(cfg.acc_req_mean, cfg.acc_req_std), 1, 99)),
+                float(rng2.uniform(cfg.req_size_lo, cfg.req_size_hi)),
+            ))
+    legacy.sort(key=lambda x: x[0])
+    assert len(reqs) == len(legacy)
+    for r, (t, e, k, a, s) in zip(reqs, legacy):
+        assert (r.arrival_ms, r.cover, r.service, r.A, r.size_bytes) == (t, e, k, a, s)
