@@ -1,56 +1,71 @@
 """Shared helpers for the paper-figure benchmarks."""
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Callable, Dict, List
+from typing import Dict
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
     GeneratorConfig,
     generate_batch,
-    gus_schedule,
-    gus_schedule_batch,
-    local_all,
+    get_policy,
+    list_policies,
     mean_us,
-    offload_all,
-    random_assignment,
     satisfied_mask,
-    happy_computation,
-    happy_communication,
 )
 
 MC_RUNS = 192          # paper uses 20 000; means stabilize far earlier
 CHUNK = 64
 
+#: Monte-Carlo sweep policies: everything in the registry that can ride the
+#: vmapped batch path (the host-side ILP oracle gets its own benchmark).
+SWEEP_POLICIES = tuple(p for p in list_policies() if get_policy(p).vmappable)
+
+#: branch & bound budget for optimality-gap benchmarks; paired with
+#: ``strict=True`` so solve_bnb raises rather than returning a best-so-far if
+#: the budget ever trips — "opt" is always a certified optimum
+#: (the registered `ilp` policy's smaller anytime budget is for live frames)
+GAP_NODE_LIMIT = 5_000_000
+
+
+def gap_regimes(n_requests: int = 10):
+    """The two GUS-vs-optimal regimes shared by ``optimal_gap`` and
+    ``paper_figures``: *ample* capacity (greedy is near-optimal) and
+    *contended* capacity (greedy pays for its myopia) — the paper's
+    "average 90% of the optimal" sits between them."""
+    base = dict(
+        n_requests=n_requests, n_edge=3, n_cloud=1, n_services=5, n_variants=3
+    )
+    return {
+        "ample": GeneratorConfig(**base),
+        "contended": GeneratorConfig(
+            **base,
+            edge_compute_classes=(400.0, 600.0, 800.0),
+            edge_comm_classes=(60.0, 90.0, 120.0),
+            cloud_compute=1600.0, cloud_comm=300.0,
+        ),
+    }
+
 
 def run_policy_mc(name: str, cfg: GeneratorConfig, seed: int = 0, mc: int = MC_RUNS) -> Dict[str, float]:
-    """Monte-Carlo average of satisfied-% / mean-US / served mix for a policy."""
-    sat, us, local_pct, cloud_pct, eo_pct, served = [], [], [], [], [], []
+    """Monte-Carlo average of satisfied-% / mean-US / served mix for any
+    vmappable registered policy."""
+    pol = get_policy(name)
+    if not pol.vmappable:
+        raise ValueError(f"policy {name!r} is not vmappable; MC sweeps need the batch path")
     n_servers = cfg.n_edge + cfg.n_cloud
-    cloud_mask = jnp.arange(n_servers) >= cfg.n_edge
+    fn = pol.bind(cfg.n_edge, n_servers)
 
+    sat, us, local_pct, cloud_pct, eo_pct, served = [], [], [], [], [], []
     for c0 in range(0, mc, CHUNK):
         n = min(CHUNK, mc - c0)
         batch = generate_batch(seed + c0, n, cfg)
-        if name == "gus":
-            a = gus_schedule_batch(batch)
-        elif name == "happy_computation":
-            a = gus_schedule_batch(batch, relax_compute=True)
-        elif name == "happy_communication":
-            a = gus_schedule_batch(batch, relax_comm=True)
-        elif name == "local_all":
-            a = jax.vmap(local_all)(batch)
-        elif name == "offload_all":
-            a = jax.vmap(lambda b: offload_all(b, cloud_mask))(batch)
-        elif name == "random":
+        if pol.needs_key:
             keys = jax.random.split(jax.random.PRNGKey(seed + c0), n)
-            a = jax.vmap(random_assignment)(batch, keys)
+            a = jax.vmap(fn)(batch, keys)
         else:
-            raise ValueError(name)
+            a = jax.vmap(fn)(batch)
         sm = satisfied_mask(batch, a.j, a.l)
         sat.append(np.asarray(sm.mean(-1)))
         us.append(np.asarray(mean_us(batch, a.j, a.l)))
@@ -70,9 +85,6 @@ def run_policy_mc(name: str, cfg: GeneratorConfig, seed: int = 0, mc: int = MC_R
         "cloud_pct": 100 * float(np.mean(np.concatenate(cloud_pct))),
         "edge_offload_pct": 100 * float(np.mean(np.concatenate(eo_pct))),
     }
-
-
-POLICIES = ("gus", "random", "offload_all", "local_all", "happy_computation", "happy_communication")
 
 
 def csv_row(*cells) -> str:

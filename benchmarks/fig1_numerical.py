@@ -1,5 +1,6 @@
 """Paper Fig. 1(a)-(d): numerical sweeps (requested delay, requested accuracy,
-number of requests, queue delay), Monte-Carlo averaged, all six policies.
+number of requests, queue delay), Monte-Carlo averaged, over every vmappable
+policy in the registry (GUS, ordered GUS, the five baselines).
 
 Each function prints CSV rows: figure,x,policy,satisfied_pct,mean_us,...
 and asserts the paper's qualitative claims (monotone trends; GUS >= 1.5x the
@@ -7,23 +8,27 @@ weakest heuristics on satisfied-%)."""
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import numpy as np
 
 from repro.core import GeneratorConfig
 
-from .common import MC_RUNS, POLICIES, csv_row, run_policy_mc
+from .common import MC_RUNS, SWEEP_POLICIES, csv_row, run_policy_mc
 
 BASE = GeneratorConfig()
 
 
-def _sweep(figure: str, param_values, make_cfg, policies=POLICIES, mc=MC_RUNS):
+def _sweep(figure: str, param_values, make_cfg, policies=SWEEP_POLICIES, mc=MC_RUNS):
     rows = {}
     print(f"figure,x,policy,satisfied_pct,mean_us,served_pct,local_pct,cloud_pct,edge_offload_pct")
     for x in param_values:
         cfg = make_cfg(x)
         for pol in policies:
-            r = run_policy_mc(pol, cfg, seed=hash((figure, str(x))) % 10_000, mc=mc)
+            # crc32, not hash(): string hashing is salted per process, and the
+            # MC draws (and the asserted claim ratios) must reproduce run-to-run
+            seed = zlib.crc32(f"{figure}:{x}".encode()) % 10_000
+            r = run_policy_mc(pol, cfg, seed=seed, mc=mc)
             rows[(x, pol)] = r
             print(
                 csv_row(

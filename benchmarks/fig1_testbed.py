@@ -9,12 +9,11 @@ Prints CSV: figure,n_requests,policy,satisfied_pct,local_pct,cloud_pct,
 edge_offload_pct,dropped_pct."""
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.configs.paper_zoo import GOOGLE_LM, MID_LM, SQUEEZE_LM
-from repro.core import SimConfig, gus_schedule_np, local_all, offload_all, random_assignment, simulate
+from repro.core import SimConfig, simulate
 from repro.serving import ModelZoo, ServiceSpec, build_cluster_spec, variant_ladder
 
 from .common import csv_row
@@ -47,16 +46,9 @@ def make_testbed_spec(seed: int = 0):
     return spec
 
 
-POLICIES = {
-    "gus": lambda spec: gus_schedule_np,
-    "random": lambda spec: (
-        lambda inst, _c=[0]: (_c.__setitem__(0, _c[0] + 1), random_assignment(inst, __import__("jax").random.PRNGKey(_c[0])))[1]
-    ),
-    "local_all": lambda spec: (lambda inst: local_all(inst)),
-    "offload_all": lambda spec: (
-        lambda inst: offload_all(inst, jnp.arange(spec.n_servers) >= spec.n_edge)
-    ),
-}
+#: registry policies on the testbed (random's per-frame PRNG keys are split
+#: from the run's seed by the simulator, so runs are deterministic per seed)
+POLICIES = ("gus", "random", "local_all", "offload_all")
 
 
 HORIZON_MS = 120_000.0
@@ -83,9 +75,9 @@ def main(n_points=(200, 800, 1600), seeds=(0, 1, 2)):
             queue_cap=4,
             frame_ms=3000.0,
         )
-        for pol, mk in POLICIES.items():
+        for pol in POLICIES:
             rs = [
-                simulate(spec, cfg, mk(spec), seed=s, n_requests=n).as_dict()
+                simulate(spec, cfg, policy=pol, seed=s, n_requests=n).as_dict()
                 for s in seeds
             ]
             r = {k: float(np.mean([x[k] for x in rs])) for k in rs[0]}

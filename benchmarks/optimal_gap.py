@@ -3,47 +3,39 @@
 "Our results confirm that the proposed algorithm performs close-to-optimal
  ... achieving in average 90% of the optimal value."
 
-We solve small instances exactly with branch & bound and report the mean
-GUS/OPT ratio.  Prints CSV: seed,opt,gus,ratio then the aggregate."""
+We solve small instances exactly with the policy registry's ``ilp`` oracle
+(branch & bound) and report the mean GUS/OPT ratio.
+Prints CSV: seed,opt,gus,ratio then the aggregate."""
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core import (
-    GeneratorConfig,
     generate_instance,
-    gus_schedule,
-    gus_schedule_ordered,
+    get_policy,
+    make_ilp_policy,
     mean_us,
-    solve_bnb,
 )
 
-from .common import csv_row
+from .common import GAP_NODE_LIMIT, csv_row, gap_regimes
 
-# Two regimes: ample capacity (greedy = optimal) and contended capacity
-# (greedy pays for its myopia) — the paper's "average 90%" sits between.
-REGIMES = {
-    "ample": GeneratorConfig(
-        n_requests=10, n_edge=3, n_cloud=1, n_services=5, n_variants=3
-    ),
-    "contended": GeneratorConfig(
-        n_requests=10, n_edge=3, n_cloud=1, n_services=5, n_variants=3,
-        edge_compute_classes=(400.0, 600.0, 800.0),
-        edge_comm_classes=(60.0, 90.0, 120.0),
-        cloud_compute=1600.0, cloud_comm=300.0,
-    ),
-}
+REGIMES = gap_regimes(n_requests=10)
 
 
 def main(n_instances: int = 25):
     print("regime,seed,opt,gus,ratio,gus_ordered,ratio_ordered")
     ratios, ratios_ord = [], []
     for regime, cfg in REGIMES.items():
+        n_servers = cfg.n_edge + cfg.n_cloud
+        ilp_fn = make_ilp_policy(node_limit=GAP_NODE_LIMIT, strict=True).bind(cfg.n_edge, n_servers)
+        gus_fn = get_policy("gus").bind(cfg.n_edge, n_servers)
+        ord_fn = get_policy("gus-ordered").bind(cfg.n_edge, n_servers)
         for seed in range(n_instances):
             inst = generate_instance(seed, cfg)
-            _, opt = solve_bnb(inst)
-            a = gus_schedule(inst)
-            b = gus_schedule_ordered(inst)
+            o = ilp_fn(inst)
+            a = gus_fn(inst)
+            b = ord_fn(inst)
+            opt = float(mean_us(inst, np.asarray(o.j), np.asarray(o.l)))
             g = float(mean_us(inst, a.j, a.l))
             go = float(mean_us(inst, b.j, b.l))
             if opt > 1e-9:

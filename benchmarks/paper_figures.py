@@ -1,0 +1,424 @@
+"""Paper-figure reproduction pipeline: every registered policy, every scenario.
+
+Reproduces the paper's numerical figures as machine-readable sweeps over the
+:mod:`repro.core.policies` registry and writes one JSON + one markdown
+results table per run (default: ``results/paper_figures/``):
+
+  arrival-rate    satisfied-% vs per-edge arrival rate       (load axis of Fig. 1)
+  num-users       satisfied-% vs total number of requests    (Fig. 1(e)-(h) x-axis)
+  qos-deadline    satisfied-% vs requested deadline C_i      (Fig. 1(a) analog)
+  qos-accuracy    satisfied-% vs requested accuracy A_i      (Fig. 1(b) analog)
+  scenarios       policy x scenario satisfied-% matrix, ILP oracle included
+  optimality-gap  GUS / exact-optimum mean-US ratio          (the ~90% claim)
+
+Sweeps ride the registry: the vmapped fleet runner for the jit-compatible
+policies, the sequential testbed for the scenario matrix (so the host-side
+ILP oracle can join on small frames).  The Happy-* policies relax a
+feasibility constraint, so in the numerical model (no load-dependent delay)
+they are *upper bounds*, not baselines; the paper's ">= 50%" claim is
+checked against the restricted heuristics (random / offload_all /
+local_all), mirroring ``fig1_numerical.check_gus_factor``.
+
+Run (no PYTHONPATH needed — the script finds ``src/`` itself):
+
+    python benchmarks/paper_figures.py --tiny          # CI smoke, ~1 min
+    python benchmarks/paper_figures.py                 # full sweep
+    python benchmarks/paper_figures.py --only scenarios --out /tmp/figs
+
+See ``docs/reproducing_paper.md`` for the figure-by-figure guide.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List
+
+_SRC = Path(__file__).resolve().parent.parent / "src"
+if _SRC.is_dir() and str(_SRC) not in sys.path:
+    sys.path.insert(0, str(_SRC))
+
+import numpy as np
+
+from repro.core import (
+    SimConfig,
+    demo_cluster_spec,
+    generate_instance,
+    get_policy,
+    list_policies,
+    list_scenarios,
+    make_ilp_policy,
+    mean_us,
+    simulate,
+    simulate_fleet,
+)
+
+try:  # package mode (python -m benchmarks.paper_figures / benchmarks.run)
+    from .common import GAP_NODE_LIMIT, gap_regimes
+except ImportError:  # script mode (python benchmarks/paper_figures.py)
+    from common import GAP_NODE_LIMIT, gap_regimes
+
+FIGURES = (
+    "arrival-rate",
+    "num-users",
+    "qos-deadline",
+    "qos-accuracy",
+    "scenarios",
+    "optimality-gap",
+)
+
+#: restricted heuristics the paper's ">= 50%" claim is measured against
+CLAIM_BASELINES = ("random", "offload_all", "local_all")
+
+#: per-scenario noise allowance (satisfied-%) for the GUS-beats-baseline
+#: check — a few seeds per cell; the same tolerance scenario_sweep.py uses
+SCENARIO_NOISE_PCT = 2.0
+
+
+def _fleet_policies() -> List[str]:
+    return [p for p in list_policies() if get_policy(p).vmappable]
+
+
+def _base_cfg(tiny: bool, **overrides) -> SimConfig:
+    kw = dict(
+        horizon_ms=12_000.0 if tiny else 60_000.0,
+        arrival_rate_per_s=2.0,
+        delay_req_ms=6000.0,
+        acc_req_mean=50.0,
+        acc_req_std=10.0,
+    )
+    kw.update(overrides)
+    return SimConfig(**kw)
+
+
+def _fleet_sweep(fig, x_label, values, make_cfg, spec, *, n_rep, policies):
+    rows = []
+    for x in values:
+        cfg = make_cfg(x)
+        for pol in policies:
+            fr = simulate_fleet(spec, cfg, policy=pol, n_rep=n_rep, seed=0)
+            rows.append({
+                "x": x,
+                "policy": pol,
+                "satisfied_pct": round(fr.satisfied_pct, 3),
+                "satisfied_std": round(fr.satisfied_std, 3),
+                "mean_us": round(fr.mean_us, 5),
+                "n_requests": fr.n_requests,
+            })
+            print(f"{fig},{x},{pol},{fr.satisfied_pct:.2f}", flush=True)
+    return {"x_label": x_label, "rows": rows}
+
+
+def fig_arrival_rate(tiny: bool) -> Dict:
+    """Satisfied-% vs per-edge arrival rate (every vmappable policy, fleet)."""
+    spec = demo_cluster_spec()
+    values = [1.0, 4.0] if tiny else [0.5, 1.0, 2.0, 4.0, 8.0]
+    return _fleet_sweep(
+        "arrival-rate", "arrival rate (req/s per edge)", values,
+        lambda r: _base_cfg(tiny, arrival_rate_per_s=r),
+        spec, n_rep=2 if tiny else 8, policies=_fleet_policies(),
+    )
+
+
+def fig_qos_deadline(tiny: bool) -> Dict:
+    """Satisfied-% vs requested deadline C_i (stricter deadline -> fewer)."""
+    spec = demo_cluster_spec()
+    values = [2000.0, 8000.0] if tiny else [1500.0, 3000.0, 6000.0, 12000.0]
+    return _fleet_sweep(
+        "qos-deadline", "requested deadline C_i (ms)", values,
+        lambda d: _base_cfg(tiny, delay_req_ms=d),
+        spec, n_rep=2 if tiny else 8, policies=_fleet_policies(),
+    )
+
+
+def fig_qos_accuracy(tiny: bool) -> Dict:
+    """Satisfied-% vs requested accuracy A_i (stricter floor -> fewer)."""
+    spec = demo_cluster_spec()
+    values = [40.0, 70.0] if tiny else [30.0, 45.0, 60.0, 75.0]
+    return _fleet_sweep(
+        "qos-accuracy", "requested accuracy A_i (%)", values,
+        lambda a: _base_cfg(tiny, acc_req_mean=a),
+        spec, n_rep=2 if tiny else 8, policies=_fleet_policies(),
+    )
+
+
+def fig_num_users(tiny: bool) -> Dict:
+    """Satisfied-% vs total submitted requests (sequential testbed)."""
+    spec = demo_cluster_spec()
+    values = [20, 60] if tiny else [25, 50, 100, 200]
+    seeds = (0,) if tiny else (0, 1)
+    policies = _fleet_policies()  # ilp excluded: its own figure below
+    rows = []
+    for n in values:
+        cfg = _base_cfg(tiny, horizon_ms=120_000.0, arrival_rate_per_s=2.0)
+        for pol in policies:
+            rs = [
+                simulate(spec, cfg, policy=pol, seed=s, n_requests=n)
+                for s in seeds
+            ]
+            sat = float(np.mean([r.satisfied_pct for r in rs]))
+            rows.append({
+                "x": n,
+                "policy": pol,
+                "satisfied_pct": round(sat, 3),
+                "mean_us": round(float(np.mean([r.mean_us for r in rs])), 5),
+                "n_requests": int(np.mean([r.n_requests for r in rs])),
+            })
+            print(f"num-users,{n},{pol},{sat:.2f}", flush=True)
+    return {"x_label": "total requests submitted", "rows": rows}
+
+
+def fig_scenarios(tiny: bool) -> Dict:
+    """The headline matrix: satisfied-% for every registered policy on every
+    registered scenario, ILP oracle included (the sequential testbed's
+    queue cap bounds frames to n_edge * queue_cap <= 12 requests here)."""
+    spec = demo_cluster_spec(n_edge=3, n_cloud=1)
+    seeds = (0,) if tiny else (0, 1)
+    cfg = _base_cfg(tiny, horizon_ms=12_000.0 if tiny else 30_000.0)
+    rows = []
+    for scn in list_scenarios():
+        for pol in list_policies():
+            rs = [simulate(spec, cfg, policy=pol, scenario=scn, seed=s) for s in seeds]
+            sat = float(np.mean([r.satisfied_pct for r in rs]))
+            rows.append({
+                "scenario": scn,
+                "policy": pol,
+                "satisfied_pct": round(sat, 3),
+                "dropped_pct": round(
+                    float(np.mean([100.0 * r.n_dropped / max(r.n_requests, 1) for r in rs])), 3
+                ),
+                "mean_us": round(float(np.mean([r.mean_us for r in rs])), 5),
+                "n_requests": int(np.mean([r.n_requests for r in rs])),
+            })
+            print(f"scenarios,{scn},{pol},{sat:.2f}", flush=True)
+    return {"x_label": "scenario", "rows": rows}
+
+
+def fig_optimality_gap(tiny: bool) -> Dict:
+    """GUS vs the exact optimum through the registry's ``ilp`` oracle.
+
+    Two regimes, as in ``benchmarks/optimal_gap.py``: *ample* capacity
+    (greedy is near-optimal) and *contended* capacity (greedy pays for its
+    myopia); the paper's "average 90% of optimal" sits between them.
+    """
+    n_instances = 3 if tiny else 12
+    regimes = gap_regimes(n_requests=8)
+    rows = []
+    for regime, gcfg in regimes.items():
+        n_servers = gcfg.n_edge + gcfg.n_cloud
+        fns = {
+            p: get_policy(p).bind(gcfg.n_edge, n_servers)
+            for p in ("gus", "gus-ordered")
+        }
+        # exhaustive search budget, so "opt" is the certified optimum (the
+        # registered `ilp` policy's smaller budget is anytime, for live frames)
+        fns["ilp"] = make_ilp_policy(node_limit=GAP_NODE_LIMIT, strict=True).bind(
+            gcfg.n_edge, n_servers
+        )
+        for seed in range(n_instances):
+            inst = generate_instance(seed, gcfg)
+            vals = {}
+            for p, fn in fns.items():
+                a = fn(inst)
+                vals[p] = float(mean_us(inst, np.asarray(a.j), np.asarray(a.l)))
+            opt = vals["ilp"]
+            rows.append({
+                "regime": regime,
+                "seed": seed,
+                "opt": round(opt, 5),
+                "gus": round(vals["gus"], 5),
+                "gus_ordered": round(vals["gus-ordered"], 5),
+                "ratio": round(vals["gus"] / opt, 4) if opt > 1e-9 else 1.0,
+                "ratio_ordered": round(vals["gus-ordered"] / opt, 4) if opt > 1e-9 else 1.0,
+            })
+            print(f"optimality-gap,{regime},{seed},ratio={rows[-1]['ratio']}", flush=True)
+    return {"x_label": "instance seed", "rows": rows}
+
+
+# ---------------------------------------------------------------------------
+# Claims, markdown, output
+# ---------------------------------------------------------------------------
+
+
+def check_claims(figures: Dict[str, Dict]) -> Dict:
+    """Cross-figure claim checks (recorded in the JSON, asserted in main)."""
+    claims: Dict[str, Dict] = {}
+
+    if "scenarios" in figures:
+        rows = figures["scenarios"]["rows"]
+        sat = {(r["scenario"], r["policy"]): r["satisfied_pct"] for r in rows}
+        scns = sorted({r["scenario"] for r in rows})
+        gus_mean = float(np.mean([sat[(s, "gus")] for s in scns]))
+        per_baseline = {}
+        for b in CLAIM_BASELINES:
+            b_mean = float(np.mean([sat[(s, b)] for s in scns]))
+            margins = {s: round(sat[(s, "gus")] - sat[(s, b)], 3) for s in scns}
+            per_baseline[b] = {
+                "baseline_mean": round(b_mean, 3),
+                "gus_mean": round(gus_mean, 3),
+                "gus_wins": bool(gus_mean >= b_mean),
+                "scenario_margins": margins,
+                # per-scenario, with a small noise allowance (few seeds)
+                "wins_every_scenario": bool(
+                    all(m >= -SCENARIO_NOISE_PCT for m in margins.values())
+                ),
+            }
+        ilp_margin = None
+        if any(p == "ilp" for (_, p) in sat):
+            ilp_mean = float(np.mean([sat[(s, "ilp")] for s in scns]))
+            ilp_margin = round(ilp_mean - gus_mean, 3)
+        claims["gus_vs_baselines_scenarios"] = {
+            "per_baseline": per_baseline,
+            "gus_beats_every_baseline": all(
+                v["gus_wins"] and v["wins_every_scenario"]
+                for v in per_baseline.values()
+            ),
+            "ilp_minus_gus_satisfied_pct": ilp_margin,
+        }
+
+    for fig in ("arrival-rate", "num-users", "qos-deadline", "qos-accuracy"):
+        if fig not in figures:
+            continue
+        rows = figures[fig]["rows"]
+        sat = {(r["x"], r["policy"]): r["satisfied_pct"] for r in rows}
+        xs = sorted({r["x"] for r in rows})
+        ratios = []
+        for x in xs:
+            for b in CLAIM_BASELINES:
+                if sat.get((x, b), 0.0) > 1e-6:
+                    ratios.append(sat[(x, "gus")] / sat[(x, b)])
+        claims.setdefault("gus_vs_baselines_sweeps", {})[fig] = {
+            "mean_ratio": round(float(np.mean(ratios)), 3) if ratios else None,
+            "min_ratio": round(float(np.min(ratios)), 3) if ratios else None,
+        }
+
+    if "optimality-gap" in figures:
+        rows = figures["optimality-gap"]["rows"]
+        claims["gus_over_optimal"] = {
+            "mean_ratio": round(float(np.mean([r["ratio"] for r in rows])), 4),
+            "mean_ratio_ordered": round(
+                float(np.mean([r["ratio_ordered"] for r in rows])), 4
+            ),
+        }
+    return claims
+
+
+def _md_table(header: List[str], body: List[List[str]]) -> List[str]:
+    out = ["| " + " | ".join(header) + " |",
+           "|" + "|".join("---" for _ in header) + "|"]
+    out += ["| " + " | ".join(row) + " |" for row in body]
+    return out
+
+
+def render_markdown(figures: Dict[str, Dict], claims: Dict, meta: Dict) -> str:
+    lines = [
+        "# Paper-figure results",
+        "",
+        f"Generated by `python benchmarks/paper_figures.py"
+        f"{' --tiny' if meta['tiny'] else ''}` "
+        f"(policies: {', '.join(meta['policies'])}).",
+        "",
+    ]
+    if "scenarios" in figures:
+        rows = figures["scenarios"]["rows"]
+        sat = {(r["scenario"], r["policy"]): r["satisfied_pct"] for r in rows}
+        scns = sorted({r["scenario"] for r in rows})
+        pols = [p for p in meta["policies"] if any((s, p) in sat for s in scns)]
+        lines += ["## Satisfied-% by scenario x policy", ""]
+        lines += _md_table(
+            ["scenario"] + pols,
+            [[s] + [f"{sat[(s, p)]:.1f}" for p in pols] for s in scns],
+        )
+        lines.append("")
+    for fig in ("arrival-rate", "num-users", "qos-deadline", "qos-accuracy"):
+        if fig not in figures:
+            continue
+        rows = figures[fig]["rows"]
+        sat = {(r["x"], r["policy"]): r["satisfied_pct"] for r in rows}
+        xs = sorted({r["x"] for r in rows})
+        pols = [p for p in meta["policies"] if any((x, p) in sat for x in xs)]
+        lines += [f"## {fig}: satisfied-% vs {figures[fig]['x_label']}", ""]
+        lines += _md_table(
+            [figures[fig]["x_label"]] + pols,
+            [[str(x)] + [f"{sat[(x, p)]:.1f}" for p in pols] for x in xs],
+        )
+        lines.append("")
+    if "optimality-gap" in figures:
+        rows = figures["optimality-gap"]["rows"]
+        lines += ["## optimality-gap: GUS vs exact ILP (mean US)", ""]
+        lines += _md_table(
+            ["regime", "seed", "opt", "gus", "ratio", "gus-ordered", "ratio"],
+            [[r["regime"], str(r["seed"]), f"{r['opt']:.4f}", f"{r['gus']:.4f}",
+              f"{r['ratio']:.3f}", f"{r['gus_ordered']:.4f}",
+              f"{r['ratio_ordered']:.3f}"] for r in rows],
+        )
+        lines.append("")
+    lines += ["## Claims", "", "```json",
+              json.dumps(claims, indent=2), "```", ""]
+    lines += [
+        "Happy-Computation / Happy-Communication relax a feasibility",
+        "constraint, so in the numerical model (delays independent of server",
+        "load) they act as upper bounds rather than baselines; the paper's",
+        "testbed shows them collapsing under real congestion.  The >= 50%",
+        "claim is therefore checked against random / offload_all / local_all.",
+        "",
+    ]
+    return "\n".join(lines)
+
+
+def run(*, tiny: bool = False, out: str = "results/paper_figures", only=None):
+    out = Path(out)
+    selected = tuple(only) if only else FIGURES
+
+    builders = {
+        "arrival-rate": fig_arrival_rate,
+        "num-users": fig_num_users,
+        "qos-deadline": fig_qos_deadline,
+        "qos-accuracy": fig_qos_accuracy,
+        "scenarios": fig_scenarios,
+        "optimality-gap": fig_optimality_gap,
+    }
+    figures = {name: builders[name](tiny) for name in selected}
+    claims = check_claims(figures)
+
+    meta = {
+        "tiny": tiny,
+        "policies": list_policies(),
+        "scenarios": list_scenarios(),
+        "figures": list(selected),
+    }
+    out.mkdir(parents=True, exist_ok=True)
+    json_path = out / "paper_figures.json"
+    md_path = out / "paper_figures.md"
+    json_path.write_text(json.dumps(
+        {"meta": meta, "figures": figures, "claims": claims}, indent=2
+    ))
+    md_path.write_text(render_markdown(figures, claims, meta))
+    print(f"wrote {json_path} and {md_path}")
+
+    # claim assertions AFTER writing, so artifacts survive a failed check
+    if "scenarios" in figures:
+        c = claims["gus_vs_baselines_scenarios"]
+        assert c["gus_beats_every_baseline"], c
+    if "optimality-gap" in figures:
+        r = claims["gus_over_optimal"]["mean_ratio"]
+        floor = 0.75 if tiny else 0.85
+        assert r >= floor, f"paper reports ~0.90 of optimal; got {r:.3f}"
+    return {"figures": figures, "claims": claims}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: fewer points/seeds/replications")
+    ap.add_argument("--out", default="results/paper_figures",
+                    help="output directory for JSON + markdown")
+    ap.add_argument("--only", action="append", choices=FIGURES,
+                    help="run a subset of figures (repeatable)")
+    args = ap.parse_args(argv)
+    return run(tiny=args.tiny, out=args.out, only=args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -3,6 +3,7 @@ benches.  ``PYTHONPATH=src python -m benchmarks.run [--fast]``.
 
   fig1a-d   — numerical sweeps (Fig. 1(a)-(d))
   fig1e-h   — virtual-testbed sweeps (Fig. 1(e)-(h))
+  figures   — paper-figure pipeline: every policy x scenario, JSON + markdown
   optimal   — GUS vs exact ILP (the ~90%-of-CPLEX table)
   sched     — GUS scheduling throughput (jit/vmap systems number)
   scenarios — satisfied-% per scheduler per registered workload scenario
@@ -20,7 +21,7 @@ def main(argv=None):
     ap.add_argument("--fast", action="store_true", help="fewer MC runs")
     ap.add_argument(
         "--only",
-        choices=["fig1num", "fig1test", "optimal", "sched", "serving", "extensions", "scenarios", "roofline"],
+        choices=["fig1num", "fig1test", "figures", "optimal", "sched", "serving", "extensions", "scenarios", "roofline"],
         default=None,
     )
     args = ap.parse_args(argv)
@@ -30,6 +31,7 @@ def main(argv=None):
         fig1_numerical,
         fig1_testbed,
         optimal_gap,
+        paper_figures,
         roofline_table,
         scenario_sweep,
         scheduler_throughput,
@@ -43,6 +45,7 @@ def main(argv=None):
             n_points=(200, 1600) if args.fast else (200, 800, 1600),
             seeds=(0,) if args.fast else (0, 1, 2),
         ),
+        "figures": lambda: paper_figures.run(tiny=args.fast),
         "optimal": lambda: optimal_gap.main(10 if args.fast else 25),
         "sched": scheduler_throughput.main,
         "serving": lambda: serving_bench.main(6 if args.fast else 12),

@@ -1,9 +1,11 @@
-"""Scenario sweep: satisfied-user % per scheduler per registered scenario.
+"""Scenario sweep: satisfied-user % per registered policy per registered scenario.
 
 For every scenario in the registry this runs the virtual testbed once per
-seed with each policy (GUS jitted hot path + the paper's heuristics) and,
-for GUS, the vmapped Monte-Carlo fleet runner — the "as many scenarios as
-you can imagine" benchmark the scenario engine exists for.
+seed with every vmappable policy from :mod:`repro.core.policies` (GUS's
+jitted hot path, ordered GUS, the paper's five heuristics) and, for GUS,
+the vmapped Monte-Carlo fleet runner — the "as many scenarios as you can
+imagine" benchmark the scenario engine exists for.  (The full matrix with
+the ILP oracle included lives in ``benchmarks/paper_figures.py``.)
 
 Prints CSV: sweep,scenario,policy,n_requests,satisfied_pct,dropped_pct,mean_us
 then one fleet line per scenario and a GUS-vs-best-heuristic summary.
@@ -12,40 +14,17 @@ Run:  PYTHONPATH=src python -m benchmarks.scenario_sweep [--fast]
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
     SimConfig,
     demo_cluster_spec,
     list_scenarios,
-    local_all,
-    offload_all,
-    random_assignment,
     simulate,
     simulate_fleet,
 )
 
-from .common import csv_row
-
-
-def make_policies(spec):
-    """Per-frame policies; every one honors the padding contract (infeasible
-    padded rows are dropped), so they all ride the fixed-shape hot path."""
-    cloud_mask = jnp.arange(spec.n_servers) >= spec.n_edge
-    counter = [0]
-
-    def random_policy(inst):
-        counter[0] += 1
-        return random_assignment(inst, jax.random.PRNGKey(counter[0]))
-
-    return {
-        "gus": None,  # simulate()'s default: jitted gus_schedule
-        "random": random_policy,
-        "local_all": local_all,
-        "offload_all": lambda inst: offload_all(inst, cloud_mask),
-    }
+from .common import SWEEP_POLICIES, csv_row
 
 
 def main(seeds=(0, 1, 2), n_rep=16, rate=2.0):
@@ -60,8 +39,11 @@ def main(seeds=(0, 1, 2), n_rep=16, rate=2.0):
     print("sweep,scenario,policy,n_requests,satisfied_pct,dropped_pct,mean_us")
     results = {}
     for name in list_scenarios():
-        for pol, fn in make_policies(spec).items():
-            rs = [simulate(spec, cfg, fn, scenario=name, seed=s).as_dict() for s in seeds]
+        for pol in SWEEP_POLICIES:
+            rs = [
+                simulate(spec, cfg, policy=pol, scenario=name, seed=s).as_dict()
+                for s in seeds
+            ]
             r = {k: float(np.mean([x[k] for x in rs])) for k in rs[0]}
             results[(name, pol)] = r
             print(
@@ -82,7 +64,8 @@ def main(seeds=(0, 1, 2), n_rep=16, rate=2.0):
             flush=True,
         )
 
-    # GUS should never trail the best heuristic by more than noise, anywhere
+    # GUS should never trail the best restricted heuristic by more than
+    # noise, anywhere (Happy-* are relaxations — upper bounds, not baselines)
     for name in list_scenarios():
         g = results[(name, "gus")]["satisfied_pct"]
         best_h = max(

@@ -1,62 +1,53 @@
 """Run any registered workload scenario through the virtual testbed.
 
-One entrypoint for the whole scenario registry: pick a scenario, a scheduler
-and a load level; optionally also run the vmapped Monte-Carlo fleet for
-replicated statistics.
+One entrypoint for the whole scenario *and* policy registry: pick a
+scenario, a policy and a load level; optionally also run the vmapped
+Monte-Carlo fleet for replicated statistics.
 
     PYTHONPATH=src python examples/run_scenario.py --list
     PYTHONPATH=src python examples/run_scenario.py --scenario flash-crowd
-    PYTHONPATH=src python examples/run_scenario.py --scenario outage --fleet 32
+    PYTHONPATH=src python examples/run_scenario.py --scenario outage --policy local_all
+    PYTHONPATH=src python examples/run_scenario.py --scenario diurnal --policy random --fleet 32
 """
 from __future__ import annotations
 
 import argparse
 
-import jax.numpy as jnp
-
 from repro.core import (
     SimConfig,
     demo_cluster_spec,
+    get_policy,
     get_scenario,
     gus_schedule_np,
+    list_policies,
     list_scenarios,
-    local_all,
-    offload_all,
     simulate,
     simulate_fleet,
 )
 
 
-def make_scheduler(name, spec):
-    if name == "gus":
-        return None  # simulate()'s default: the jitted gus_schedule hot path
-    if name == "gus-np":
-        return gus_schedule_np
-    if name == "local_all":
-        return local_all
-    if name == "offload_all":
-        cloud = jnp.arange(spec.n_servers) >= spec.n_edge
-        return lambda inst: offload_all(inst, cloud)
-    raise SystemExit(f"unknown scheduler {name!r}")
-
-
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scenario", default="paper-default")
-    ap.add_argument("--scheduler", default="gus",
-                    choices=["gus", "gus-np", "local_all", "offload_all"])
+    ap.add_argument("--policy", default="gus",
+                    help="registered policy name, or 'gus-np' for the NumPy oracle")
     ap.add_argument("--rate", type=float, default=2.0, help="arrivals/s per edge")
     ap.add_argument("--horizon-s", type=float, default=60.0)
     ap.add_argument("--deadline-ms", type=float, default=6000.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fleet", type=int, default=0, metavar="R",
                     help="also run R vmapped Monte-Carlo replications")
-    ap.add_argument("--list", action="store_true", help="list scenarios and exit")
+    ap.add_argument("--list", action="store_true",
+                    help="list scenarios and policies, then exit")
     args = ap.parse_args(argv)
 
     if args.list:
+        print("scenarios:")
         for name in list_scenarios():
-            print(f"{name:15s} {get_scenario(name).description}")
+            print(f"  {name:15s} {get_scenario(name).description}")
+        print("policies:")
+        for name in list_policies():
+            print(f"  {name:20s} {get_policy(name).description}")
         return
 
     spec = demo_cluster_spec()
@@ -71,14 +62,28 @@ def main(argv=None):
         scn = get_scenario(args.scenario)
     except KeyError as e:
         raise SystemExit(e.args[0])
-    print(f"=== scenario {scn.name!r}: {scn.description} ===")
-    r = simulate(spec, cfg, make_scheduler(args.scheduler, spec),
-                 scenario=scn, seed=args.seed)
+    # `gus-np` is the NumPy parity oracle, not a registered policy (it is the
+    # thing the registered `gus` is tested against)
+    sim_kw = (
+        {"scheduler": gus_schedule_np} if args.policy == "gus-np"
+        else {"policy": args.policy}
+    )
+    print(f"=== scenario {scn.name!r} / policy {args.policy!r} ===")
+    try:
+        r = simulate(spec, cfg, scenario=scn, seed=args.seed, **sim_kw)
+    except (KeyError, ValueError) as e:  # unknown policy / ILP frame too big
+        raise SystemExit(str(e.args[0]))
     for k, v in r.as_dict().items():
         print(f"  {k:20s} {float(v):10.3f}")
 
     if args.fleet:
-        fr = simulate_fleet(spec, cfg, scenario=scn, n_rep=args.fleet, seed=args.seed)
+        if args.policy == "gus-np":
+            raise SystemExit("gus-np is host-only; the fleet needs a registered policy")
+        try:
+            fr = simulate_fleet(spec, cfg, scenario=scn, n_rep=args.fleet,
+                                seed=args.seed, **sim_kw)
+        except ValueError as e:  # e.g. ILP on an uncapped (queue-less) fleet frame
+            raise SystemExit(str(e.args[0]))
         print(f"=== fleet: {args.fleet} replications, one device program ===")
         for k, v in fr.as_dict().items():
             print(f"  {k:20s} {float(v):10.3f}")

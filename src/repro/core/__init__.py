@@ -1,5 +1,6 @@
 """Core of the reproduction: the paper's MUS problem, GUS greedy scheduler,
-exact ILP oracle, baseline heuristics and the virtual-testbed simulator."""
+exact ILP oracle, baseline heuristics, the policy registry that puts them
+all behind one interface, and the virtual-testbed simulator."""
 from .instance import (
     FlatInstance,
     GeneratorConfig,
@@ -26,6 +27,14 @@ from .scenarios import (
     register_scenario,
     get_scenario,
     list_scenarios,
+)
+from .policies import (
+    Policy,
+    POLICIES,
+    register_policy,
+    get_policy,
+    list_policies,
+    make_ilp_policy,
 )
 from .simulator import (
     ClusterSpec,
@@ -67,6 +76,12 @@ __all__ = [
     "register_scenario",
     "get_scenario",
     "list_scenarios",
+    "Policy",
+    "POLICIES",
+    "register_policy",
+    "get_policy",
+    "list_policies",
+    "make_ilp_policy",
     "ClusterSpec",
     "SimConfig",
     "SimResult",

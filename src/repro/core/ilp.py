@@ -50,8 +50,16 @@ def _prepare(inst: FlatInstance):
     return us, cands, cover, gamma, eta, N
 
 
-def solve_bnb(inst: FlatInstance, *, node_limit: int = 5_000_000) -> Tuple[Assignment, float]:
-    """Exact optimum of (2).  Returns (assignment, objective = mean US)."""
+def solve_bnb(
+    inst: FlatInstance, *, node_limit: int = 5_000_000, strict: bool = False
+) -> Tuple[Assignment, float]:
+    """Exact optimum of (2).  Returns (assignment, objective = mean US).
+
+    When the node budget trips, the search stops and the best solution found
+    so far is returned (anytime behaviour) — unless ``strict=True``, which
+    raises instead, so callers that certify optimality (the optimality-gap
+    benchmarks) cannot silently divide by a non-optimal "optimum".
+    """
     us, cands, cover, gamma0, eta0, N = _prepare(inst)
 
     # Sort requests so the ones with the largest optimistic US go first.
@@ -100,9 +108,15 @@ def solve_bnb(inst: FlatInstance, *, node_limit: int = 5_000_000) -> Tuple[Assig
         dfs(pos + 1, cur_val)
 
     dfs(0, 0.0)
+    if strict and nodes > node_limit:
+        raise RuntimeError(
+            f"solve_bnb hit node_limit={node_limit} before exhausting the "
+            f"search on a {N}-request instance; the returned value would not "
+            "be a certified optimum"
+        )
     jv = np.array([a[0] for a in best_assign], np.int32)
     lv = np.array([a[1] for a in best_assign], np.int32)
-    return Assignment(jv, lv), float(best_val) / N
+    return Assignment(jv, lv), float(best_val) / max(N, 1)
 
 
 def solve_exhaustive(inst: FlatInstance) -> Tuple[Assignment, float]:

@@ -1,0 +1,242 @@
+"""Policy registry — every scheduler in the repo behind one named interface.
+
+The paper's evaluation is a *family* comparison: GUS against five baseline
+heuristics (Sec. IV) and against the exact ILP optimum on small instances.
+The simulator originally hard-wired ``gus_schedule``; a :class:`Policy`
+wraps any scheduler ``FlatInstance -> Assignment`` together with the
+metadata the simulator and benchmarks need to run it on the padded-frame
+hot path:
+
+* ``needs_key``    — the policy consumes a fresh ``jax.random`` key per
+  frame (``random``).  :func:`~repro.core.simulator.simulate` splits a key
+  chain seeded by its ``seed``; :func:`~repro.core.simulator.simulate_fleet`
+  threads one key per (replication, frame) through the vmapped program.
+* ``vmappable``    — the policy is a pure jit/vmap-compatible JAX function
+  (everything except the host-side branch & bound).
+* ``pad``          — the policy honors the padding contract of
+  :func:`~repro.core.instance.pad_instance` (infeasible padded rows are
+  dropped without touching capacity).  The ILP oracle instead schedules the
+  *unpadded* frame — branch & bound is shape-flexible and every padded row
+  would only add an empty candidate list.
+* ``max_requests`` — hard per-frame size ceiling (ILP only: the B&B is
+  exponential in the frame size, so it refuses frames it cannot certify).
+* ``kind``         — ``"greedy"`` (GUS variants), ``"baseline"`` (the
+  paper's restricted heuristics), ``"relaxed"`` (Happy-* constraint
+  relaxations; *upper bounds* in the numerical model, see
+  ``benchmarks/paper_figures.py``), or ``"oracle"`` (exact ILP).
+
+A policy is *bound* to a cluster shape before use: ``bind(n_edge,
+n_servers)`` returns the per-frame schedule function, closing over whatever
+static state the policy needs (e.g. the cloud mask for ``offload_all``).
+
+Registering a custom policy takes a handful of lines::
+
+    import jax.numpy as jnp
+    from repro.core import Policy, offload_all, register_policy, simulate
+
+    register_policy(Policy(
+        name="cloud-only",
+        description="every request goes to the cloud tier",
+        make=lambda n_edge, n_servers: (
+            lambda inst: offload_all(inst, jnp.arange(n_servers) >= n_edge)
+        ),
+    ))
+    simulate(spec, cfg, policy="cloud-only")
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional, Union
+
+import jax.numpy as jnp
+
+from .baselines import (
+    local_all,
+    offload_all,
+    random_assignment,
+)
+from .extensions import gus_schedule_ordered
+from .gus import Assignment, gus_schedule
+from .ilp import solve_bnb
+from .instance import FlatInstance
+
+__all__ = [
+    "Policy",
+    "POLICIES",
+    "register_policy",
+    "get_policy",
+    "list_policies",
+    "make_ilp_policy",
+    "ILP_DEFAULT_MAX_REQUESTS",
+    "ILP_DEFAULT_NODE_LIMIT",
+]
+
+ILP_DEFAULT_MAX_REQUESTS = 24
+ILP_DEFAULT_NODE_LIMIT = 200_000
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """One named scheduling policy (see module docstring for the fields)."""
+
+    name: str
+    description: str
+    #: factory ``(n_edge, n_servers) -> schedule_fn``; the returned function
+    #: maps ``FlatInstance -> Assignment`` (plus a PRNG key when ``needs_key``).
+    make: Callable[[int, int], Callable]
+    needs_key: bool = False
+    vmappable: bool = True
+    pad: bool = True
+    max_requests: Optional[int] = None
+    kind: str = "baseline"
+
+    def bind(self, n_edge: int, n_servers: int) -> Callable:
+        """Close over the cluster shape; returns the per-frame schedule fn."""
+        return self.make(n_edge, n_servers)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+POLICIES: Dict[str, Policy] = {}
+
+
+def register_policy(policy: Policy) -> Policy:
+    """Register a :class:`Policy` under its ``name`` (last write wins).
+    Returns the argument unchanged."""
+    POLICIES[policy.name] = policy
+    return policy
+
+
+def get_policy(policy: Union[str, Policy]) -> Policy:
+    """Resolve a policy by name (or pass a :class:`Policy` through)."""
+    if isinstance(policy, Policy):
+        return policy
+    try:
+        return POLICIES[policy]
+    except KeyError:
+        raise KeyError(
+            f"unknown policy {policy!r}; registered: {', '.join(list_policies())}"
+        ) from None
+
+
+def list_policies() -> List[str]:
+    """Registered policy names, in registration order (GUS first)."""
+    return list(POLICIES)
+
+
+# ---------------------------------------------------------------------------
+# Built-in policies
+# ---------------------------------------------------------------------------
+
+
+def _make_ilp(
+    n_edge: int,
+    n_servers: int,
+    *,
+    max_requests: int = ILP_DEFAULT_MAX_REQUESTS,
+    node_limit: int = ILP_DEFAULT_NODE_LIMIT,
+    strict: bool = False,
+) -> Callable[[FlatInstance], Assignment]:
+    def schedule(inst: FlatInstance) -> Assignment:
+        n = int(inst.n_requests)
+        if n == 0:
+            empty = jnp.full((0,), -1, jnp.int32)
+            return Assignment(empty, empty)
+        if n > max_requests:
+            raise ValueError(
+                f"ilp policy refuses a {n}-request frame (max {max_requests}); "
+                "shrink the frame (queue_cap / arrival rate) or use a greedy policy"
+            )
+        assign, _ = solve_bnb(inst, node_limit=node_limit, strict=strict)
+        return assign
+
+    return schedule
+
+
+def make_ilp_policy(
+    *,
+    max_requests: int = ILP_DEFAULT_MAX_REQUESTS,
+    node_limit: int = ILP_DEFAULT_NODE_LIMIT,
+    strict: bool = False,
+    name: str = "ilp",
+) -> Policy:
+    """An ILP-oracle :class:`Policy` with custom frame-size / search budgets.
+
+    The *registered* ``ilp`` uses the defaults, tuned for in-simulator frames
+    (queue-capped, anytime behaviour is fine).  Benchmarks that certify the
+    "~90% of optimal" claim should pass ``strict=True`` with a large
+    ``node_limit``: ``strict`` makes the branch & bound raise instead of
+    returning a best-so-far when the node budget trips, so "opt" is always a
+    certified optimum.
+    """
+    return Policy(
+        name=name,
+        description=f"exact MUS optimum via branch & bound (<= {max_requests} requests)",
+        make=functools.partial(
+            _make_ilp, max_requests=max_requests, node_limit=node_limit,
+            strict=strict,
+        ),
+        vmappable=False,
+        pad=False,
+        max_requests=max_requests,
+        kind="oracle",
+    )
+
+
+register_policy(Policy(
+    name="gus",
+    description="Algorithm 1 (GUS): greedy max-US in arrival order, jitted",
+    make=lambda n_edge, n_servers: gus_schedule,
+    kind="greedy",
+))
+
+register_policy(Policy(
+    name="gus-ordered",
+    description="GUS processing requests by descending best-achievable US",
+    make=lambda n_edge, n_servers: gus_schedule_ordered,
+    kind="greedy",
+))
+
+register_policy(Policy(
+    name="random",
+    description="baseline 1: one uniformly-random server per request",
+    make=lambda n_edge, n_servers: random_assignment,
+    needs_key=True,
+))
+
+register_policy(Policy(
+    name="offload_all",
+    description="baseline 2: cloud servers only",
+    make=lambda n_edge, n_servers: (
+        lambda inst: offload_all(inst, jnp.arange(n_servers) >= n_edge)
+    ),
+))
+
+register_policy(Policy(
+    name="local_all",
+    description="baseline 3: the covering edge server only",
+    make=lambda n_edge, n_servers: local_all,
+))
+
+register_policy(Policy(
+    name="happy_computation",
+    description="baseline 4: GUS with the computation constraint (2d) relaxed",
+    make=lambda n_edge, n_servers: (
+        lambda inst: gus_schedule(inst, relax_compute=True)
+    ),
+    kind="relaxed",
+))
+
+register_policy(Policy(
+    name="happy_communication",
+    description="baseline 5: GUS with the communication constraint (2e) relaxed",
+    make=lambda n_edge, n_servers: (
+        lambda inst: gus_schedule(inst, relax_comm=True)
+    ),
+    kind="relaxed",
+))
+
+register_policy(make_ilp_policy())

@@ -22,8 +22,10 @@ Beyond the paper, two axes are pluggable:
   QoS draws, per-frame capacity masks (outages) and mobility;
 * **decision path** — by default each frame is padded to a fixed shape
   (see :func:`repro.core.instance.pad_instance`) and scheduled by the
-  *jitted* ``gus_schedule``; ``gus_schedule_np`` stays available as the
-  NumPy parity oracle, and :func:`simulate_fleet` stacks R independent
+  *jitted* ``gus_schedule``; any registered :class:`~repro.core.policies.Policy`
+  (GUS variants, the paper's five baselines, the exact ILP oracle) runs on
+  the same hot path via ``policy=``; ``gus_schedule_np`` stays available as
+  the NumPy parity oracle, and :func:`simulate_fleet` stacks R independent
   Monte-Carlo replications into one vmapped device program.
 """
 from __future__ import annotations
@@ -36,6 +38,7 @@ import numpy as np
 
 from .gus import Assignment, gus_schedule, gus_schedule_np
 from .instance import FlatInstance, pad_instance, stack_instances
+from .policies import Policy, get_policy
 from .satisfaction import mean_us, satisfied_mask
 from .scenarios import Request, Scenario, get_scenario
 
@@ -227,22 +230,48 @@ def _frame_budgets(spec: ClusterSpec, cfg: SimConfig, scn: Scenario, frame_start
     return g.copy(), e.copy()
 
 
+def _resolve_policy(
+    scheduler, policy
+) -> Optional[Policy]:
+    """Normalize the (scheduler, policy) pair to an optional bound Policy.
+
+    Returns the resolved :class:`Policy` when one was requested (by name, as
+    a Policy object, or as a name passed positionally through ``scheduler``),
+    else ``None`` — meaning "use ``scheduler`` as a raw callable / default".
+    """
+    if policy is not None:
+        if scheduler is not None:
+            raise ValueError("pass either scheduler= or policy=, not both")
+        return get_policy(policy)
+    if isinstance(scheduler, (str, Policy)):
+        return get_policy(scheduler)
+    return None
+
+
 def simulate(
     spec: ClusterSpec,
     cfg: SimConfig,
     scheduler: Optional[Callable[[FlatInstance], Assignment]] = None,
     *,
+    policy: Union[str, Policy, None] = None,
     scenario: Union[str, Scenario] = "paper-default",
     seed: int = 0,
     n_requests: Optional[int] = None,
 ) -> SimResult:
     """Run the virtual testbed.
 
-    ``scheduler`` maps FlatInstance -> Assignment (GUS, any baseline, or a
-    custom policy); the default is the *jitted* ``gus_schedule``.  Every
-    frame's queue is padded to a power-of-two bucket with infeasible rows
-    (:func:`pad_instance`), so the jitted path compiles once per bucket and
-    returns the same assignments as the NumPy oracle on the real rows.
+    ``policy`` names a registered :class:`~repro.core.policies.Policy`
+    (``"gus"``, ``"gus-ordered"``, the five baselines, ``"ilp"``, or any
+    custom registration); per-policy state is threaded by the simulator —
+    ``random`` gets a fresh PRNG key per decision from a chain seeded by
+    ``seed``, ``offload_all`` is bound to the cluster's cloud mask, and the
+    ``ilp`` oracle schedules unpadded frames on the host.  Alternatively
+    ``scheduler`` passes a raw callable FlatInstance -> Assignment (a policy
+    name is also accepted positionally); the default is the *jitted*
+    ``gus_schedule``.  Every frame's queue is padded to a power-of-two
+    bucket with infeasible rows (:func:`pad_instance`), so the jitted path
+    compiles once per bucket and returns the same assignments as the NumPy
+    oracle on the real rows.
 
     ``scenario`` names a registered workload (see
     :func:`repro.core.scenarios.list_scenarios`) shaping arrivals, QoS,
@@ -252,7 +281,15 @@ def simulate(
     If ``n_requests`` is given, the arrival process stops after that many
     submissions (the paper's x-axis in Fig. 1(e)-(h) is total #requests).
     """
-    if scheduler is None:
+    pol = _resolve_policy(scheduler, policy)
+    pkey = None
+    pad = True
+    if pol is not None:
+        scheduler = pol.bind(spec.n_edge, spec.n_servers)
+        pad = pol.pad
+        if pol.needs_key:
+            pkey = jax.random.PRNGKey(seed)
+    elif scheduler is None:
         scheduler = gus_schedule
     scn = get_scenario(scenario)
     rng = np.random.default_rng(seed)
@@ -315,8 +352,14 @@ def simulate(
                 gamma=rem_gamma, eta=rem_eta,
             )
             # fixed-shape hot path: pad to a bucket so jitted schedulers
-            # compile once per bucket; padded rows are infeasible -> dropped
-            assign = scheduler(pad_instance(inst, _pad_bucket(n_real)))
+            # compile once per bucket; padded rows are infeasible -> dropped.
+            # Non-padding policies (the ILP oracle) see the raw frame.
+            frame_inst = pad_instance(inst, _pad_bucket(n_real)) if pad else inst
+            if pkey is not None:
+                pkey, sub = jax.random.split(pkey)
+                assign = scheduler(frame_inst, sub)
+            else:
+                assign = scheduler(frame_inst)
             jv = np.asarray(assign.j)[:n_real]
             lv = np.asarray(assign.l)[:n_real]
 
@@ -423,6 +466,7 @@ def simulate_fleet(
     cfg: SimConfig,
     scheduler: Optional[Callable[[FlatInstance], Assignment]] = None,
     *,
+    policy: Union[str, Policy, None] = None,
     scenario: Union[str, Scenario] = "paper-default",
     n_rep: int = 16,
     seed: int = 0,
@@ -434,6 +478,13 @@ def simulate_fleet(
     ``R * T`` and scheduled by a single vmapped call — this is the
     throughput path for scenario sweeps (the paper runs 20 000 repetitions).
 
+    ``policy`` names a registered :class:`~repro.core.policies.Policy`; its
+    per-frame state rides the vmapped program: a ``needs_key`` policy
+    (``random``) receives one PRNG key per (replication, frame) pair split
+    from ``seed``, ``offload_all``'s cloud mask is a closed-over constant,
+    and a non-vmappable policy (the ``ilp`` oracle) falls back to a
+    host-side loop over the *unpadded* frames feeding the same metrics path.
+
     Frame semantics are *frame-synchronous*: one decision per frame at the
     frame boundary (no queue-cap early closes), per-frame budgets refresh
     through the scenario's capacity stream, and the scheduler sees the true
@@ -441,6 +492,7 @@ def simulate_fleet(
     times (like the paper's numerical Monte-Carlo); use :func:`simulate` for
     stochastic channel realizations and the EMA bandwidth estimator.
     """
+    pol = _resolve_policy(scheduler, policy)
     scn = get_scenario(scenario)
     T = max(1, int(np.ceil(cfg.horizon_ms / cfg.frame_ms)))
     K = spec.proc_ms.shape[1]
@@ -459,20 +511,46 @@ def simulate_fleet(
         fleet_frames.extend(buckets)
 
     n_pad = _pad_bucket(max(len(b) for b in fleet_frames))
-    insts = []
+    raw_insts = []
     n_real = np.array([len(b) for b in fleet_frames], np.int32)
     for i, bucket in enumerate(fleet_frames):
         frame_start = (i % T) * cfg.frame_ms
         gamma, eta = _frame_budgets(spec, cfg, scn, frame_start)
-        inst = _build_frame_instance(
+        raw_insts.append(_build_frame_instance(
             bucket, spec, cfg, frame_start + cfg.frame_ms,
             spec.bandwidth_true, cfg.max_cs, gamma=gamma, eta=eta,
-        )
-        insts.append(pad_instance(inst, n_pad))
+        ))
+    insts = [pad_instance(r, n_pad) for r in raw_insts]
     batch = stack_instances(insts)  # leading axis: R * T frames
 
-    fn = gus_schedule if scheduler is None else scheduler
-    assign = jax.vmap(fn)(batch)
+    if pol is not None and (not pol.vmappable or not pol.pad):
+        # host-side policy (the ILP oracle), or one that opted out of the
+        # padding contract (the vmapped batch path requires padded shapes):
+        # schedule each unpadded frame in a Python loop, then re-pad the
+        # assignments with drops so the masked metrics path below is shared
+        # with the vmapped policies.
+        fn = pol.bind(spec.n_edge, spec.n_servers)
+        keys = (
+            jax.random.split(jax.random.PRNGKey(seed), len(raw_insts))
+            if pol.needs_key else None
+        )
+        jv = np.full((len(raw_insts), n_pad), -1, np.int32)
+        lv = np.full((len(raw_insts), n_pad), -1, np.int32)
+        for i, (inst, n) in enumerate(zip(raw_insts, n_real)):
+            a = fn(inst, keys[i]) if keys is not None else fn(inst)
+            jv[i, :n] = np.asarray(a.j)
+            lv[i, :n] = np.asarray(a.l)
+        assign = Assignment(jv, lv)
+    elif pol is not None:
+        fn = pol.bind(spec.n_edge, spec.n_servers)
+        if pol.needs_key:
+            keys = jax.random.split(jax.random.PRNGKey(seed), len(insts))
+            assign = jax.vmap(fn)(batch, keys)
+        else:
+            assign = jax.vmap(fn)(batch)
+    else:
+        fn = gus_schedule if scheduler is None else scheduler
+        assign = jax.vmap(fn)(batch)
 
     sat = np.asarray(satisfied_mask(batch, assign.j, assign.l))   # (R*T, n_pad)
     us = np.asarray(mean_us(batch, assign.j, assign.l))           # (R*T,)

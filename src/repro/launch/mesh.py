@@ -10,23 +10,27 @@ import jax
 __all__ = ["make_production_mesh", "make_test_mesh", "mesh_name"]
 
 
+def _make_mesh(shape, axes):
+    # jax >= 0.5 takes axis_types (and 0.7+ defaults to Explicit); jax 0.4.x
+    # has no jax.sharding.AxisType — its meshes are always Auto.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 v5e pod (256 chips) or 2x16x16 two-pod fleet (512 chips).
 
     Axes: `pod` (DCN, pure-DP) x `data` (batch) x `model` (tensor/expert)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over however many (host) devices are available."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def mesh_name(mesh) -> str:

@@ -1,0 +1,323 @@
+"""Policy registry: every scheduler behind one interface, on the simulator's
+padded hot path — registry contents, per-policy state threading, padded-batch
+parity against NumPy references, and the paper's GUS-beats-baselines claim."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    GeneratorConfig,
+    Policy,
+    SimConfig,
+    demo_cluster_spec,
+    generate_instance,
+    get_policy,
+    gus_schedule,
+    gus_schedule_np,
+    hard_feasible,
+    list_policies,
+    list_scenarios,
+    mean_us,
+    pad_instance,
+    register_policy,
+    simulate,
+    simulate_fleet,
+    solve_bnb,
+    us_tensor,
+)
+from repro.core.policies import POLICIES
+
+BUILTIN = (
+    "gus", "gus-ordered", "random", "offload_all", "local_all",
+    "happy_computation", "happy_communication", "ilp",
+)
+
+TINY = GeneratorConfig(n_requests=6, n_edge=2, n_cloud=1, n_services=3, n_variants=2)
+
+
+def small_spec():
+    return demo_cluster_spec(n_edge=2, n_cloud=1, n_services=2, n_variants=2)
+
+
+def small_cfg(**kw):
+    return SimConfig(
+        horizon_ms=kw.pop("horizon_ms", 6000.0),
+        arrival_rate_per_s=kw.pop("arrival_rate_per_s", 1.5),
+        delay_req_ms=kw.pop("delay_req_ms", 6000.0),
+        acc_req_mean=50.0,
+        acc_req_std=10.0,
+        **kw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Registry API
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_the_documented_policies():
+    names = list_policies()
+    for n in BUILTIN:
+        assert n in names
+    assert names[0] == "gus"  # registration order preserved, GUS first
+
+
+def test_get_policy_resolves_and_rejects():
+    p = get_policy("gus")
+    assert p.name == "gus" and get_policy(p) is p
+    with pytest.raises(KeyError, match="unknown policy"):
+        get_policy("definitely-not-registered")
+
+
+def test_policy_kinds_partition_the_registry():
+    kinds = {n: get_policy(n).kind for n in BUILTIN}
+    assert kinds["gus"] == kinds["gus-ordered"] == "greedy"
+    assert kinds["ilp"] == "oracle"
+    assert {kinds["random"], kinds["offload_all"], kinds["local_all"]} == {"baseline"}
+    assert {kinds["happy_computation"], kinds["happy_communication"]} == {"relaxed"}
+
+
+def test_register_custom_policy_runs_in_simulator():
+    name = "test-cheapest-edge"
+    register_policy(Policy(
+        name=name,
+        description="everything on the covering edge (custom-policy smoke)",
+        make=lambda n_edge, n_servers: get_policy("local_all").bind(n_edge, n_servers),
+    ))
+    try:
+        r = simulate(small_spec(), small_cfg(), policy=name, seed=0)
+        assert r.n_cloud == 0 and r.n_edge_offload == 0
+    finally:
+        POLICIES.pop(name, None)
+
+
+def test_pad_false_policy_sees_unpadded_frames_in_both_paths():
+    """A policy that opts out of the padding contract must receive raw frame
+    sizes from simulate() AND from the fleet (which host-loops it)."""
+    name = "test-unpadded-probe"
+    seen = []
+
+    def make(n_edge, n_servers):
+        gus_fn = get_policy("gus").bind(n_edge, n_servers)
+
+        def fn(inst):
+            seen.append(int(inst.n_requests))
+            return gus_fn(inst)
+
+        return fn
+
+    register_policy(Policy(name=name, description="pad=False probe", make=make, pad=False))
+    try:
+        r = simulate(small_spec(), small_cfg(), policy=name, seed=0)
+        assert sum(seen) == r.n_served + r.n_dropped
+        seen.clear()
+        fr = simulate_fleet(small_spec(), small_cfg(), policy=name, n_rep=2, seed=0)
+        assert sum(seen) == fr.n_requests  # raw buckets, no pow2 padding
+    finally:
+        POLICIES.pop(name, None)
+
+
+def test_host_side_needs_key_policy_gets_keys_in_the_fleet():
+    """The fleet's host-loop fallback must thread PRNG keys exactly like the
+    vmapped path does (custom non-vmappable policies can need them too)."""
+    name = "test-host-random"
+    register_policy(Policy(
+        name=name,
+        description="random, forced onto the host loop",
+        make=lambda n_edge, n_servers: get_policy("random").bind(n_edge, n_servers),
+        needs_key=True,
+        vmappable=False,
+    ))
+    try:
+        fa = simulate_fleet(small_spec(), small_cfg(), policy=name, n_rep=2, seed=4)
+        fb = simulate_fleet(small_spec(), small_cfg(), policy=name, n_rep=2, seed=4)
+        np.testing.assert_allclose(fa.satisfied_per_rep, fb.satisfied_per_rep)
+        assert np.isfinite(fa.satisfied_pct) and fa.n_served > 0
+    finally:
+        POLICIES.pop(name, None)
+
+
+def test_scheduler_and_policy_are_mutually_exclusive():
+    with pytest.raises(ValueError, match="not both"):
+        simulate(small_spec(), small_cfg(), gus_schedule_np, policy="gus")
+
+
+def test_policy_name_accepted_positionally():
+    a = simulate(small_spec(), small_cfg(), "gus", seed=0).as_dict()
+    b = simulate(small_spec(), small_cfg(), policy="gus", seed=0).as_dict()
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# Every policy x every scenario: one short run, finite stats
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", BUILTIN)
+@pytest.mark.parametrize("scenario", sorted(["paper-default", "diurnal", "flash-crowd",
+                                             "mobility", "hetero-tiers", "outage"]))
+def test_every_policy_runs_every_scenario_without_nans(policy, scenario):
+    assert scenario in list_scenarios()
+    r = simulate(small_spec(), small_cfg(), policy=policy, scenario=scenario, seed=0)
+    d = r.as_dict()
+    assert all(np.isfinite(v) for v in d.values()), d
+    assert r.n_served + r.n_dropped == r.n_requests
+    assert r.n_local + r.n_cloud + r.n_edge_offload == r.n_served
+    assert 0.0 <= r.satisfied_pct <= 100.0
+
+
+@pytest.mark.parametrize("policy", BUILTIN)
+def test_every_policy_runs_the_fleet(policy):
+    fr = simulate_fleet(small_spec(), small_cfg(), policy=policy, n_rep=2, seed=0)
+    assert np.isfinite(fr.satisfied_pct) and np.isfinite(fr.mean_us)
+    assert 0.0 <= fr.satisfied_pct <= 100.0
+    assert fr.n_served <= fr.n_requests
+
+
+def test_random_policy_deterministic_given_seed_and_seed_sensitive():
+    a = simulate(small_spec(), small_cfg(), policy="random", seed=7).as_dict()
+    b = simulate(small_spec(), small_cfg(), policy="random", seed=7).as_dict()
+    assert a == b
+    fa = simulate_fleet(small_spec(), small_cfg(), policy="random", n_rep=2, seed=3)
+    fb = simulate_fleet(small_spec(), small_cfg(), policy="random", n_rep=2, seed=3)
+    np.testing.assert_allclose(fa.satisfied_per_rep, fb.satisfied_per_rep)
+
+
+# ---------------------------------------------------------------------------
+# Padded-batch parity vs small NumPy references
+# ---------------------------------------------------------------------------
+
+
+def _restricted_greedy_np(inst, server_mask):
+    """NumPy reference for the mask-restricted greedy the jitted baselines
+    implement: per request, best-US feasible (server, variant) within the
+    allowed servers, capacities updating sequentially as in GUS."""
+    us = np.asarray(us_tensor(inst))
+    feas = np.asarray(hard_feasible(inst)) & server_mask[:, :, None]
+    v = np.asarray(inst.v)
+    u = np.asarray(inst.u)
+    cover = np.asarray(inst.cover)
+    gamma = np.asarray(inst.gamma).copy()
+    eta = np.asarray(inst.eta).copy()
+    N, M, L = us.shape
+    out_j = np.full(N, -1, np.int32)
+    out_l = np.full(N, -1, np.int32)
+    for i in range(N):
+        s_i = int(cover[i])
+        ok = (
+            feas[i]
+            & (v[i] <= gamma[:, None])
+            & ((np.arange(M) == s_i)[:, None] | (u[i] <= eta[s_i]))
+        )
+        if not ok.any():
+            continue
+        score = np.where(ok, us[i], -np.inf)
+        j, l = np.unravel_index(np.argmax(score), (M, L))
+        out_j[i], out_l[i] = j, l
+        gamma[j] -= v[i, j, l]
+        if j != s_i:
+            eta[s_i] -= u[i, j, l]
+    return out_j, out_l
+
+
+def _mask_for(policy, inst, picks=None):
+    N, M, _ = np.asarray(inst.acc).shape
+    cover = np.asarray(inst.cover)
+    if policy == "local_all":
+        return cover[:, None] == np.arange(M)[None, :]
+    if policy == "offload_all":
+        return np.broadcast_to(np.arange(M)[None, :] >= TINY.n_edge, (N, M)).copy()
+    if policy == "random":
+        return np.eye(M, dtype=bool)[picks]
+    raise AssertionError(policy)
+
+
+@pytest.mark.parametrize("policy", ["local_all", "offload_all", "random"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_restricted_baselines_padded_parity_vs_numpy_reference(policy, seed):
+    inst = generate_instance(seed, TINY)
+    n = TINY.n_requests
+    padded = pad_instance(inst, n + 3)
+    fn = get_policy(policy).bind(TINY.n_edge, TINY.n_edge + TINY.n_cloud)
+    if policy == "random":
+        key = jax.random.PRNGKey(seed)
+        picks = np.asarray(jax.random.randint(key, (n + 3,), 0, TINY.n_edge + TINY.n_cloud))
+        assign = fn(padded, key)
+        ref_j, ref_l = _restricted_greedy_np(inst, _mask_for(policy, inst, picks[:n]))
+    else:
+        assign = fn(padded)
+        ref_j, ref_l = _restricted_greedy_np(inst, _mask_for(policy, inst))
+    np.testing.assert_array_equal(np.asarray(assign.j)[:n], ref_j)
+    np.testing.assert_array_equal(np.asarray(assign.l)[:n], ref_l)
+    # padded rows are always dropped
+    assert (np.asarray(assign.j)[n:] == -1).all()
+    assert (np.asarray(assign.l)[n:] == -1).all()
+
+
+@pytest.mark.parametrize("policy,relax", [
+    ("happy_computation", {"gamma": True}),
+    ("happy_communication", {"eta": True}),
+])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_relaxed_baselines_padded_parity_vs_numpy_oracle(policy, relax, seed):
+    """Happy-* == plain GUS on an instance whose relaxed capacity is infinite,
+    so the NumPy GUS oracle on that instance is their reference."""
+    inst = generate_instance(seed, TINY)
+    relaxed = dataclasses.replace(
+        inst,
+        gamma=jnp.full_like(inst.gamma, np.inf) if "gamma" in relax else inst.gamma,
+        eta=jnp.full_like(inst.eta, np.inf) if "eta" in relax else inst.eta,
+    )
+    ref = gus_schedule_np(relaxed)
+    n = TINY.n_requests
+    fn = get_policy(policy).bind(TINY.n_edge, TINY.n_edge + TINY.n_cloud)
+    assign = fn(pad_instance(inst, n + 2))
+    np.testing.assert_array_equal(np.asarray(assign.j)[:n], np.asarray(ref.j))
+    np.testing.assert_array_equal(np.asarray(assign.l)[:n], np.asarray(ref.l))
+    assert (np.asarray(assign.j)[n:] == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# ILP oracle policy
+# ---------------------------------------------------------------------------
+
+
+def test_ilp_policy_matches_solve_bnb_and_dominates_gus():
+    inst = generate_instance(0, TINY)
+    fn = get_policy("ilp").bind(TINY.n_edge, TINY.n_edge + TINY.n_cloud)
+    a = fn(inst)
+    _, opt = solve_bnb(inst)
+    got = float(mean_us(inst, jnp.asarray(np.asarray(a.j)), jnp.asarray(np.asarray(a.l))))
+    assert got == pytest.approx(opt, abs=1e-5)
+    g = gus_schedule(inst)
+    assert got >= float(mean_us(inst, g.j, g.l)) - 1e-6
+
+
+def test_ilp_policy_refuses_oversized_frames():
+    big = GeneratorConfig(n_requests=40, n_edge=2, n_cloud=1, n_services=3, n_variants=2)
+    inst = generate_instance(0, big)
+    fn = get_policy("ilp").bind(2, 3)
+    with pytest.raises(ValueError, match="refuses"):
+        fn(inst)
+
+
+# ---------------------------------------------------------------------------
+# The paper's headline ordering on the paper-default scenario
+# ---------------------------------------------------------------------------
+
+
+def test_gus_beats_every_restricted_baseline_on_paper_default():
+    spec = demo_cluster_spec()
+    cfg = SimConfig(
+        horizon_ms=30_000.0, arrival_rate_per_s=3.0,
+        delay_req_ms=6000.0, acc_req_mean=50.0, acc_req_std=10.0,
+    )
+    sat = {
+        pol: simulate_fleet(spec, cfg, policy=pol, n_rep=4, seed=0).satisfied_pct
+        for pol in ("gus", "random", "offload_all", "local_all")
+    }
+    for baseline in ("random", "offload_all", "local_all"):
+        assert sat["gus"] >= sat[baseline], sat
