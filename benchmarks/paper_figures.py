@@ -10,14 +10,23 @@ results table per run (default: ``results/paper_figures/``):
   qos-accuracy    satisfied-% vs requested accuracy A_i      (Fig. 1(b) analog)
   scenarios       policy x scenario satisfied-% matrix, ILP oracle included
   optimality-gap  GUS / exact-optimum mean-US ratio          (the ~90% claim)
+                  + GUS / LP-relaxation bound on 100-request instances
+  congestion      satisfied-% under load-dependent service times — the
+                  testbed regime where Happy-* collapse below GUS and the
+                  paper's ">= 1.5x every baseline" claim is checked against
+                  ALL FIVE baselines
 
 Sweeps ride the registry: the vmapped fleet runner for the jit-compatible
 policies, the sequential testbed for the scenario matrix (so the host-side
-ILP oracle can join on small frames).  The Happy-* policies relax a
-feasibility constraint, so in the numerical model (no load-dependent delay)
-they are *upper bounds*, not baselines; the paper's ">= 50%" claim is
+ILP oracle can join on small frames).  In the *congestion-free* numerical
+model the Happy-* policies relax a feasibility constraint at zero cost, so
+there they are *upper bounds*, not baselines, and the ">= 50%" claim is
 checked against the restricted heuristics (random / offload_all /
-local_all), mirroring ``fig1_numerical.check_gus_factor``.
+local_all), mirroring ``fig1_numerical.check_gus_factor``.  The
+``congestion`` figure enables the load-dependent service-time model
+(:mod:`repro.core.queueing`), under which over-commitment hurts, the
+Happy-* relaxations collapse — exactly as in the paper's testbed — and the
+>= 1.5x check runs against all five.
 
 Run (no PYTHONPATH needed — the script finds ``src/`` itself):
 
@@ -42,10 +51,13 @@ if _SRC.is_dir() and str(_SRC) not in sys.path:
 import numpy as np
 
 from repro.core import (
+    CongestionConfig,
+    GeneratorConfig,
     SimConfig,
     demo_cluster_spec,
     generate_instance,
     get_policy,
+    lagrangian_bound,
     list_policies,
     list_scenarios,
     make_ilp_policy,
@@ -66,10 +78,16 @@ FIGURES = (
     "qos-accuracy",
     "scenarios",
     "optimality-gap",
+    "congestion",
 )
 
 #: restricted heuristics the paper's ">= 50%" claim is measured against
+#: in the congestion-free numerical model
 CLAIM_BASELINES = ("random", "offload_all", "local_all")
+
+#: all five baselines — the congestion figure measures against every one,
+#: because load-dependent delays make the Happy-* relaxations real baselines
+ALL_BASELINES = CLAIM_BASELINES + ("happy_computation", "happy_communication")
 
 #: per-scenario noise allowance (satisfied-%) for the GUS-beats-baseline
 #: check — a few seeds per cell; the same tolerance scenario_sweep.py uses
@@ -195,12 +213,64 @@ def fig_scenarios(tiny: bool) -> Dict:
     return {"x_label": "scenario", "rows": rows}
 
 
+def fig_congestion(tiny: bool) -> Dict:
+    """Satisfied-% under load-dependent service times (the testbed regime).
+
+    Runs the vmapped fleet with the congestion model enabled
+    (:class:`repro.core.queueing.CongestionConfig`): over-committed servers
+    carry a backlog, realized delays inflate with the over-commit ratio,
+    and the Happy-* constraint relaxations — upper bounds in every other
+    figure — collapse below GUS exactly as in the paper's testbed.  Points
+    cover the load axis on ``paper-default`` plus the ``sustained-overload``
+    streaming scenario (which also smokes the bounded-memory arrival
+    engine).  The claim check measures GUS against ALL FIVE baselines.
+    """
+    spec = demo_cluster_spec()
+    ccfg = CongestionConfig(enabled=True)
+    points = (
+        [("paper-default", 8.0), ("sustained-overload", 2.0)]
+        if tiny else
+        [("paper-default", 2.0), ("paper-default", 4.0), ("paper-default", 8.0),
+         ("sustained-overload", 2.0)]
+    )
+    n_rep = 2 if tiny else 8
+    horizon = 24_000.0 if tiny else 30_000.0
+    rows = []
+    for scn, rate in points:
+        cfg = _base_cfg(
+            tiny, horizon_ms=horizon, arrival_rate_per_s=rate, congestion=ccfg
+        )
+        for pol in _fleet_policies():
+            fr = simulate_fleet(
+                spec, cfg, policy=pol, scenario=scn, n_rep=n_rep, seed=0
+            )
+            rows.append({
+                "x": rate,
+                "scenario": scn,
+                "policy": pol,
+                "satisfied_pct": round(fr.satisfied_pct, 3),
+                "satisfied_std": round(fr.satisfied_std, 3),
+                "mean_us": round(fr.mean_us, 5),
+                "mean_compute_inflation": round(fr.mean_compute_inflation, 3),
+                "n_requests": fr.n_requests,
+            })
+            print(f"congestion,{scn},{rate},{pol},{fr.satisfied_pct:.2f}", flush=True)
+    return {"x_label": "arrival rate (req/s per edge), congestion enabled",
+            "rows": rows}
+
+
 def fig_optimality_gap(tiny: bool) -> Dict:
     """GUS vs the exact optimum through the registry's ``ilp`` oracle.
 
     Two regimes, as in ``benchmarks/optimal_gap.py``: *ample* capacity
     (greedy is near-optimal) and *contended* capacity (greedy pays for its
     myopia); the paper's "average 90% of optimal" sits between them.
+
+    A third block, ``large-lp``, scores GUS against the **LP-relaxation
+    bound** (``repro.core.ilp.lagrangian_bound``) on the paper's full
+    100-request Sec. IV instances — far past the B&B's reach — so the gap
+    stays measurable at the scale the paper actually reports.  Those ratios
+    are conservative (the bound sits above the true optimum).
     """
     n_instances = 3 if tiny else 12
     regimes = gap_regimes(n_requests=8)
@@ -226,6 +296,7 @@ def fig_optimality_gap(tiny: bool) -> Dict:
             rows.append({
                 "regime": regime,
                 "seed": seed,
+                "certified": True,
                 "opt": round(opt, 5),
                 "gus": round(vals["gus"], 5),
                 "gus_ordered": round(vals["gus-ordered"], 5),
@@ -233,6 +304,31 @@ def fig_optimality_gap(tiny: bool) -> Dict:
                 "ratio_ordered": round(vals["gus-ordered"] / opt, 4) if opt > 1e-9 else 1.0,
             })
             print(f"optimality-gap,{regime},{seed},ratio={rows[-1]['ratio']}", flush=True)
+
+    # large-lp block: the paper's full-size instances, against the LP bound
+    big = GeneratorConfig()  # Sec. IV defaults: 100 requests, 9 edge + 1 cloud
+    fns = {
+        p: get_policy(p).bind(big.n_edge, big.n_edge + big.n_cloud)
+        for p in ("gus", "gus-ordered")
+    }
+    for seed in range(2 if tiny else 6):
+        inst = generate_instance(seed, big)
+        bound = lagrangian_bound(inst)
+        vals = {}
+        for p, fn in fns.items():
+            a = fn(inst)
+            vals[p] = float(mean_us(inst, np.asarray(a.j), np.asarray(a.l)))
+        rows.append({
+            "regime": "large-lp",
+            "seed": seed,
+            "certified": False,  # LP bound >= optimum: ratios are conservative
+            "opt": round(bound, 5),
+            "gus": round(vals["gus"], 5),
+            "gus_ordered": round(vals["gus-ordered"], 5),
+            "ratio": round(vals["gus"] / bound, 4) if bound > 1e-9 else 1.0,
+            "ratio_ordered": round(vals["gus-ordered"] / bound, 4) if bound > 1e-9 else 1.0,
+        })
+        print(f"optimality-gap,large-lp,{seed},ratio={rows[-1]['ratio']}", flush=True)
     return {"x_label": "instance seed", "rows": rows}
 
 
@@ -295,11 +391,59 @@ def check_claims(figures: Dict[str, Dict]) -> Dict:
 
     if "optimality-gap" in figures:
         rows = figures["optimality-gap"]["rows"]
+        cert = [r for r in rows if r.get("certified", True)]
         claims["gus_over_optimal"] = {
-            "mean_ratio": round(float(np.mean([r["ratio"] for r in rows])), 4),
+            "mean_ratio": round(float(np.mean([r["ratio"] for r in cert])), 4),
             "mean_ratio_ordered": round(
-                float(np.mean([r["ratio_ordered"] for r in rows])), 4
+                float(np.mean([r["ratio_ordered"] for r in cert])), 4
             ),
+        }
+        lp = [r for r in rows if not r.get("certified", True)]
+        if lp:
+            claims["gus_over_lp_bound"] = {
+                "n_requests": 100,
+                "mean_ratio": round(float(np.mean([r["ratio"] for r in lp])), 4),
+                "min_ratio": round(float(np.min([r["ratio"] for r in lp])), 4),
+            }
+
+    if "congestion" in figures:
+        rows = figures["congestion"]["rows"]
+        sat = {(r["scenario"], r["x"], r["policy"]): r["satisfied_pct"] for r in rows}
+        points = sorted({(r["scenario"], r["x"]) for r in rows})
+        # the loaded points: top sweep rate + every sustained-overload point
+        max_rate = max(x for s, x in points if s == "paper-default")
+        loaded = [(s, x) for s, x in points
+                  if s == "sustained-overload" or x >= max_rate]
+        collapse = {
+            f"{s}@{x}": {
+                "gus": sat[(s, x, "gus")],
+                "happy_computation": sat[(s, x, "happy_computation")],
+                "happy_communication": sat[(s, x, "happy_communication")],
+                "both_below_gus": bool(
+                    sat[(s, x, "happy_computation")] < sat[(s, x, "gus")]
+                    and sat[(s, x, "happy_communication")] < sat[(s, x, "gus")]
+                ),
+            }
+            for s, x in loaded
+        }
+        # the paper's >= 1.5x factor, now against ALL FIVE baselines
+        factors = {
+            f"{s}@{x}": round(
+                sat[(s, x, "gus")]
+                / max(max(sat[(s, x, b)] for b in ALL_BASELINES), 1e-9),
+                3,
+            )
+            for s, x in points
+        }
+        claims["congestion_collapse"] = {
+            "happy_collapse_under_load": all(
+                v["both_below_gus"] for v in collapse.values()
+            ),
+            "collapse_points": collapse,
+            "gus_over_best_of_five": factors,
+            "max_factor": max(factors.values()),
+            "factor_target": 1.5,
+            "meets_factor_somewhere": bool(max(factors.values()) >= 1.5),
         }
     return claims
 
@@ -344,24 +488,52 @@ def render_markdown(figures: Dict[str, Dict], claims: Dict, meta: Dict) -> str:
             [[str(x)] + [f"{sat[(x, p)]:.1f}" for p in pols] for x in xs],
         )
         lines.append("")
+    if "congestion" in figures:
+        rows = figures["congestion"]["rows"]
+        sat = {(r["scenario"], r["x"], r["policy"]): r["satisfied_pct"] for r in rows}
+        pts = sorted({(r["scenario"], r["x"]) for r in rows})
+        pols = [p for p in meta["policies"]
+                if any((s, x, p) in sat for s, x in pts)]
+        lines += ["## congestion: satisfied-% with load-dependent service times", ""]
+        lines += _md_table(
+            ["scenario @ rate"] + pols,
+            [[f"{s} @ {x}"] + [f"{sat[(s, x, p)]:.1f}" for p in pols]
+             for s, x in pts],
+        )
+        lines += [
+            "",
+            "With the congestion model enabled, over-committed servers slow",
+            "down, so Happy-Computation / Happy-Communication collapse below",
+            "GUS under load — the paper's testbed behaviour.",
+            "",
+        ]
     if "optimality-gap" in figures:
         rows = figures["optimality-gap"]["rows"]
-        lines += ["## optimality-gap: GUS vs exact ILP (mean US)", ""]
+        lines += ["## optimality-gap: GUS vs exact ILP / LP bound (mean US)", ""]
         lines += _md_table(
-            ["regime", "seed", "opt", "gus", "ratio", "gus-ordered", "ratio"],
+            ["regime", "seed", "opt/bound", "gus", "ratio", "gus-ordered", "ratio"],
             [[r["regime"], str(r["seed"]), f"{r['opt']:.4f}", f"{r['gus']:.4f}",
               f"{r['ratio']:.3f}", f"{r['gus_ordered']:.4f}",
               f"{r['ratio_ordered']:.3f}"] for r in rows],
         )
-        lines.append("")
+        lines += [
+            "",
+            "`large-lp` rows score GUS against the LP-relaxation bound",
+            "(`repro.core.ilp.lagrangian_bound`) on 100-request instances —",
+            "a conservative ratio, since the bound sits above the optimum.",
+            "",
+        ]
     lines += ["## Claims", "", "```json",
               json.dumps(claims, indent=2), "```", ""]
     lines += [
         "Happy-Computation / Happy-Communication relax a feasibility",
-        "constraint, so in the numerical model (delays independent of server",
-        "load) they act as upper bounds rather than baselines; the paper's",
-        "testbed shows them collapsing under real congestion.  The >= 50%",
-        "claim is therefore checked against random / offload_all / local_all.",
+        "constraint, so in the congestion-free numerical model (delays",
+        "independent of server load) they act as upper bounds rather than",
+        "baselines, and the >= 50% claim is checked against random /",
+        "offload_all / local_all there.  The `congestion` figure enables",
+        "load-dependent service times, under which both Happy-* policies",
+        "collapse below GUS — the paper's testbed behaviour — and the",
+        "claim is re-checked against all five baselines.",
         "",
     ]
     return "\n".join(lines)
@@ -378,6 +550,7 @@ def run(*, tiny: bool = False, out: str = "results/paper_figures", only=None):
         "qos-accuracy": fig_qos_accuracy,
         "scenarios": fig_scenarios,
         "optimality-gap": fig_optimality_gap,
+        "congestion": fig_congestion,
     }
     figures = {name: builders[name](tiny) for name in selected}
     claims = check_claims(figures)
@@ -405,6 +578,14 @@ def run(*, tiny: bool = False, out: str = "results/paper_figures", only=None):
         r = claims["gus_over_optimal"]["mean_ratio"]
         floor = 0.75 if tiny else 0.85
         assert r >= floor, f"paper reports ~0.90 of optimal; got {r:.3f}"
+        lp = claims.get("gus_over_lp_bound")
+        if lp:  # conservative (bound > optimum), so the floor is loose
+            assert lp["mean_ratio"] >= 0.6, lp
+    if "congestion" in figures:
+        c = claims["congestion_collapse"]
+        assert c["happy_collapse_under_load"], c["collapse_points"]
+        factor_floor = 1.4 if tiny else 1.5
+        assert c["max_factor"] >= factor_floor, c["gus_over_best_of_five"]
     return {"figures": figures, "claims": claims}
 
 

@@ -1,0 +1,238 @@
+"""Optional matplotlib renderer for the paper-figure pipeline.
+
+Draws Fig. 1-style panels from ``results/paper_figures/paper_figures.json``
+(written by ``benchmarks/paper_figures.py``) into PNGs next to the JSON.
+Import-gated: matplotlib is NOT a dependency of this repo — without it the
+script explains itself and exits cleanly, so CI and bare environments are
+unaffected.  The JSON/markdown artifacts remain the source of truth; these
+panels are for humans.
+
+    python benchmarks/paper_figures.py --tiny          # writes the JSON
+    python benchmarks/render_figures.py                # draws the panels
+    python benchmarks/render_figures.py --json /tmp/f/paper_figures.json
+
+Design notes: series colors follow a fixed policy -> hue map (identity is
+stable across panels and filters), one y-axis per panel, thin marks on a
+recessive grid, and the per-policy tables in ``paper_figures.md`` double as
+the accessible table view of every panel.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+# ---------------------------------------------------------------------------
+# import gate
+# ---------------------------------------------------------------------------
+
+try:
+    import matplotlib
+
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+except ImportError:  # pragma: no cover - exercised only without matplotlib
+    matplotlib = None
+    plt = None
+
+# fixed policy -> color slots (validated categorical order; identity never
+# re-assigned when a panel carries fewer series)
+SERIES = {
+    "gus": "#2a78d6",                  # blue
+    "gus-ordered": "#eb6834",          # orange
+    "random": "#1baf7a",               # aqua
+    "offload_all": "#eda100",          # yellow
+    "local_all": "#e87ba4",            # magenta
+    "happy_computation": "#008300",    # green
+    "happy_communication": "#4a3aa7",  # violet
+    "ilp": "#e34948",                  # red
+    "lp-bound": "#e34948",             # oracle family: red, dashed line style
+}
+DASHED = {"lp-bound"}
+
+SURFACE = "#fcfcfb"
+INK = "#0b0b0b"
+MUTED = "#898781"
+GRID = "#e1e0d9"
+BASELINE = "#c3c2b7"
+
+SWEEPS = ("arrival-rate", "num-users", "qos-deadline", "qos-accuracy")
+
+
+def _style(ax, x_label: str, y_label: str, title: str) -> None:
+    ax.set_facecolor(SURFACE)
+    ax.set_title(title, color=INK, fontsize=11, loc="left")
+    ax.set_xlabel(x_label, color=MUTED, fontsize=9)
+    ax.set_ylabel(y_label, color=MUTED, fontsize=9)
+    ax.tick_params(colors=MUTED, labelsize=8)
+    ax.grid(True, axis="y", color=GRID, linewidth=0.8)
+    ax.set_axisbelow(True)
+    for side in ("top", "right"):
+        ax.spines[side].set_visible(False)
+    for side in ("left", "bottom"):
+        ax.spines[side].set_color(BASELINE)
+
+
+def _ordered_policies(rows, key="policy"):
+    seen = []
+    for r in rows:
+        if r[key] not in seen:
+            seen.append(r[key])
+    return [p for p in SERIES if p in seen] + [p for p in seen if p not in SERIES]
+
+
+def render_sweep(fig_name: str, fig_data: dict, out: Path) -> Path:
+    """One line panel: satisfied-% vs the sweep axis, one series per policy."""
+    rows = fig_data["rows"]
+    sat = {(r["x"], r["policy"]): r["satisfied_pct"] for r in rows}
+    xs = sorted({r["x"] for r in rows})
+    fig, ax = plt.subplots(figsize=(6.4, 4.0), facecolor=SURFACE)
+    for pol in _ordered_policies(rows):
+        ys = [sat.get((x, pol)) for x in xs]
+        ax.plot(
+            xs, ys,
+            color=SERIES.get(pol, MUTED),
+            linestyle="--" if pol in DASHED else "-",
+            linewidth=2.0, marker="o", markersize=4, label=pol,
+        )
+    _style(ax, fig_data["x_label"], "satisfied (%)", fig_name)
+    ax.set_ylim(0, 105)
+    ax.legend(fontsize=7, frameon=False, labelcolor=INK, ncol=2)
+    path = out / f"{fig_name}.png"
+    fig.tight_layout()
+    fig.savefig(path, dpi=150)
+    plt.close(fig)
+    return path
+
+
+def render_scenarios(fig_data: dict, out: Path) -> Path:
+    """Small multiples: one horizontal-bar panel per scenario.  Identity is
+    carried by the axis labels, so bars stay single-hue with GUS emphasized;
+    every bar is direct-labeled (the markdown table is the full table view)."""
+    rows = fig_data["rows"]
+    sat = {(r["scenario"], r["policy"]): r["satisfied_pct"] for r in rows}
+    scns = sorted({r["scenario"] for r in rows})
+    pols = _ordered_policies(rows)
+    ncol = 2
+    nrow = (len(scns) + ncol - 1) // ncol
+    fig, axes = plt.subplots(
+        nrow, ncol, figsize=(9.6, 2.2 * nrow), facecolor=SURFACE, squeeze=False
+    )
+    for k, scn in enumerate(scns):
+        ax = axes[k // ncol][k % ncol]
+        vals = [sat.get((scn, p), 0.0) for p in pols]
+        colors = ["#2a78d6" if p == "gus" else "#9ec5f4" for p in pols]
+        ax.barh(range(len(pols)), vals, color=colors, height=0.62)
+        ax.set_yticks(range(len(pols)))
+        ax.set_yticklabels(pols, fontsize=7, color=INK)
+        ax.invert_yaxis()
+        for i, v in enumerate(vals):
+            ax.text(v + 1.2, i, f"{v:.0f}", va="center", fontsize=7, color=INK)
+        _style(ax, "satisfied (%)", "", scn)
+        ax.set_xlim(0, 112)
+        ax.grid(True, axis="x", color=GRID, linewidth=0.8)
+        ax.grid(False, axis="y")
+    for k in range(len(scns), nrow * ncol):
+        axes[k // ncol][k % ncol].set_visible(False)
+    path = out / "scenarios.png"
+    fig.tight_layout()
+    fig.savefig(path, dpi=150)
+    plt.close(fig)
+    return path
+
+
+def render_optimality_gap(fig_data: dict, out: Path) -> Path:
+    """Per-seed GUS/optimum ratios, one series per regime (first slots are
+    all-pairs validated for dot panels)."""
+    rows = fig_data["rows"]
+    regimes = sorted({r["regime"] for r in rows})
+    palette = ["#2a78d6", "#eb6834", "#1baf7a"]
+    fig, ax = plt.subplots(figsize=(6.4, 4.0), facecolor=SURFACE)
+    for k, regime in enumerate(regimes):
+        pts = [r for r in rows if r["regime"] == regime]
+        ax.plot(
+            [r["seed"] for r in pts], [r["ratio"] for r in pts],
+            "o", markersize=6, color=palette[k % len(palette)], label=regime,
+        )
+    ax.axhline(0.9, color=BASELINE, linewidth=1.0, linestyle=":")
+    ax.text(0.02, 0.905, "paper: ~0.90 of optimal", transform=ax.get_yaxis_transform(),
+            fontsize=7, color=MUTED)
+    _style(ax, "instance seed", "GUS / bound (mean US)", "optimality-gap")
+    ax.set_ylim(0.5, 1.05)
+    ax.legend(fontsize=8, frameon=False, labelcolor=INK)
+    path = out / "optimality-gap.png"
+    fig.tight_layout()
+    fig.savefig(path, dpi=150)
+    plt.close(fig)
+    return path
+
+
+def render_congestion(fig_data: dict, out: Path) -> Path:
+    """Grouped bars per (scenario, rate) point under congestion — the
+    Happy-* collapse panel."""
+    rows = fig_data["rows"]
+    sat = {(r["scenario"], r["x"], r["policy"]): r["satisfied_pct"] for r in rows}
+    pts = sorted({(r["scenario"], r["x"]) for r in rows})
+    pols = _ordered_policies(rows)
+    width = 1.0 / (len(pols) + 1.2)
+    fig, ax = plt.subplots(figsize=(7.6, 4.2), facecolor=SURFACE)
+    for k, pol in enumerate(pols):
+        xs = [i + (k - len(pols) / 2) * width for i in range(len(pts))]
+        ys = [sat.get((s, x, pol), 0.0) for s, x in pts]
+        ax.bar(xs, ys, width=width * 0.92, color=SERIES.get(pol, MUTED), label=pol)
+    ax.set_xticks(range(len(pts)))
+    ax.set_xticklabels([f"{s}\n@ {x}/s" for s, x in pts], fontsize=8, color=INK)
+    _style(ax, "", "satisfied (%)", "congestion: load-dependent service times")
+    ax.set_ylim(0, 105)
+    ax.legend(fontsize=7, frameon=False, labelcolor=INK, ncol=2)
+    path = out / "congestion.png"
+    fig.tight_layout()
+    fig.savefig(path, dpi=150)
+    plt.close(fig)
+    return path
+
+
+def render(json_path: Path, out: Path) -> list:
+    data = json.loads(json_path.read_text())
+    figures = data["figures"]
+    out.mkdir(parents=True, exist_ok=True)
+    written = []
+    for name in SWEEPS:
+        if name in figures:
+            written.append(render_sweep(name, figures[name], out))
+    if "scenarios" in figures:
+        written.append(render_scenarios(figures["scenarios"], out))
+    if "optimality-gap" in figures:
+        written.append(render_optimality_gap(figures["optimality-gap"], out))
+    if "congestion" in figures:
+        written.append(render_congestion(figures["congestion"], out))
+    return written
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", default="results/paper_figures/paper_figures.json",
+                    help="paper_figures.json written by benchmarks/paper_figures.py")
+    ap.add_argument("--out", default=None,
+                    help="output directory (default: alongside the JSON)")
+    args = ap.parse_args(argv)
+
+    if plt is None:
+        print("render_figures: matplotlib is not installed; skipping "
+              "(pip install matplotlib to draw the panels — the JSON and "
+              "markdown artifacts are complete without it)")
+        return 0
+    json_path = Path(args.json)
+    if not json_path.is_file():
+        raise SystemExit(
+            f"{json_path} not found — run benchmarks/paper_figures.py first"
+        )
+    out = Path(args.out) if args.out else json_path.parent
+    for p in render(json_path, out):
+        print(f"wrote {p}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,6 +4,7 @@ benches.  ``PYTHONPATH=src python -m benchmarks.run [--fast]``.
   fig1a-d   — numerical sweeps (Fig. 1(a)-(d))
   fig1e-h   — virtual-testbed sweeps (Fig. 1(e)-(h))
   figures   — paper-figure pipeline: every policy x scenario, JSON + markdown
+  render    — matplotlib panels from the figures JSON (no-op without matplotlib)
   optimal   — GUS vs exact ILP (the ~90%-of-CPLEX table)
   sched     — GUS scheduling throughput (jit/vmap systems number)
   scenarios — satisfied-% per scheduler per registered workload scenario
@@ -21,7 +22,7 @@ def main(argv=None):
     ap.add_argument("--fast", action="store_true", help="fewer MC runs")
     ap.add_argument(
         "--only",
-        choices=["fig1num", "fig1test", "figures", "optimal", "sched", "serving", "extensions", "scenarios", "roofline"],
+        choices=["fig1num", "fig1test", "figures", "render", "optimal", "sched", "serving", "extensions", "scenarios", "roofline"],
         default=None,
     )
     args = ap.parse_args(argv)
@@ -32,6 +33,7 @@ def main(argv=None):
         fig1_testbed,
         optimal_gap,
         paper_figures,
+        render_figures,
         roofline_table,
         scenario_sweep,
         scheduler_throughput,
@@ -46,6 +48,7 @@ def main(argv=None):
             seeds=(0,) if args.fast else (0, 1, 2),
         ),
         "figures": lambda: paper_figures.run(tiny=args.fast),
+        "render": lambda: render_figures.main([]),
         "optimal": lambda: optimal_gap.main(10 if args.fast else 25),
         "sched": scheduler_throughput.main,
         "serving": lambda: serving_bench.main(6 if args.fast else 12),

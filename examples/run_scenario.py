@@ -8,12 +8,21 @@ Monte-Carlo fleet for replicated statistics.
     PYTHONPATH=src python examples/run_scenario.py --scenario flash-crowd
     PYTHONPATH=src python examples/run_scenario.py --scenario outage --policy local_all
     PYTHONPATH=src python examples/run_scenario.py --scenario diurnal --policy random --fleet 32
+
+Streaming scenarios (sustained-overload, diurnal-week) generate arrivals
+frame-by-frame with bounded memory — pair them with long horizons; and
+``--congestion`` enables load-dependent service times (over-committed
+servers slow down, the regime where Happy-* collapse):
+
+    PYTHONPATH=src python examples/run_scenario.py --scenario sustained-overload \
+        --policy happy_computation --congestion --horizon-s 30
 """
 from __future__ import annotations
 
 import argparse
 
 from repro.core import (
+    CongestionConfig,
     SimConfig,
     demo_cluster_spec,
     get_policy,
@@ -37,6 +46,14 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fleet", type=int, default=0, metavar="R",
                     help="also run R vmapped Monte-Carlo replications")
+    ap.add_argument("--congestion", action="store_true",
+                    help="enable load-dependent service times (queueing model)")
+    stream = ap.add_mutually_exclusive_group()
+    stream.add_argument("--streaming", dest="streaming", action="store_true",
+                        default=None,
+                        help="force the bounded-memory arrival stream")
+    stream.add_argument("--materialized", dest="streaming", action="store_false",
+                        help="force the materialized arrival trace")
     ap.add_argument("--list", action="store_true",
                     help="list scenarios and policies, then exit")
     args = ap.parse_args(argv)
@@ -57,6 +74,7 @@ def main(argv=None):
         delay_req_ms=args.deadline_ms,
         acc_req_mean=50.0,
         acc_req_std=10.0,
+        congestion=CongestionConfig(enabled=args.congestion),
     )
     try:
         scn = get_scenario(args.scenario)
@@ -68,9 +86,16 @@ def main(argv=None):
         {"scheduler": gus_schedule_np} if args.policy == "gus-np"
         else {"policy": args.policy}
     )
-    print(f"=== scenario {scn.name!r} / policy {args.policy!r} ===")
+    mode = []
+    if args.congestion:
+        mode.append("congestion")
+    if args.streaming or (args.streaming is None and scn.streaming):
+        mode.append("streaming")
+    tag = f" [{', '.join(mode)}]" if mode else ""
+    print(f"=== scenario {scn.name!r} / policy {args.policy!r}{tag} ===")
     try:
-        r = simulate(spec, cfg, scenario=scn, seed=args.seed, **sim_kw)
+        r = simulate(spec, cfg, scenario=scn, seed=args.seed,
+                     streaming=args.streaming, **sim_kw)
     except (KeyError, ValueError) as e:  # unknown policy / ILP frame too big
         raise SystemExit(str(e.args[0]))
     for k, v in r.as_dict().items():
@@ -81,7 +106,7 @@ def main(argv=None):
             raise SystemExit("gus-np is host-only; the fleet needs a registered policy")
         try:
             fr = simulate_fleet(spec, cfg, scenario=scn, n_rep=args.fleet,
-                                seed=args.seed, **sim_kw)
+                                seed=args.seed, streaming=args.streaming, **sim_kw)
         except ValueError as e:  # e.g. ILP on an uncapped (queue-less) fleet frame
             raise SystemExit(str(e.args[0]))
         print(f"=== fleet: {args.fleet} replications, one device program ===")

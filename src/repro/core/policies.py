@@ -58,7 +58,7 @@ from .baselines import (
 )
 from .extensions import gus_schedule_ordered
 from .gus import Assignment, gus_schedule
-from .ilp import solve_bnb
+from .ilp import lagrangian_dual, price_directed_greedy, solve_bnb
 from .instance import FlatInstance
 
 __all__ = [
@@ -83,13 +83,22 @@ class Policy:
     name: str
     description: str
     #: factory ``(n_edge, n_servers) -> schedule_fn``; the returned function
-    #: maps ``FlatInstance -> Assignment`` (plus a PRNG key when ``needs_key``).
+    #: maps ``FlatInstance -> Assignment`` (plus a PRNG key when ``needs_key``,
+    #: or a full :class:`~repro.core.queueing.PolicyCarry` when ``stateful``).
     make: Callable[[int, int], Callable]
     needs_key: bool = False
     vmappable: bool = True
     pad: bool = True
     max_requests: Optional[int] = None
     kind: str = "baseline"
+    #: the schedule fn is ``(FlatInstance, PolicyCarry) -> (Assignment,
+    #: PolicyCarry)``: it reads the simulator-threaded carry (EMA load
+    #: estimates, its own PRNG chain via ``carry.key``) and returns an
+    #: updated one.  The backlog and bandwidth-estimator fields stay
+    #: simulator-owned (overwritten after the call); ``ema_util`` and
+    #: ``key`` are policy-owned.  Must stay jit/vmap/scan-compatible when
+    #: ``vmappable`` — the fleet threads the carry through ``lax.scan``.
+    stateful: bool = False
 
     def bind(self, n_edge: int, n_servers: int) -> Callable:
         """Close over the cluster shape; returns the per-frame schedule fn."""
@@ -239,4 +248,30 @@ register_policy(Policy(
     kind="relaxed",
 ))
 
+def _make_lp_bound(
+    n_edge: int, n_servers: int, *, n_iter: int = 60
+) -> Callable[[FlatInstance], Assignment]:
+    def schedule(inst: FlatInstance) -> Assignment:
+        n = int(inst.n_requests)
+        if n == 0:
+            empty = jnp.full((0,), -1, jnp.int32)
+            return Assignment(empty, empty)
+        _, lam, mu = lagrangian_dual(inst, n_iter=n_iter)
+        return price_directed_greedy(inst, lam, mu)
+
+    return schedule
+
+
 register_policy(make_ilp_policy())
+
+register_policy(Policy(
+    name="lp-bound",
+    description=(
+        "LP-relaxation dual bound + price-directed greedy; scales past the "
+        "ilp policy's frame-size refusal"
+    ),
+    make=_make_lp_bound,
+    vmappable=False,
+    pad=False,
+    kind="oracle",
+))

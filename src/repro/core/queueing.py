@@ -1,0 +1,223 @@
+"""Congestion subsystem — load-dependent service times and the policy carry.
+
+The paper's headline result (GUS beats every baseline by >= 50% satisfied
+users) only emerges on the *testbed*, where over-committed servers slow
+down: the Happy-Computation / Happy-Communication relaxations, which ignore
+a capacity constraint, collapse under real congestion.  The numerical model
+treats processing delay as load-independent, so those two policies act as
+unreachable upper bounds instead.  This module closes that gap with a
+capacity-overcommit inflation model shared by both simulators:
+
+* every server *j* carries a **backlog** ``b_j`` of unfinished work
+  (chip-ms for compute, KB for communication) across frames;
+* a frame that commits work ``w_j`` against budget ``g_j`` runs at
+  utilization ``rho_j = (b_j + w_j) / g_j``; realized processing and
+  transfer times inflate by ``phi = 1 + slope * max(0, rho - 1) ** power``
+  (capped at ``max_inflation``) — at or below budget nothing slows down;
+* the backlog then **drains** at the frame budget:
+  ``b' = max(0, b + w - g * drain)``;
+* the *scheduler* sees the congestion only through a reduced frame budget
+  ``max(g - b, 0)`` — capacity-honoring policies adapt, the Happy-*
+  relaxations keep over-committing and spiral.
+
+Every function is pure ``jax.numpy`` and shape-polymorphic, so the same
+code runs in the sequential testbed's host loop and inside
+``simulate_fleet``'s ``lax.scan`` (the backlog is the scan carry).  With
+``CongestionConfig(enabled=False)`` (the default) the simulators skip the
+model entirely and results are bit-identical to the congestion-free path.
+
+:class:`PolicyCarry` generalizes the simulator's per-frame PRNG-key
+threading into an explicit state object threaded through ``simulate``'s
+frame loop and ``simulate_fleet``'s scan: the key chain, the per-server
+backlogs, an EMA load estimate, and the paper's bandwidth-estimator state.
+A :class:`~repro.core.policies.Policy` registered with ``stateful=True``
+receives the whole carry and returns an updated one — the hook for
+learned/adaptive schedulers (the backlog and bandwidth fields stay
+simulator-owned; ``ema_util`` and ``key`` are policy-usable).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .gus import Assignment
+from .instance import FlatInstance
+
+__all__ = [
+    "CongestionConfig",
+    "PolicyCarry",
+    "init_policy_carry",
+    "compute_inflation",
+    "comm_inflation",
+    "step_backlog",
+    "committed_loads",
+    "ema_update",
+    "effective_capacity",
+    "congested_ctime",
+]
+
+_EPS = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class CongestionConfig:
+    """Parameters of the capacity-overcommit inflation model.
+
+    ``enabled=False`` (the default) turns the whole subsystem off: the
+    simulators skip every congestion computation and results are
+    bit-identical to the pre-congestion code paths.
+    """
+
+    enabled: bool = False
+    #: inflation slope per unit of compute over-commit (rho - 1)
+    compute_slope: float = 4.0
+    #: inflation slope per unit of communication over-commit
+    comm_slope: float = 4.0
+    #: exponent on the over-commit ratio; the default 2 is superlinear, the
+    #: M/G/1 flavour — mild over-commit costs little, deep over-commit spirals
+    power: float = 2.0
+    #: fraction of the frame budget available to drain carried backlog
+    drain: float = 1.0
+    #: hard cap on the inflation factor (keeps a dead server finite)
+    max_inflation: float = 100.0
+    #: smoothing of the per-server EMA utilization estimate in the carry
+    ema_alpha: float = 0.2
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PolicyCarry:
+    """Explicit per-replication state threaded across frames.
+
+    Fields (``M`` = number of servers):
+
+    * ``key`` — ``jax.random`` key chain.  Simulator-owned for ``needs_key``
+      policies (one subkey split per frame decision); a ``stateful`` policy
+      owns it and splits for itself.
+    * ``backlog_gamma`` — ``(M,)`` carried compute backlog (chip-ms).
+    * ``backlog_eta`` — ``(M,)`` carried communication backlog (KB).
+    * ``ema_util`` — ``(M,)`` EMA of per-server committed compute
+      utilization (policy-readable load estimate).
+    * ``bw_prev`` / ``bw_cur`` — the paper's bandwidth-estimator state
+      ``B_{t-1}``, ``B_t`` (sequential testbed only; the fleet schedules
+      with the true mean bandwidth).
+    """
+
+    key: jnp.ndarray
+    backlog_gamma: jnp.ndarray
+    backlog_eta: jnp.ndarray
+    ema_util: jnp.ndarray
+    bw_prev: jnp.ndarray
+    bw_cur: jnp.ndarray
+
+
+def init_policy_carry(
+    n_servers: int, *, seed: int = 0, bandwidth_init: float = 0.0
+) -> PolicyCarry:
+    """A fresh carry: empty backlogs, zero EMA, key chain seeded by ``seed``."""
+    return PolicyCarry(
+        key=jax.random.PRNGKey(seed),
+        backlog_gamma=jnp.zeros((n_servers,), jnp.float32),
+        backlog_eta=jnp.zeros((n_servers,), jnp.float32),
+        ema_util=jnp.zeros((n_servers,), jnp.float32),
+        bw_prev=jnp.float32(bandwidth_init),
+        bw_cur=jnp.float32(bandwidth_init),
+    )
+
+
+def _inflation(load, budget, slope, cfg: CongestionConfig):
+    """Service-time inflation ``phi``: 1 at or below budget, then
+    ``1 + slope * (rho - 1) ** power`` capped at ``max_inflation``."""
+    rho = load / jnp.maximum(budget, _EPS)
+    over = jnp.maximum(rho - 1.0, 0.0)
+    phi = 1.0 + slope * over ** cfg.power
+    return jnp.minimum(phi, cfg.max_inflation)
+
+
+def compute_inflation(load, budget, cfg: CongestionConfig):
+    """(M,) processing-time inflation from committed+carried compute load."""
+    return _inflation(load, budget, cfg.compute_slope, cfg)
+
+
+def comm_inflation(load, budget, cfg: CongestionConfig):
+    """(M,) transfer-time inflation from committed+carried comm load."""
+    return _inflation(load, budget, cfg.comm_slope, cfg)
+
+
+def step_backlog(backlog, committed, budget, cfg: CongestionConfig):
+    """Next frame's carried backlog: ``max(0, b + w - g * drain)``.
+
+    Conservation: ``b + w == drained + b'`` with
+    ``drained = min(b + w, g * drain)`` — work is never created or lost,
+    only served this frame or carried to the next.
+    """
+    return jnp.maximum(backlog + committed - budget * cfg.drain, 0.0)
+
+
+def effective_capacity(budget, backlog):
+    """The budget the *scheduler* sees: ``max(budget - backlog, 0)``.
+
+    A server still working off yesterday's queue offers less fresh
+    capacity this frame.  With an empty backlog this is ``budget`` exactly
+    (bitwise), which is what keeps the disabled path bit-identical.
+    """
+    return jnp.maximum(budget - backlog, 0.0)
+
+
+def committed_loads(
+    inst: FlatInstance, assign_j, assign_l
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-server work committed by one frame's assignment.
+
+    Returns ``(w, c)``: ``w[j]`` is the compute (chip-ms, from ``inst.v``)
+    scheduled on server *j*; ``c[e]`` is the communication (KB, from
+    ``inst.u``) charged against covering edge *e* by offloaded requests.
+    Dropped rows (``j < 0``) — including padded rows — contribute nothing.
+    """
+    M = inst.gamma.shape[-1]
+    served = assign_j >= 0
+    j = jnp.maximum(assign_j, 0)
+    l = jnp.maximum(assign_l, 0)
+    idx = jnp.arange(assign_j.shape[-1])
+    v_picked = inst.v[idx, j, l]
+    u_picked = inst.u[idx, j, l]
+    offloaded = served & (assign_j != inst.cover)
+    w = jnp.zeros((M,), jnp.float32).at[j].add(jnp.where(served, v_picked, 0.0))
+    c = jnp.zeros((M,), jnp.float32).at[inst.cover].add(
+        jnp.where(offloaded, u_picked, 0.0)
+    )
+    return w, c
+
+
+def ema_update(ema, committed, budget, cfg: CongestionConfig):
+    """EMA of per-server committed utilization (``committed / budget``)."""
+    util = committed / jnp.maximum(budget, _EPS)
+    return (1.0 - cfg.ema_alpha) * ema + cfg.ema_alpha * util
+
+
+def congested_ctime(inst: FlatInstance, tq, phi_c, phi_e) -> jnp.ndarray:
+    """Realized completion-time tensor under congestion.
+
+    ``ctime = Tq + proc + comm`` was built load-free; this inflates the
+    processing part (``inst.v``) by the serving server's ``phi_c`` and the
+    communication part (``ctime - v - Tq``, which includes the cloud
+    backhaul constant) by the covering edge's ``phi_e``:
+
+    ``ct' = ctime + v * (phi_c[j] - 1) + comm * (phi_e[cover] - 1)``
+
+    With ``phi == 1`` everywhere this is ``ctime`` bitwise (the additions
+    are exact zeros), so one metrics path serves both modes.
+
+    Shapes: ``inst`` leaves ``(N, M, L)``, ``tq`` ``(N,)``, ``phi_c`` /
+    ``phi_e`` ``(M,)``; every argument may carry matching leading batch axes.
+    """
+    comm = inst.ctime - inst.v - tq[..., :, None, None]
+    phi_e_cover = jnp.take_along_axis(phi_e, inst.cover, axis=-1)
+    return (
+        inst.ctime
+        + inst.v * (phi_c[..., None, :, None] - 1.0)
+        + comm * (phi_e_cover[..., :, None, None] - 1.0)
+    )

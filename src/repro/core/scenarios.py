@@ -48,6 +48,8 @@ __all__ = [
     "MobilityScenario",
     "HeteroTiersScenario",
     "OutageScenario",
+    "SustainedOverloadScenario",
+    "DiurnalWeekScenario",
     "SCENARIOS",
     "register_scenario",
     "get_scenario",
@@ -83,6 +85,11 @@ class Scenario:
     #: per-frame probability that a user re-attaches to a random edge;
     #: ``None`` defers to ``SimConfig.move_prob``.
     move_prob: Optional[float] = None
+    #: when True the simulator defaults to the bounded-memory streaming
+    #: arrival engine (:mod:`repro.core.streaming`) instead of materializing
+    #: the full trace — the mode for long-horizon / nonstationary workloads.
+    #: ``simulate(..., streaming=...)`` overrides per run.
+    streaming: bool = False
 
     # -- arrival process ----------------------------------------------------
     def rate(self, edge: int, t_ms: float, cfg) -> float:
@@ -295,6 +302,41 @@ class HeteroTiersScenario(Scenario):
             return a, float(cfg.delay_req_ms * self.strict_deadline_mult)
         a = float(np.clip(rng.normal(cfg.acc_req_mean, cfg.acc_req_std), 1, 99))
         return a, float(cfg.delay_req_ms * self.lenient_deadline_mult)
+
+
+@register_scenario
+@dataclasses.dataclass(frozen=True)
+class SustainedOverloadScenario(Scenario):
+    """Arrivals sustained at ``rate_mult`` x the base rate for the whole
+    horizon — demand permanently exceeds cluster capacity, so carried
+    backlog grows without bound and capacity-relaxing policies
+    (Happy-Computation / Happy-Communication) spiral once congestion
+    (:class:`repro.core.queueing.CongestionConfig`) is enabled.  Streams
+    by default: the long-horizon congestion workload."""
+
+    name: str = "sustained-overload"
+    description: str = "constant overload at rate_mult x base; streaming by default"
+    streaming: bool = True
+    rate_mult: float = 3.0
+
+    def rate(self, edge, t_ms, cfg):
+        return cfg.arrival_rate_per_s * self.rate_mult
+
+    def rate_bound(self, edge, cfg):
+        return cfg.arrival_rate_per_s * self.rate_mult
+
+
+@register_scenario
+@dataclasses.dataclass(frozen=True)
+class DiurnalWeekScenario(DiurnalScenario):
+    """Seven full diurnal cycles over the horizon — the long-horizon
+    nonstationary workload (run it with a large ``horizon_ms``; the
+    streaming engine keeps memory bounded regardless)."""
+
+    name: str = "diurnal-week"
+    description: str = "seven day/night cycles over the horizon; streaming by default"
+    streaming: bool = True
+    period_frac: float = 1.0 / 7.0
 
 
 @register_scenario

@@ -16,31 +16,62 @@ Reproduces the Sec. IV testbed protocol:
 A request is *satisfied* iff its realized completion time <= C_i and the
 served variant's accuracy >= A_i (Definition II.1's hard form).
 
-Beyond the paper, two axes are pluggable:
+Beyond the paper, four axes are pluggable:
 
 * **workload** — a named :mod:`~repro.core.scenarios` entry shapes arrivals,
   QoS draws, per-frame capacity masks (outages) and mobility;
+* **arrival engine** — ``streaming=True`` (or a scenario registered with
+  ``streaming=True``) swaps the materialized trace for the bounded-memory
+  :class:`~repro.core.streaming.ArrivalStream`, opening long-horizon and
+  nonstationary workloads;
+* **congestion** — ``SimConfig.congestion``
+  (:class:`~repro.core.queueing.CongestionConfig`) makes service times
+  load-dependent: over-committed servers carry a backlog across frames,
+  realized processing/transfer times inflate with the over-commit ratio,
+  and the scheduler sees only the backlog-reduced frame budget.  This is
+  the paper's testbed congestion, under which the Happy-* constraint
+  relaxations collapse below GUS;
 * **decision path** — by default each frame is padded to a fixed shape
   (see :func:`repro.core.instance.pad_instance`) and scheduled by the
   *jitted* ``gus_schedule``; any registered :class:`~repro.core.policies.Policy`
   (GUS variants, the paper's five baselines, the exact ILP oracle) runs on
   the same hot path via ``policy=``; ``gus_schedule_np`` stays available as
-  the NumPy parity oracle, and :func:`simulate_fleet` stacks R independent
-  Monte-Carlo replications into one vmapped device program.
+  the NumPy parity oracle.
+
+Per-frame policy/simulator state is an explicit
+:class:`~repro.core.queueing.PolicyCarry` (PRNG-key chain, per-server
+backlogs, EMA load estimates, bandwidth-estimator state) threaded through
+``simulate``'s frame loop and — as the ``lax.scan`` carry — through
+:func:`simulate_fleet`'s single jitted/vmapped device program.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from .gus import Assignment, gus_schedule, gus_schedule_np
 from .instance import FlatInstance, pad_instance, stack_instances
 from .policies import Policy, get_policy
+from .queueing import (
+    CongestionConfig,
+    PolicyCarry,
+    comm_inflation,
+    committed_loads,
+    compute_inflation,
+    congested_ctime,
+    effective_capacity,
+    ema_update,
+    init_policy_carry,
+    step_backlog,
+)
 from .satisfaction import mean_us, satisfied_mask
 from .scenarios import Request, Scenario, get_scenario
+from .streaming import ArrivalStream, stream_trace
 
 __all__ = [
     "ClusterSpec",
@@ -98,6 +129,10 @@ class SimConfig:
     max_cs: float = 12_000.0
     adapt_max_cs: bool = True         # paper: "we may have to adapt Max_cs"
     bandwidth_init: float = 600.0     # scheduler's initial estimate B_0
+    #: load-dependent service times (disabled by default: delays stay
+    #: load-independent and every result is bit-identical to the
+    #: pre-congestion simulator)
+    congestion: CongestionConfig = dataclasses.field(default_factory=CongestionConfig)
 
 
 @dataclasses.dataclass
@@ -113,6 +148,9 @@ class SimResult:
     mean_completion_ms: float
     mean_queue_ms: float
     bandwidth_estimates: List[float]
+    #: work-accounting of the congestion model (None when disabled):
+    #: enqueued/drained/carried chip-ms + KB totals and inflation stats
+    congestion_stats: Optional[Dict[str, float]] = None
 
     @property
     def satisfied_pct(self) -> float:
@@ -131,7 +169,7 @@ class SimResult:
         return 100.0 * self.n_edge_offload / max(self.n_requests, 1)
 
     def as_dict(self) -> Dict[str, float]:
-        return {
+        d = {
             "n_requests": self.n_requests,
             "satisfied_pct": self.satisfied_pct,
             "local_pct": self.local_pct,
@@ -142,6 +180,10 @@ class SimResult:
             "mean_completion_ms": self.mean_completion_ms,
             "mean_queue_ms": self.mean_queue_ms,
         }
+        if self.congestion_stats is not None:
+            d["mean_compute_inflation"] = self.congestion_stats["mean_compute_inflation"]
+            d["final_backlog_gamma"] = self.congestion_stats["final_backlog_gamma"]
+        return d
 
 
 def _pad_bucket(n: int) -> int:
@@ -162,8 +204,6 @@ def _build_frame_instance(
 ) -> FlatInstance:
     """FlatInstance for the requests pending in this frame, using the
     scheduler's *estimated* bandwidth for comm delays."""
-    import jax.numpy as jnp
-
     M = spec.n_servers
     L = spec.acc.shape[1]
     N = len(reqs)
@@ -248,6 +288,54 @@ def _resolve_policy(
     return None
 
 
+class _ArrivalSource:
+    """Uniform pull interface over the two arrival engines.
+
+    *Materialized* (the default) keeps the legacy semantics and RNG
+    consumption bit-for-bit: the full trace is drawn up front from the
+    simulator's own generator.  *Streaming* wraps an
+    :class:`~repro.core.streaming.ArrivalStream` — memory stays bounded and
+    ``n_total`` counts submissions as they are emitted.
+    """
+
+    def __init__(self, reqs=None, stream: Optional[ArrivalStream] = None,
+                 limit: Optional[int] = None):
+        self._reqs = reqs
+        self._idx = 0
+        self._stream = stream
+        self._limit = limit
+        self._emitted = 0
+
+    def pull(self, t_ms: float) -> List[Request]:
+        """All not-yet-pulled arrivals with ``arrival_ms < t_ms``."""
+        if self._stream is None:
+            out = []
+            while self._idx < len(self._reqs) and self._reqs[self._idx].arrival_ms < t_ms:
+                out.append(self._reqs[self._idx])
+                self._idx += 1
+            return out
+        if self._limit is not None and self._emitted >= self._limit:
+            return []
+        out = self._stream.take_until(t_ms)
+        if self._limit is not None and self._emitted + len(out) > self._limit:
+            out = out[: self._limit - self._emitted]
+        self._emitted += len(out)
+        return out
+
+    @property
+    def exhausted(self) -> bool:
+        if self._stream is None:
+            return self._idx >= len(self._reqs)
+        return self._stream.exhausted or (
+            self._limit is not None and self._emitted >= self._limit
+        )
+
+    @property
+    def n_total(self) -> int:
+        """Total submissions (call after the run for the streaming source)."""
+        return len(self._reqs) if self._stream is None else self._emitted
+
+
 def simulate(
     spec: ClusterSpec,
     cfg: SimConfig,
@@ -257,52 +345,77 @@ def simulate(
     scenario: Union[str, Scenario] = "paper-default",
     seed: int = 0,
     n_requests: Optional[int] = None,
+    streaming: Optional[bool] = None,
 ) -> SimResult:
     """Run the virtual testbed.
 
     ``policy`` names a registered :class:`~repro.core.policies.Policy`
-    (``"gus"``, ``"gus-ordered"``, the five baselines, ``"ilp"``, or any
-    custom registration); per-policy state is threaded by the simulator —
-    ``random`` gets a fresh PRNG key per decision from a chain seeded by
-    ``seed``, ``offload_all`` is bound to the cluster's cloud mask, and the
-    ``ilp`` oracle schedules unpadded frames on the host.  Alternatively
-    ``scheduler`` passes a raw callable FlatInstance -> Assignment (a policy
-    name is also accepted positionally); the default is the *jitted*
-    ``gus_schedule``.  Every frame's queue is padded to a power-of-two
-    bucket with infeasible rows (:func:`pad_instance`), so the jitted path
-    compiles once per bucket and returns the same assignments as the NumPy
-    oracle on the real rows.
+    (``"gus"``, ``"gus-ordered"``, the five baselines, ``"ilp"``,
+    ``"lp-bound"``, or any custom registration); per-policy state rides an
+    explicit :class:`~repro.core.queueing.PolicyCarry` threaded through the
+    frame loop — ``random`` gets a fresh PRNG key per decision split from
+    the carry's chain (seeded by ``seed``), a ``stateful`` policy receives
+    the whole carry (backlogs, EMA load, its own key) and returns an
+    updated one, and the ``ilp`` oracle schedules unpadded frames on the
+    host.  Alternatively ``scheduler`` passes a raw callable FlatInstance
+    -> Assignment (a policy name is also accepted positionally); the
+    default is the *jitted* ``gus_schedule``.  Every frame's queue is
+    padded to a power-of-two bucket with infeasible rows
+    (:func:`pad_instance`), so the jitted path compiles once per bucket and
+    returns the same assignments as the NumPy oracle on the real rows.
 
     ``scenario`` names a registered workload (see
     :func:`repro.core.scenarios.list_scenarios`) shaping arrivals, QoS,
     per-frame capacity masks and mobility; ``"paper-default"`` reproduces the
     paper's Sec. IV workload bit-for-bit.
 
+    ``streaming`` selects the arrival engine: ``None`` defers to
+    ``scenario.streaming``, ``True`` forces the bounded-memory
+    :class:`~repro.core.streaming.ArrivalStream` (long horizons), ``False``
+    forces the legacy materialized trace.
+
+    With ``cfg.congestion.enabled``, service times become load-dependent:
+    each server carries a work backlog across frames, the scheduler sees
+    only the backlog-reduced budget, and realized processing/transfer times
+    inflate with the over-commit ratio (see :mod:`repro.core.queueing`).
+
     If ``n_requests`` is given, the arrival process stops after that many
     submissions (the paper's x-axis in Fig. 1(e)-(h) is total #requests).
     """
     pol = _resolve_policy(scheduler, policy)
-    pkey = None
     pad = True
+    stateful = False
+    needs_key = False
     if pol is not None:
         scheduler = pol.bind(spec.n_edge, spec.n_servers)
         pad = pol.pad
-        if pol.needs_key:
-            pkey = jax.random.PRNGKey(seed)
+        stateful = pol.stateful
+        needs_key = pol.needs_key and not pol.stateful
     elif scheduler is None:
         scheduler = gus_schedule
     scn = get_scenario(scenario)
+    ccfg = cfg.congestion
     rng = np.random.default_rng(seed)
     M, K, L = spec.proc_ms.shape
     move_prob = cfg.move_prob if scn.move_prob is None else scn.move_prob
 
-    # --- arrivals (scenario-shaped Poisson streams) --------------------------
-    reqs = scn.generate_arrivals(rng, spec.n_edge, K, cfg)
-    if n_requests is not None:
-        reqs = reqs[:n_requests]
+    # --- arrivals (materialized trace, or bounded-memory stream) -------------
+    use_stream = scn.streaming if streaming is None else streaming
+    if use_stream:
+        source = _ArrivalSource(
+            stream=ArrivalStream(scn, seed, spec.n_edge, K, cfg), limit=n_requests
+        )
+    else:
+        reqs = scn.generate_arrivals(rng, spec.n_edge, K, cfg)
+        if n_requests is not None:
+            reqs = reqs[:n_requests]
+        source = _ArrivalSource(reqs=reqs)
 
-    # --- frame loop ----------------------------------------------------------
-    bw_prev = bw_cur = cfg.bandwidth_init  # B_{t-1}, B_t for the EMA rule
+    # --- explicit state carry ------------------------------------------------
+    # B_{t-1}, B_t for the EMA bandwidth rule + the congestion backlogs; the
+    # PRNG chain for needs_key/stateful policies lives in carry.key.
+    carry = init_policy_carry(M, seed=seed, bandwidth_init=cfg.bandwidth_init)
+    bw_prev = bw_cur = cfg.bandwidth_init
     bw_log = [bw_cur]
     max_cs = cfg.max_cs
 
@@ -311,13 +424,35 @@ def simulate(
     comp_sum = 0.0
     q_sum = 0.0
     pending: List[Request] = []
-    ridx = 0
+    buffer: deque = deque()
     t = 0.0
     is_cloud = spec.is_cloud()
 
+    # congestion state (numpy, float64 like the budgets)
+    backlog_g = np.zeros(M)
+    backlog_e = np.zeros(M)
+    committed_g = np.zeros(M)
+    committed_e = np.zeros(M)
+    drained_g = drained_e = 0.0
+    infl_sum = 0.0
+    infl_max = 1.0
+    infl_n = 0
+
+    def _drain(backlog, committed, budget):
+        """One frame-boundary backlog step; returns (new_backlog, drained).
+
+        Same formula as :func:`repro.core.queueing.step_backlog` (which the
+        fleet's scan uses), kept in float64 numpy for the host loop — the
+        fleet-vs-sequential parity test pins the two implementations to
+        each other."""
+        new = np.maximum(backlog + committed - budget * ccfg.drain, 0.0)
+        return new, float(np.sum(backlog + committed - new))
+
     # capacity budgets deplete WITHIN a wall-clock frame (queue-full decisions
     # fire early but do not refresh gamma/eta — they share the frame budget)
-    rem_gamma, rem_eta = _frame_budgets(spec, cfg, scn, 0.0)
+    frame_budget_g, frame_budget_e = _frame_budgets(spec, cfg, scn, 0.0)
+    rem_gamma = frame_budget_g.copy()
+    rem_eta = frame_budget_e.copy()
     frame_boundary = cfg.frame_ms
 
     while t < cfg.horizon_ms + 10 * cfg.frame_ms:
@@ -325,23 +460,46 @@ def simulate(
         # admit arrivals in this frame; queue_cap per covering server
         qlen = {e: sum(1 for r in pending if r.cover == e) for e in range(spec.n_edge)}
         early_close = None
-        while ridx < len(reqs) and reqs[ridx].arrival_ms < frame_end:
-            r = reqs[ridx]
+        buffer.extend(source.pull(frame_end))
+        while buffer:
+            r = buffer[0]
             if qlen.get(r.cover, 0) >= cfg.queue_cap:
                 # queue full -> decision fires early (paper testbed behaviour)
                 early_close = r.arrival_ms
                 break
-            pending.append(r)
+            pending.append(buffer.popleft())
             qlen[r.cover] = qlen.get(r.cover, 0) + 1
-            ridx += 1
         decision_time = early_close if early_close is not None else frame_end
         if decision_time >= frame_boundary:  # new wall-clock frame: budgets refresh
             frame_boundary += cfg.frame_ms * np.ceil(
                 (decision_time - frame_boundary + 1e-9) / cfg.frame_ms
             )
-            rem_gamma, rem_eta = _frame_budgets(
+            if ccfg.enabled:
+                ema = ema_update(
+                    carry.ema_util, jnp.asarray(committed_g, jnp.float32),
+                    jnp.asarray(frame_budget_g, jnp.float32), ccfg,
+                )
+                backlog_g, dg = _drain(backlog_g, committed_g, frame_budget_g)
+                backlog_e, de = _drain(backlog_e, committed_e, frame_budget_e)
+                drained_g += dg
+                drained_e += de
+                committed_g = np.zeros(M)
+                committed_e = np.zeros(M)
+                carry = dataclasses.replace(
+                    carry,
+                    backlog_gamma=jnp.asarray(backlog_g, jnp.float32),
+                    backlog_eta=jnp.asarray(backlog_e, jnp.float32),
+                    ema_util=ema,
+                )
+            frame_budget_g, frame_budget_e = _frame_budgets(
                 spec, cfg, scn, frame_boundary - cfg.frame_ms
             )
+            if ccfg.enabled:
+                rem_gamma = np.maximum(frame_budget_g - backlog_g, 0.0)
+                rem_eta = np.maximum(frame_budget_e - backlog_e, 0.0)
+            else:
+                rem_gamma = frame_budget_g.copy()
+                rem_eta = frame_budget_e.copy()
 
         if pending:
             _apply_mobility_inplace(pending, spec.n_edge, move_prob, rng)
@@ -355,14 +513,45 @@ def simulate(
             # compile once per bucket; padded rows are infeasible -> dropped.
             # Non-padding policies (the ILP oracle) see the raw frame.
             frame_inst = pad_instance(inst, _pad_bucket(n_real)) if pad else inst
-            if pkey is not None:
-                pkey, sub = jax.random.split(pkey)
+            if stateful:
+                assign, carry = scheduler(frame_inst, carry)
+            elif needs_key:
+                # split order matches the legacy chain: (next, sub) = split(key)
+                nxt, sub = jax.random.split(carry.key)
+                carry = dataclasses.replace(carry, key=nxt)
                 assign = scheduler(frame_inst, sub)
             else:
                 assign = scheduler(frame_inst)
             jv = np.asarray(assign.j)[:n_real]
             lv = np.asarray(assign.l)[:n_real]
 
+            # pass 1 — capacity commit (shared frame budget + backlog growth)
+            for idx, r in enumerate(pending):
+                j, l = int(jv[idx]), int(lv[idx])
+                if j < 0:
+                    continue
+                local = j == r.cover
+                rem_gamma[j] -= spec.proc_ms[j, r.service, l]
+                committed_g[j] += spec.proc_ms[j, r.service, l]
+                if not local:
+                    rem_eta[r.cover] -= r.size_bytes / 1024.0
+                    committed_e[r.cover] += r.size_bytes / 1024.0
+
+            # the whole decision batch shares one inflation factor, computed
+            # from the wall-clock frame's committed-so-far load (matches the
+            # fleet's frame-synchronous semantics when queue_cap never trips)
+            if ccfg.enabled:
+                phi_c = np.asarray(
+                    compute_inflation(backlog_g + committed_g, frame_budget_g, ccfg)
+                )
+                phi_e = np.asarray(
+                    comm_inflation(backlog_e + committed_e, frame_budget_e, ccfg)
+                )
+                infl_sum += float(phi_c.sum())
+                infl_max = max(infl_max, float(phi_c.max()), float(phi_e.max()))
+                infl_n += M
+
+            # pass 2 — realized delays and stats (RNG draw order unchanged)
             observed_bw = []
             for idx, r in enumerate(pending):
                 j, l = int(jv[idx]), int(lv[idx])
@@ -371,9 +560,6 @@ def simulate(
                     continue
                 n_served += 1
                 local = j == r.cover
-                rem_gamma[j] -= spec.proc_ms[j, r.service, l]
-                if not local:
-                    rem_eta[r.cover] -= r.size_bytes / 1024.0
                 # realized delays
                 proc = spec.proc_ms[j, r.service, l] * rng.lognormal(0.0, cfg.proc_sigma)
                 if local:
@@ -383,7 +569,11 @@ def simulate(
                     comm = r.size_bytes / bw_real + (
                         spec.cloud_extra_delay if is_cloud[j] else 0.0
                     )
+                    # the estimator observes the *channel* (uninflated transfer)
                     observed_bw.append(r.size_bytes / max(comm - (spec.cloud_extra_delay if is_cloud[j] else 0.0), 1e-6))
+                if ccfg.enabled:
+                    proc = proc * phi_c[j]
+                    comm = comm * phi_e[r.cover]
                 tq = decision_time - r.arrival_ms
                 ct = tq + proc + comm
                 acc = spec.acc[r.service, l]
@@ -401,12 +591,34 @@ def simulate(
             if observed_bw:
                 bw_prev, bw_cur = bw_cur, float(np.mean(observed_bw))
                 bw_log.append(0.5 * (bw_cur + bw_prev))
+                carry = dataclasses.replace(
+                    carry, bw_prev=jnp.float32(bw_prev), bw_cur=jnp.float32(bw_cur)
+                )
 
         t = decision_time if early_close is not None else frame_end
-        if ridx >= len(reqs) and not pending:
+        if source.exhausted and not buffer and not pending:
             break
 
-    n_total = len(reqs)
+    congestion_stats = None
+    if ccfg.enabled:
+        # flush the last frame's committed work through one more drain step so
+        # the conservation identity (enqueued == drained + carried) closes
+        backlog_g, dg = _drain(backlog_g, committed_g, frame_budget_g)
+        backlog_e, de = _drain(backlog_e, committed_e, frame_budget_e)
+        drained_g += dg
+        drained_e += de
+        congestion_stats = {
+            "work_enqueued_gamma": drained_g + float(backlog_g.sum()),
+            "work_drained_gamma": drained_g,
+            "work_enqueued_eta": drained_e + float(backlog_e.sum()),
+            "work_drained_eta": drained_e,
+            "final_backlog_gamma": float(backlog_g.sum()),
+            "final_backlog_eta": float(backlog_e.sum()),
+            "mean_compute_inflation": (infl_sum / infl_n) if infl_n else 1.0,
+            "max_inflation": infl_max,
+        }
+
+    n_total = source.n_total
     return SimResult(
         n_requests=n_total,
         n_served=n_served,
@@ -419,6 +631,7 @@ def simulate(
         mean_completion_ms=comp_sum / max(n_served, 1),
         mean_queue_ms=q_sum / max(n_served, 1),
         bandwidth_estimates=bw_log,
+        congestion_stats=congestion_stats,
     )
 
 
@@ -437,6 +650,11 @@ class FleetResult:
     n_served: int
     satisfied_per_rep: np.ndarray  # (R,) satisfied-% per replication
     mean_us_per_rep: np.ndarray    # (R,) mean US over that replication's requests
+    #: (R, M) carried compute backlog after the last frame (None when the
+    #: congestion model is disabled)
+    final_backlog_per_rep: Optional[np.ndarray] = None
+    #: mean compute-inflation factor across (rep, frame, server) cells
+    mean_compute_inflation: float = 1.0
 
     @property
     def satisfied_pct(self) -> float:
@@ -451,7 +669,7 @@ class FleetResult:
         return float(np.mean(self.mean_us_per_rep))
 
     def as_dict(self) -> Dict[str, float]:
-        return {
+        d = {
             "n_rep": self.n_rep,
             "n_requests": self.n_requests,
             "satisfied_pct": self.satisfied_pct,
@@ -459,6 +677,10 @@ class FleetResult:
             "served_pct": 100.0 * self.n_served / max(self.n_requests, 1),
             "mean_us": self.mean_us,
         }
+        if self.final_backlog_per_rep is not None:
+            d["mean_compute_inflation"] = self.mean_compute_inflation
+            d["final_backlog_gamma"] = float(self.final_backlog_per_rep.sum(-1).mean())
+        return d
 
 
 def simulate_fleet(
@@ -470,38 +692,54 @@ def simulate_fleet(
     scenario: Union[str, Scenario] = "paper-default",
     n_rep: int = 16,
     seed: int = 0,
+    streaming: Optional[bool] = None,
 ) -> FleetResult:
     """Monte-Carlo fleet: R independent replications, one device program.
 
     Every (replication, frame) pair becomes one fixed-shape padded
-    ``FlatInstance``; the whole fleet is stacked on a leading axis of size
-    ``R * T`` and scheduled by a single vmapped call — this is the
-    throughput path for scenario sweeps (the paper runs 20 000 repetitions).
+    ``FlatInstance``; the fleet is laid out as an ``(R, T)`` grid and
+    scheduled by a single jitted program — ``vmap`` over the R replications
+    of a ``lax.scan`` over the T frames, with the per-replication
+    :class:`~repro.core.queueing.PolicyCarry` (congestion backlogs, EMA
+    load, policy state) as the scan carry.  This is the throughput path for
+    scenario sweeps (the paper runs 20 000 repetitions); with the
+    congestion model disabled the carry is inert and results are
+    bit-identical to scheduling all R*T frames in one flat vmap.
 
-    ``policy`` names a registered :class:`~repro.core.policies.Policy`; its
-    per-frame state rides the vmapped program: a ``needs_key`` policy
-    (``random``) receives one PRNG key per (replication, frame) pair split
-    from ``seed``, ``offload_all``'s cloud mask is a closed-over constant,
-    and a non-vmappable policy (the ``ilp`` oracle) falls back to a
-    host-side loop over the *unpadded* frames feeding the same metrics path.
+    ``policy`` names a registered :class:`~repro.core.policies.Policy`; a
+    ``needs_key`` policy (``random``) receives one PRNG key per
+    (replication, frame) pair split from ``seed`` (fed through the scan as
+    inputs, preserving the legacy key chain), a ``stateful`` policy carries
+    its own state in the scan carry, and a non-vmappable policy (the
+    ``ilp`` / ``lp-bound`` oracles) falls back to a host-side loop over the
+    *unpadded* frames — threading the same carry — feeding the same masked
+    metrics path.
 
     Frame semantics are *frame-synchronous*: one decision per frame at the
     frame boundary (no queue-cap early closes), per-frame budgets refresh
     through the scenario's capacity stream, and the scheduler sees the true
     mean bandwidth.  Satisfaction is evaluated on the modeled completion
-    times (like the paper's numerical Monte-Carlo); use :func:`simulate` for
-    stochastic channel realizations and the EMA bandwidth estimator.
+    times (like the paper's numerical Monte-Carlo) — inflated by the
+    congestion factors when ``cfg.congestion.enabled``.  Use
+    :func:`simulate` for stochastic channel realizations and the EMA
+    bandwidth estimator.
     """
     pol = _resolve_policy(scheduler, policy)
     scn = get_scenario(scenario)
+    ccfg = cfg.congestion
     T = max(1, int(np.ceil(cfg.horizon_ms / cfg.frame_ms)))
     K = spec.proc_ms.shape[1]
+    M = spec.n_servers
+    use_stream = scn.streaming if streaming is None else streaming
 
     # host-side generation: per-(rep, frame) request buckets
     fleet_frames: List[List[Request]] = []
     for rep in range(n_rep):
         rng = np.random.default_rng(seed + rep)
-        reqs = scn.generate_arrivals(rng, spec.n_edge, K, cfg)
+        if use_stream:
+            reqs = stream_trace(scn, seed + rep, spec.n_edge, K, cfg)
+        else:
+            reqs = scn.generate_arrivals(rng, spec.n_edge, K, cfg)
         buckets: List[List[Request]] = [[] for _ in range(T)]
         for r in reqs:
             buckets[min(int(r.arrival_ms // cfg.frame_ms), T - 1)].append(r)
@@ -513,6 +751,7 @@ def simulate_fleet(
     n_pad = _pad_bucket(max(len(b) for b in fleet_frames))
     raw_insts = []
     n_real = np.array([len(b) for b in fleet_frames], np.int32)
+    tq_flat = np.zeros((len(fleet_frames), n_pad), np.float32)
     for i, bucket in enumerate(fleet_frames):
         frame_start = (i % T) * cfg.frame_ms
         gamma, eta = _frame_budgets(spec, cfg, scn, frame_start)
@@ -520,40 +759,157 @@ def simulate_fleet(
             bucket, spec, cfg, frame_start + cfg.frame_ms,
             spec.bandwidth_true, cfg.max_cs, gamma=gamma, eta=eta,
         ))
+        if bucket:
+            tq_flat[i, : len(bucket)] = [
+                frame_start + cfg.frame_ms - r.arrival_ms for r in bucket
+            ]
     insts = [pad_instance(r, n_pad) for r in raw_insts]
     batch = stack_instances(insts)  # leading axis: R * T frames
 
     if pol is not None and (not pol.vmappable or not pol.pad):
-        # host-side policy (the ILP oracle), or one that opted out of the
-        # padding contract (the vmapped batch path requires padded shapes):
-        # schedule each unpadded frame in a Python loop, then re-pad the
-        # assignments with drops so the masked metrics path below is shared
-        # with the vmapped policies.
+        # host-side policy (the ILP / LP-bound oracles), or one that opted
+        # out of the padding contract (the vmapped batch path requires
+        # padded shapes): schedule each unpadded frame in a Python loop —
+        # threading the per-replication carry frame by frame — then re-pad
+        # the assignments with drops so the masked metrics path below is
+        # shared with the vmapped policies.
         fn = pol.bind(spec.n_edge, spec.n_servers)
         keys = (
             jax.random.split(jax.random.PRNGKey(seed), len(raw_insts))
-            if pol.needs_key else None
+            if pol.needs_key and not pol.stateful else None
         )
         jv = np.full((len(raw_insts), n_pad), -1, np.int32)
         lv = np.full((len(raw_insts), n_pad), -1, np.int32)
-        for i, (inst, n) in enumerate(zip(raw_insts, n_real)):
-            a = fn(inst, keys[i]) if keys is not None else fn(inst)
-            jv[i, :n] = np.asarray(a.j)
-            lv[i, :n] = np.asarray(a.l)
+        phi_c = np.ones((len(raw_insts), M), np.float32)
+        phi_e = np.ones((len(raw_insts), M), np.float32)
+        final_backlog = np.zeros((n_rep, M), np.float32)
+        for rep in range(n_rep):
+            carry = init_policy_carry(
+                M, seed=seed + rep, bandwidth_init=spec.bandwidth_true
+            )
+            for tf in range(T):
+                i = rep * T + tf
+                inst, n = raw_insts[i], n_real[i]
+                if ccfg.enabled:
+                    run_inst = dataclasses.replace(
+                        inst,
+                        gamma=effective_capacity(inst.gamma, carry.backlog_gamma),
+                        eta=effective_capacity(inst.eta, carry.backlog_eta),
+                    )
+                else:
+                    run_inst = inst
+                if pol.stateful:
+                    a, carry = fn(run_inst, carry)
+                elif keys is not None:
+                    a = fn(run_inst, keys[i])
+                else:
+                    a = fn(run_inst)
+                jv[i, :n] = np.asarray(a.j)
+                lv[i, :n] = np.asarray(a.l)
+                if ccfg.enabled:
+                    w, c = committed_loads(inst, jnp.asarray(a.j), jnp.asarray(a.l))
+                    phi_c[i] = np.asarray(
+                        compute_inflation(carry.backlog_gamma + w, inst.gamma, ccfg)
+                    )
+                    phi_e[i] = np.asarray(
+                        comm_inflation(carry.backlog_eta + c, inst.eta, ccfg)
+                    )
+                    carry = dataclasses.replace(
+                        carry,
+                        backlog_gamma=step_backlog(carry.backlog_gamma, w, inst.gamma, ccfg),
+                        backlog_eta=step_backlog(carry.backlog_eta, c, inst.eta, ccfg),
+                        ema_util=ema_update(carry.ema_util, w, inst.gamma, ccfg),
+                    )
+            final_backlog[rep] = np.asarray(carry.backlog_gamma)
         assign = Assignment(jv, lv)
-    elif pol is not None:
-        fn = pol.bind(spec.n_edge, spec.n_servers)
-        if pol.needs_key:
-            keys = jax.random.split(jax.random.PRNGKey(seed), len(insts))
-            assign = jax.vmap(fn)(batch, keys)
-        else:
-            assign = jax.vmap(fn)(batch)
+        phi_c_all, phi_e_all = phi_c, phi_e
     else:
-        fn = gus_schedule if scheduler is None else scheduler
-        assign = jax.vmap(fn)(batch)
+        if pol is not None:
+            fn = pol.bind(spec.n_edge, spec.n_servers)
+            needs_key = pol.needs_key and not pol.stateful
+            stateful = pol.stateful
+        else:
+            fn = gus_schedule if scheduler is None else scheduler
+            needs_key = False
+            stateful = False
 
-    sat = np.asarray(satisfied_mask(batch, assign.j, assign.l))   # (R*T, n_pad)
-    us = np.asarray(mean_us(batch, assign.j, assign.l))           # (R*T,)
+        # (R, T, ...) layout: vmap over replications, scan over frames
+        batch_rt = jax.tree.map(
+            lambda x: x.reshape((n_rep, T) + x.shape[1:]), batch
+        )
+        if needs_key:
+            keys_rt = jax.random.split(
+                jax.random.PRNGKey(seed), len(insts)
+            ).reshape(n_rep, T, -1)
+        else:  # dummy inputs keep the scan signature uniform
+            keys_rt = jnp.zeros((n_rep, T, 2), jnp.uint32)
+        carry0 = PolicyCarry(
+            key=jax.vmap(lambda r: jax.random.fold_in(jax.random.PRNGKey(seed), r))(
+                jnp.arange(n_rep)
+            ),
+            backlog_gamma=jnp.zeros((n_rep, M), jnp.float32),
+            backlog_eta=jnp.zeros((n_rep, M), jnp.float32),
+            ema_util=jnp.zeros((n_rep, M), jnp.float32),
+            bw_prev=jnp.full((n_rep,), spec.bandwidth_true, jnp.float32),
+            bw_cur=jnp.full((n_rep,), spec.bandwidth_true, jnp.float32),
+        )
+
+        def step(carry, x):
+            inst, key = x
+            if ccfg.enabled:
+                run_inst = dataclasses.replace(
+                    inst,
+                    gamma=effective_capacity(inst.gamma, carry.backlog_gamma),
+                    eta=effective_capacity(inst.eta, carry.backlog_eta),
+                )
+            else:
+                run_inst = inst
+            if stateful:
+                a, carry = fn(run_inst, carry)
+            elif needs_key:
+                a = fn(run_inst, key)
+            else:
+                a = fn(run_inst)
+            if ccfg.enabled:
+                w, c = committed_loads(inst, a.j, a.l)
+                pc = compute_inflation(carry.backlog_gamma + w, inst.gamma, ccfg)
+                pe = comm_inflation(carry.backlog_eta + c, inst.eta, ccfg)
+                carry = dataclasses.replace(
+                    carry,
+                    backlog_gamma=step_backlog(carry.backlog_gamma, w, inst.gamma, ccfg),
+                    backlog_eta=step_backlog(carry.backlog_eta, c, inst.eta, ccfg),
+                    ema_util=ema_update(carry.ema_util, w, inst.gamma, ccfg),
+                )
+            else:
+                pc = jnp.ones_like(inst.gamma)
+                pe = jnp.ones_like(inst.eta)
+            return carry, (a.j, a.l, pc, pe)
+
+        def per_rep(c0, inst_seq, key_seq):
+            return jax.lax.scan(step, c0, (inst_seq, key_seq))
+
+        final_carry, (jv, lv, pc, pe) = jax.jit(jax.vmap(per_rep))(
+            carry0, batch_rt, keys_rt
+        )
+        assign = Assignment(
+            jnp.reshape(jv, (n_rep * T, n_pad)), jnp.reshape(lv, (n_rep * T, n_pad))
+        )
+        phi_c_all = jnp.reshape(pc, (n_rep * T, M))
+        phi_e_all = jnp.reshape(pe, (n_rep * T, M))
+        final_backlog = np.asarray(final_carry.backlog_gamma)
+
+    if ccfg.enabled:
+        mbatch = dataclasses.replace(
+            batch,
+            ctime=congested_ctime(
+                batch, jnp.asarray(tq_flat), jnp.asarray(phi_c_all), jnp.asarray(phi_e_all)
+            ),
+        )
+    else:
+        mbatch = batch
+
+    sat = np.asarray(satisfied_mask(mbatch, assign.j, assign.l))  # (R*T, n_pad)
+    us = np.asarray(mean_us(mbatch, assign.j, assign.l))          # (R*T,)
     real = np.arange(n_pad)[None, :] < n_real[:, None]
     served = (np.asarray(assign.j) >= 0) & real
     sat = sat & real
@@ -570,6 +926,9 @@ def simulate_fleet(
         n_served=int(served.sum()),
         satisfied_per_rep=100.0 * sat_per_rep / np.maximum(reqs_per_rep, 1),
         mean_us_per_rep=us_sum_per_rep / np.maximum(reqs_per_rep, 1),
+        final_backlog_per_rep=final_backlog if ccfg.enabled else None,
+        mean_compute_inflation=float(np.mean(np.asarray(phi_c_all)))
+        if ccfg.enabled else 1.0,
     )
 
 

@@ -1,0 +1,150 @@
+"""Streaming arrival engine — frame-by-frame arrivals with bounded memory.
+
+``Scenario.generate_arrivals`` materializes a replication's *entire* request
+trace up front: fine for the paper's 2-minute horizons, prohibitive for
+long-horizon (10^5+ frames) or nonstationary workloads.  An
+:class:`ArrivalStream` generates the same kind of thinned-Poisson traffic
+*online*: memory is O(n_edge) — one pending arrival per edge in a heap plus
+the current frame's buffer — regardless of horizon.
+
+Determinism and chunking invariance
+-----------------------------------
+
+Each edge draws from its own child generator, spawned from a root
+``numpy.random.SeedSequence(seed)``.  Per edge, the draw order is exactly
+the scenario's materialized loop (exponential gap, thinning acceptance,
+service, QoS, size), so a ``(scenario, seed)`` pair fully determines the
+trace — and because edges never share a stream, *when* arrivals are pulled
+cannot change *what* is drawn: draining the stream frame-by-frame yields
+bit-identical requests to draining it in one shot
+(``tests/test_streaming.py`` pins this for every registered scenario).
+
+The stream pops arrivals in global time order (the heap invariant: every
+pushed next-arrival is later than the pop that produced it), so ``rid``s
+are assigned in arrival order exactly like the materialized path.
+
+Usage::
+
+    stream = ArrivalStream("sustained-overload", seed=0, n_edge=4,
+                           n_services=3, cfg=cfg)
+    while not stream.exhausted:
+        frame = stream.take_until(t + cfg.frame_ms)   # bounded memory
+        ...
+
+``simulate(..., streaming=True)`` (or a scenario registered with
+``streaming=True`` — see ``sustained-overload`` / ``diurnal-week``) runs
+the testbed off a stream instead of a materialized trace.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from typing import List, Optional, Union
+
+import numpy as np
+
+from .scenarios import Request, Scenario, get_scenario
+
+__all__ = ["ArrivalStream", "stream_trace"]
+
+
+class ArrivalStream:
+    """Online thinned-Poisson arrival generator for one replication.
+
+    Memory is bounded: one lookahead arrival time per edge (a heap) plus
+    whatever the caller pulls per frame.  See the module docstring for the
+    determinism contract.
+    """
+
+    def __init__(
+        self,
+        scenario: Union[str, Scenario],
+        seed: int,
+        n_edge: int,
+        n_services: int,
+        cfg,
+        horizon_ms: Optional[float] = None,
+    ):
+        self.scenario = get_scenario(scenario)
+        self.cfg = cfg
+        self.n_services = n_services
+        self.horizon_ms = cfg.horizon_ms if horizon_ms is None else horizon_ms
+        root = np.random.SeedSequence(seed)
+        self._rngs = [np.random.default_rng(s) for s in root.spawn(n_edge)]
+        self._heap: List[tuple] = []
+        self._n_emitted = 0
+        for e in range(n_edge):
+            t = self._next_accepted(e, 0.0)
+            if t is not None:
+                heapq.heappush(self._heap, (t, e))
+
+    @property
+    def n_emitted(self) -> int:
+        """Requests emitted so far (the next rid)."""
+        return self._n_emitted
+
+    @property
+    def exhausted(self) -> bool:
+        """True once every edge's process has run past the horizon."""
+        return not self._heap
+
+    def peek_ms(self) -> float:
+        """Arrival time of the next pending request (inf when exhausted)."""
+        return self._heap[0][0] if self._heap else math.inf
+
+    def _next_accepted(self, edge: int, t: float) -> Optional[float]:
+        """Next *accepted* arrival at ``edge`` strictly after ``t`` via
+        thinning against ``rate_bound`` (same draw order as the
+        materialized ``Scenario.generate_arrivals`` loop), or ``None`` once
+        the process passes the horizon."""
+        rng = self._rngs[edge]
+        rmax = float(self.scenario.rate_bound(edge, self.cfg))
+        if rmax <= 0.0:
+            return None
+        while True:
+            t += rng.exponential(1000.0 / rmax)
+            if t >= self.horizon_ms:
+                return None
+            r_t = float(self.scenario.rate(edge, t, self.cfg))
+            if r_t >= rmax or rng.random() < r_t / rmax:
+                return t
+
+    def take_until(self, t_ms: float) -> List[Request]:
+        """Pop every arrival with ``arrival_ms < t_ms``, in arrival order."""
+        cfg = self.cfg
+        out: List[Request] = []
+        while self._heap and self._heap[0][0] < t_ms:
+            t, e = heapq.heappop(self._heap)
+            rng = self._rngs[e]
+            service = int(rng.integers(0, self.n_services))
+            a, c = self.scenario.draw_qos(rng, cfg)
+            out.append(
+                Request(
+                    rid=self._n_emitted,
+                    arrival_ms=t,
+                    cover=e,
+                    service=service,
+                    A=a,
+                    C=c,
+                    size_bytes=float(rng.uniform(cfg.req_size_lo, cfg.req_size_hi)),
+                )
+            )
+            self._n_emitted += 1
+            nxt = self._next_accepted(e, t)
+            if nxt is not None:
+                heapq.heappush(self._heap, (nxt, e))
+        return out
+
+
+def stream_trace(
+    scenario: Union[str, Scenario],
+    seed: int,
+    n_edge: int,
+    n_services: int,
+    cfg,
+) -> List[Request]:
+    """Drain a fresh :class:`ArrivalStream` in one shot (the materialized
+    view of the streaming process — reference path for parity tests and for
+    the fleet runner on ``streaming=True`` scenarios)."""
+    stream = ArrivalStream(scenario, seed, n_edge, n_services, cfg)
+    return stream.take_until(math.inf)

@@ -32,7 +32,7 @@ from repro.core.policies import POLICIES
 
 BUILTIN = (
     "gus", "gus-ordered", "random", "offload_all", "local_all",
-    "happy_computation", "happy_communication", "ilp",
+    "happy_computation", "happy_communication", "ilp", "lp-bound",
 )
 
 TINY = GeneratorConfig(n_requests=6, n_edge=2, n_cloud=1, n_services=3, n_variants=2)
@@ -75,7 +75,7 @@ def test_get_policy_resolves_and_rejects():
 def test_policy_kinds_partition_the_registry():
     kinds = {n: get_policy(n).kind for n in BUILTIN}
     assert kinds["gus"] == kinds["gus-ordered"] == "greedy"
-    assert kinds["ilp"] == "oracle"
+    assert kinds["ilp"] == kinds["lp-bound"] == "oracle"
     assert {kinds["random"], kinds["offload_all"], kinds["local_all"]} == {"baseline"}
     assert {kinds["happy_computation"], kinds["happy_communication"]} == {"relaxed"}
 

@@ -1,0 +1,375 @@
+"""Congestion subsystem: inflation model, backlog conservation, the
+PolicyCarry threading through both simulators, Happy-* collapse under load,
+fleet-scan vs sequential parity, and the LP-relaxation bound."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    CongestionConfig,
+    GeneratorConfig,
+    Policy,
+    SimConfig,
+    comm_inflation,
+    committed_loads,
+    compute_inflation,
+    demo_cluster_spec,
+    effective_capacity,
+    generate_instance,
+    gus_schedule,
+    init_policy_carry,
+    lagrangian_bound,
+    lagrangian_dual,
+    mean_us,
+    price_directed_greedy,
+    register_policy,
+    simulate,
+    simulate_fleet,
+    solve_bnb,
+    step_backlog,
+)
+from repro.core.policies import POLICIES
+
+CC = CongestionConfig(enabled=True)
+TINY = GeneratorConfig(n_requests=6, n_edge=2, n_cloud=1, n_services=3, n_variants=2)
+
+
+def overload_cfg(rate=8.0, **kw):
+    return SimConfig(
+        horizon_ms=kw.pop("horizon_ms", 24_000.0),
+        arrival_rate_per_s=rate,
+        delay_req_ms=kw.pop("delay_req_ms", 6000.0),
+        acc_req_mean=50.0,
+        acc_req_std=10.0,
+        congestion=kw.pop("congestion", CC),
+        **kw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The inflation / backlog model
+# ---------------------------------------------------------------------------
+
+
+def test_inflation_is_one_at_or_below_budget():
+    budget = jnp.asarray([100.0, 200.0, 50.0])
+    for load in ([0.0, 0.0, 0.0], [100.0, 200.0, 50.0], [40.0, 199.0, 0.5]):
+        phi = compute_inflation(jnp.asarray(load), budget, CC)
+        np.testing.assert_array_equal(np.asarray(phi), 1.0)
+
+
+def test_inflation_grows_monotonically_and_is_capped():
+    budget = jnp.asarray([100.0])
+    loads = [110.0, 150.0, 200.0, 400.0]
+    phis = [float(compute_inflation(jnp.asarray([x]), budget, CC)[0]) for x in loads]
+    assert all(a < b for a, b in zip(phis, phis[1:]))
+    assert all(p > 1.0 for p in phis)
+    huge = float(compute_inflation(jnp.asarray([1e9]), budget, CC)[0])
+    assert huge == CC.max_inflation
+    # a zero-budget (outage) server inflates to the cap, not to inf/NaN
+    dead = float(compute_inflation(jnp.asarray([10.0]), jnp.asarray([0.0]), CC)[0])
+    assert dead == CC.max_inflation
+
+
+def test_backlog_step_conserves_work():
+    """enqueued (backlog + committed) == drained + carried, frame by frame."""
+    rng = np.random.default_rng(0)
+    budget = jnp.asarray(rng.uniform(50.0, 150.0, 4), jnp.float32)
+    backlog = jnp.zeros(4)
+    total_committed = 0.0
+    total_drained = 0.0
+    for _ in range(25):
+        committed = jnp.asarray(rng.uniform(0.0, 300.0, 4), jnp.float32)
+        new = step_backlog(backlog, committed, budget, CC)
+        drained = float(jnp.sum(backlog + committed - new))
+        assert drained >= -1e-4  # never creates work
+        assert drained <= float(jnp.sum(budget)) * CC.drain + 1e-3
+        total_committed += float(jnp.sum(committed))
+        total_drained += drained
+        backlog = new
+    carried = float(jnp.sum(backlog))
+    np.testing.assert_allclose(total_committed, total_drained + carried, rtol=1e-5)
+
+
+def test_effective_capacity_is_budget_minus_backlog_clipped():
+    budget = jnp.asarray([100.0, 100.0])
+    np.testing.assert_array_equal(
+        np.asarray(effective_capacity(budget, jnp.asarray([30.0, 250.0]))),
+        [70.0, 0.0],
+    )
+    # empty backlog passes the budget through bitwise (the disabled-path contract)
+    np.testing.assert_array_equal(
+        np.asarray(effective_capacity(budget, jnp.zeros(2))), np.asarray(budget)
+    )
+
+
+def test_committed_loads_match_manual_accounting():
+    inst = generate_instance(0, TINY)
+    a = gus_schedule(inst)
+    w, c = committed_loads(inst, a.j, a.l)
+    jv, lv = np.asarray(a.j), np.asarray(a.l)
+    v, u = np.asarray(inst.v), np.asarray(inst.u)
+    cover = np.asarray(inst.cover)
+    M = TINY.n_edge + TINY.n_cloud
+    w_ref, c_ref = np.zeros(M), np.zeros(M)
+    for i in range(TINY.n_requests):
+        if jv[i] < 0:
+            continue
+        w_ref[jv[i]] += v[i, jv[i], lv[i]]
+        if jv[i] != cover[i]:
+            c_ref[cover[i]] += u[i, jv[i], lv[i]]
+    np.testing.assert_allclose(np.asarray(w), w_ref, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(c), c_ref, rtol=1e-5)
+
+
+def test_simulate_congestion_work_conservation():
+    """The sequential testbed's work accounting closes: enqueued work ==
+    drained + carried, for both the compute and the comm backlog."""
+    r = simulate(demo_cluster_spec(), overload_cfg(), policy="happy_computation", seed=0)
+    s = r.congestion_stats
+    assert s is not None
+    np.testing.assert_allclose(
+        s["work_enqueued_gamma"],
+        s["work_drained_gamma"] + s["final_backlog_gamma"],
+        rtol=1e-6,
+    )
+    np.testing.assert_allclose(
+        s["work_enqueued_eta"],
+        s["work_drained_eta"] + s["final_backlog_eta"],
+        rtol=1e-6,
+    )
+    assert s["mean_compute_inflation"] > 1.0  # happy_computation over-commits
+
+
+# ---------------------------------------------------------------------------
+# Disabled-path parity: congestion off == the pre-congestion simulator
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_congestion_is_bitwise_inert():
+    spec = demo_cluster_spec()
+    cfg_off = overload_cfg(congestion=CongestionConfig(enabled=False))
+    base = simulate(spec, overload_cfg(congestion=CongestionConfig()), policy="gus", seed=1)
+    off = simulate(spec, cfg_off, policy="gus", seed=1)
+    assert base.as_dict() == off.as_dict()
+    assert off.congestion_stats is None
+    fr_base = simulate_fleet(spec, overload_cfg(congestion=CongestionConfig()), policy="gus", n_rep=2, seed=1)
+    fr_off = simulate_fleet(spec, cfg_off, policy="gus", n_rep=2, seed=1)
+    np.testing.assert_array_equal(fr_base.satisfied_per_rep, fr_off.satisfied_per_rep)
+    np.testing.assert_array_equal(fr_base.mean_us_per_rep, fr_off.mean_us_per_rep)
+    assert fr_off.final_backlog_per_rep is None
+
+
+# ---------------------------------------------------------------------------
+# The paper's testbed behaviour: Happy-* collapse under congestion
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_happy_relaxations_collapse_below_gus_under_congestion():
+    spec = demo_cluster_spec()
+    cfg = overload_cfg()
+    sat = {
+        p: simulate_fleet(spec, cfg, policy=p, n_rep=2, seed=0).satisfied_pct
+        for p in ("gus", "happy_computation", "happy_communication")
+    }
+    assert sat["happy_computation"] < sat["gus"], sat
+    assert sat["happy_communication"] < sat["gus"], sat
+    # without congestion they sit at/above GUS (upper bounds)
+    cfg_off = overload_cfg(congestion=CongestionConfig())
+    sat_off = {
+        p: simulate_fleet(spec, cfg_off, policy=p, n_rep=2, seed=0).satisfied_pct
+        for p in ("gus", "happy_computation", "happy_communication")
+    }
+    assert sat_off["happy_computation"] >= sat["happy_computation"]
+    assert sat_off["happy_communication"] >= sat["happy_communication"]
+
+
+def test_congestion_leaves_capacity_honoring_policies_unchanged():
+    """GUS never over-commits, so enabling congestion must not change its
+    fleet results (backlog stays empty, phi stays 1)."""
+    spec = demo_cluster_spec()
+    on = simulate_fleet(spec, overload_cfg(), policy="gus", n_rep=2, seed=0)
+    off = simulate_fleet(
+        spec, overload_cfg(congestion=CongestionConfig()), policy="gus", n_rep=2, seed=0
+    )
+    np.testing.assert_array_equal(on.satisfied_per_rep, off.satisfied_per_rep)
+    assert np.all(np.asarray(on.final_backlog_per_rep) == 0.0)
+    assert on.mean_compute_inflation == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Fleet-scan vs sequential-simulate parity under congestion
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", ["gus", "happy_computation", "local_all"])
+def test_fleet_scan_matches_sequential_under_congestion(policy):
+    """Noise-free, frame-synchronous settings: the sequential testbed and the
+    scan-based fleet must agree on served/satisfied counts exactly, with the
+    congestion backlog evolving identically in both."""
+    spec = demo_cluster_spec()
+    cfg = SimConfig(
+        horizon_ms=30_000.0, arrival_rate_per_s=6.0, delay_req_ms=6000.0,
+        acc_req_mean=50.0, acc_req_std=10.0,
+        channel_sigma=0.0, proc_sigma=0.0, queue_cap=10**9,
+        bandwidth_init=spec.bandwidth_true, adapt_max_cs=False,
+        congestion=CC,
+    )
+    r = simulate(spec, cfg, policy=policy, seed=0)
+    fr = simulate_fleet(spec, cfg, policy=policy, n_rep=1, seed=0)
+    assert fr.n_requests == r.n_requests
+    assert fr.n_served == r.n_served
+    fleet_sat = int(round(fr.satisfied_per_rep[0] * fr.n_requests / 100.0))
+    assert fleet_sat == r.n_satisfied
+
+
+# ---------------------------------------------------------------------------
+# Stateful policies: the carry threads through frame loop and scan
+# ---------------------------------------------------------------------------
+
+
+def _make_adaptive(n_edge, n_servers):
+    """EMA-load-aware GUS: shades each server's visible capacity by its
+    estimated utilization and advances its own PRNG chain."""
+
+    def fn(inst, carry):
+        shade = jnp.maximum(1.0 - carry.ema_util, 0.1)
+        a = gus_schedule(dataclasses.replace(inst, gamma=inst.gamma * shade))
+        key, _ = jax.random.split(carry.key)
+        return a, dataclasses.replace(carry, key=key)
+
+    return fn
+
+
+def test_stateful_policy_runs_both_paths_deterministically():
+    name = "test-adaptive"
+    register_policy(Policy(
+        name=name, description="EMA-shaded GUS (stateful probe)",
+        make=_make_adaptive, stateful=True, kind="greedy",
+    ))
+    try:
+        spec = demo_cluster_spec()
+        cfg = overload_cfg(rate=4.0, horizon_ms=12_000.0)
+        a = simulate(spec, cfg, policy=name, seed=0)
+        b = simulate(spec, cfg, policy=name, seed=0)
+        assert a.as_dict() == b.as_dict()
+        assert a.n_served + a.n_dropped == a.n_requests
+        fa = simulate_fleet(spec, cfg, policy=name, n_rep=2, seed=0)
+        fb = simulate_fleet(spec, cfg, policy=name, n_rep=2, seed=0)
+        np.testing.assert_array_equal(fa.satisfied_per_rep, fb.satisfied_per_rep)
+        assert np.isfinite(fa.satisfied_pct) and fa.n_served > 0
+    finally:
+        POLICIES.pop(name, None)
+
+
+def test_stateful_policy_sees_growing_backlog_in_carry():
+    """Under sustained over-commit the simulator-owned backlog (and the EMA
+    load estimate) in the carry must be visible to a stateful policy and
+    grow across frames — in the sequential path, like in the fleet's scan."""
+    seen = []
+    seen_ema = []
+
+    def make(n_edge, n_servers):
+        def fn(inst, carry):
+            seen.append(float(jnp.sum(carry.backlog_gamma)))
+            seen_ema.append(float(jnp.max(carry.ema_util)))
+            a = gus_schedule(inst, relax_compute=True)  # over-commit on purpose
+            return a, carry
+
+        return fn
+
+    name = "test-backlog-probe"
+    register_policy(Policy(name=name, description="backlog probe", make=make,
+                           stateful=True, vmappable=False, pad=False))
+    try:
+        simulate(demo_cluster_spec(), overload_cfg(horizon_ms=15_000.0),
+                 policy=name, seed=0)
+    finally:
+        POLICIES.pop(name, None)
+    assert len(seen) >= 3
+    assert seen[0] == 0.0 and seen[-1] > 0.0
+    assert max(seen) == pytest.approx(seen[-1])  # monotone growth under overload
+    assert seen_ema[0] == 0.0 and seen_ema[-1] > 0.0  # EMA evolves here too
+
+
+def test_init_policy_carry_shapes():
+    c = init_policy_carry(5, seed=3, bandwidth_init=42.0)
+    assert c.backlog_gamma.shape == (5,) and c.backlog_eta.shape == (5,)
+    assert c.ema_util.shape == (5,)
+    assert float(c.bw_cur) == 42.0
+    # it is a pytree (scan-carry requirement)
+    leaves = jax.tree_util.tree_leaves(c)
+    assert len(leaves) == 6
+
+
+# ---------------------------------------------------------------------------
+# lp-bound: the LP-relaxation oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_lagrangian_bound_dominates_exact_optimum(seed):
+    inst = generate_instance(seed, TINY)
+    _, opt = solve_bnb(inst)
+    bound = lagrangian_bound(inst)
+    assert bound >= opt - 1e-9
+    # and it is tighter than (or equal to) the capacity-free naive bound
+    from repro.core import best_us_per_request
+
+    naive = float(jnp.maximum(best_us_per_request(inst), 0.0).sum()) / TINY.n_requests
+    assert bound <= naive + 1e-6  # f32 (naive) vs f64 (dual) rounding slack
+
+
+def test_price_directed_greedy_is_feasible():
+    inst = generate_instance(0, GeneratorConfig(
+        n_requests=40, n_edge=3, n_cloud=1, n_services=5, n_variants=3
+    ))
+    _, lam, mu = lagrangian_dual(inst)
+    a = price_directed_greedy(inst, lam, mu)
+    jv, lv = np.asarray(a.j), np.asarray(a.l)
+    v, u = np.asarray(inst.v), np.asarray(inst.u)
+    cover = np.asarray(inst.cover)
+    gamma = np.asarray(inst.gamma, np.float64).copy()
+    eta = np.asarray(inst.eta, np.float64).copy()
+    for i in range(40):
+        if jv[i] < 0:
+            continue
+        gamma[jv[i]] -= v[i, jv[i], lv[i]]
+        if jv[i] != cover[i]:
+            eta[cover[i]] -= u[i, jv[i], lv[i]]
+    assert (gamma >= -1e-6).all() and (eta >= -1e-6).all()
+
+
+@pytest.mark.slow
+def test_lp_bound_policy_scales_past_ilp_refusal():
+    """The registered lp-bound policy schedules a 100-request frame (which
+    the ilp policy refuses) and its bound dominates GUS's value there."""
+    from repro.core import get_policy
+
+    big = GeneratorConfig()  # 100 requests
+    inst = generate_instance(0, big)
+    pol = get_policy("lp-bound")
+    assert pol.kind == "oracle" and not pol.vmappable and not pol.pad
+    a = pol.bind(big.n_edge, big.n_edge + big.n_cloud)(inst)
+    assert np.asarray(a.j).shape == (100,)
+    bound = lagrangian_bound(inst)
+    g = gus_schedule(inst)
+    gus_val = float(mean_us(inst, g.j, g.l))
+    assert bound >= gus_val - 1e-9
+    assert gus_val / bound > 0.5  # the gap stays measurable, and sane
+
+
+def test_lp_bound_runs_in_simulator_and_fleet():
+    spec = demo_cluster_spec(n_edge=2, n_cloud=1, n_services=2, n_variants=2)
+    cfg = SimConfig(horizon_ms=6000.0, arrival_rate_per_s=1.5,
+                    delay_req_ms=6000.0, acc_req_mean=50.0, acc_req_std=10.0)
+    r = simulate(spec, cfg, policy="lp-bound", seed=0)
+    assert r.n_served + r.n_dropped == r.n_requests
+    fr = simulate_fleet(spec, cfg, policy="lp-bound", n_rep=2, seed=0)
+    assert np.isfinite(fr.satisfied_pct)

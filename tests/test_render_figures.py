@@ -1,0 +1,59 @@
+"""Renderer smoke: draws every panel kind from a minimal synthetic figures
+JSON.  Skips cleanly when matplotlib is absent (it is optional everywhere)."""
+import json
+
+import pytest
+
+pytest.importorskip("matplotlib")
+
+
+def _fake_json(tmp_path):
+    rows_sweep = [
+        {"x": x, "policy": p, "satisfied_pct": 50.0 + 10 * i + x}
+        for x in (1.0, 2.0)
+        for i, p in enumerate(("gus", "random"))
+    ]
+    data = {
+        "meta": {"tiny": True, "policies": ["gus", "random"]},
+        "figures": {
+            "arrival-rate": {"x_label": "rate", "rows": rows_sweep},
+            "scenarios": {"x_label": "scenario", "rows": [
+                {"scenario": s, "policy": p, "satisfied_pct": 60.0 + i}
+                for s in ("paper-default", "outage")
+                for i, p in enumerate(("gus", "random", "ilp"))
+            ]},
+            "optimality-gap": {"x_label": "seed", "rows": [
+                {"regime": r, "seed": s, "certified": r != "large-lp",
+                 "opt": 0.5, "gus": 0.45, "gus_ordered": 0.46,
+                 "ratio": 0.9, "ratio_ordered": 0.92}
+                for r in ("ample", "large-lp") for s in (0, 1)
+            ]},
+            "congestion": {"x_label": "rate", "rows": [
+                {"scenario": "paper-default", "x": 8.0, "policy": p,
+                 "satisfied_pct": 40.0 - 10 * i}
+                for i, p in enumerate(("gus", "happy_computation"))
+            ]},
+        },
+        "claims": {},
+    }
+    path = tmp_path / "paper_figures.json"
+    path.write_text(json.dumps(data))
+    return path
+
+
+def test_renderer_draws_every_panel(tmp_path):
+    import sys
+    from pathlib import Path
+
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "benchmarks"))
+    try:
+        import render_figures
+    finally:
+        sys.path.pop(0)
+
+    json_path = _fake_json(tmp_path)
+    written = render_figures.render(json_path, tmp_path)
+    names = {p.name for p in written}
+    assert names == {"arrival-rate.png", "scenarios.png",
+                     "optimality-gap.png", "congestion.png"}
+    assert all(p.stat().st_size > 0 for p in written)
