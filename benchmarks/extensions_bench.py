@@ -10,7 +10,6 @@
 Prints CSV rows."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -1,0 +1,264 @@
+"""Fleet-scale benchmark: Monte-Carlo throughput toward the paper's 20 000
+replications, across replication counts and device meshes.
+
+Three sweeps over ``simulate_fleet`` on a paper-sized cluster (10 servers,
+10 model variants), all with the jitted GUS policy:
+
+  replication_sweep  wall-clock and requests/s vs n_rep on one device
+  device_sweep       fixed n_rep sharded over 1..D devices (strong scaling)
+  weak_scaling       n_rep grows with the device count (per-device throughput)
+
+Each row reports the end-to-end wall time and the *dispatch* time
+(``FleetResult.dispatch_s`` — the phase inside the jitted fleet programs,
+which is what device sharding accelerates; host-side arrival generation is
+Python and device-count independent).  Rows keep the best of ``--repeats``
+runs to shave scheduler noise.
+
+Writes ``results/fleet_scale/BENCH_fleet.json``.  CI gates on it twice:
+
+* perf-regression gate — ``--compare benchmarks/baselines/BENCH_fleet.json
+  --tolerance 0.30`` fails when single-device throughput regresses by more
+  than the band against the checked-in baseline
+  (``--update-baseline`` refreshes the file);
+* multi-device gate — ``--assert-scaling 1.0`` (run under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8``) fails when the
+  dispatch-phase throughput at the largest mesh does not beat one device.
+
+Run:
+
+    python benchmarks/fleet_scale.py --tiny                 # CI smoke
+    python benchmarks/fleet_scale.py                        # full sweep
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        python benchmarks/fleet_scale.py --tiny --assert-scaling 1.0
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+_SRC = Path(__file__).resolve().parent.parent / "src"
+if _SRC.is_dir() and str(_SRC) not in sys.path:
+    sys.path.insert(0, str(_SRC))
+
+import jax
+
+from repro.core import SimConfig, demo_cluster_spec, simulate_fleet
+
+POLICY = "gus"
+
+
+def bench_spec():
+    """Paper-sized cluster: 9 edges + 1 cloud, 10 model variants — heavy
+    enough per frame that the device program dominates a group's cost."""
+    return demo_cluster_spec(n_edge=9, n_cloud=1, n_services=5, n_variants=10)
+
+
+def bench_cfg(tiny: bool) -> SimConfig:
+    return SimConfig(
+        horizon_ms=12_000.0 if tiny else 30_000.0,
+        arrival_rate_per_s=6.0,
+        delay_req_ms=6000.0,
+        acc_req_mean=50.0,
+        acc_req_std=10.0,
+    )
+
+
+def _measure(spec, cfg, *, n_rep: int, devices: int, repeats: int) -> dict:
+    """Best-of-``repeats`` timing of one fleet configuration (plus one
+    untimed warmup so compilation never lands in a timed run)."""
+    simulate_fleet(spec, cfg, policy=POLICY, n_rep=n_rep, seed=0, devices=devices)
+    best_wall = best_disp = float("inf")
+    fr = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fr = simulate_fleet(
+            spec, cfg, policy=POLICY, n_rep=n_rep, seed=0, devices=devices
+        )
+        wall = time.perf_counter() - t0
+        best_wall = min(best_wall, wall)
+        best_disp = min(best_disp, fr.dispatch_s)
+    frames = n_rep * fr.n_frames
+    return {
+        "n_rep": n_rep,
+        "devices": devices,
+        "wall_s": round(best_wall, 4),
+        "dispatch_s": round(best_disp, 4),
+        "n_requests": fr.n_requests,
+        "n_frames": frames,
+        "reqs_per_s": round(fr.n_requests / best_wall, 1),
+        "frames_per_s": round(frames / best_wall, 1),
+        "dispatch_frames_per_s": round(frames / max(best_disp, 1e-9), 1),
+        "per_device_frames_per_s": round(frames / best_wall / devices, 1),
+    }
+
+
+def run(*, tiny: bool, out: str, device_counts, repeats: int) -> dict:
+    spec = bench_spec()
+    cfg = bench_cfg(tiny)
+    # the device sweeps always run the full-size horizon: per-group compute
+    # must dominate dispatch overhead for a scaling measurement to mean
+    # anything, and at ~1 s per row they stay CI-affordable even in --tiny
+    scale_cfg = bench_cfg(tiny=False)
+    avail = jax.local_device_count()
+    if device_counts is None:
+        device_counts = [d for d in (1, 2, 4, 8) if d <= avail]
+    device_counts = sorted(set(device_counts))
+
+    rep_values = [16, 64] if tiny else [64, 256, 1024]
+    rep_fixed = 64 if tiny else rep_values[-1]
+    weak_base = 8 if tiny else 32
+
+    print(f"# fleet_scale: tiny={tiny} devices={device_counts} (avail {avail})")
+    replication_sweep = []
+    for n_rep in rep_values:
+        row = _measure(spec, cfg, n_rep=n_rep, devices=1, repeats=repeats)
+        replication_sweep.append(row)
+        print(f"replication_sweep,n_rep={n_rep},{row['wall_s']}s,"
+              f"{row['reqs_per_s']} req/s", flush=True)
+
+    device_sweep = []
+    for d in device_counts:
+        row = _measure(spec, scale_cfg, n_rep=rep_fixed, devices=d, repeats=repeats)
+        device_sweep.append(row)
+        print(f"device_sweep,devices={d},{row['wall_s']}s,"
+              f"dispatch={row['dispatch_s']}s", flush=True)
+
+    weak_scaling = []
+    for d in device_counts:
+        row = _measure(
+            spec, scale_cfg, n_rep=weak_base * d, devices=d, repeats=repeats
+        )
+        weak_scaling.append(row)
+        print(f"weak_scaling,devices={d},n_rep={weak_base * d},"
+              f"per_device={row['per_device_frames_per_s']} frames/s", flush=True)
+
+    # scaling between the smallest and largest swept mesh (usually 1 -> D,
+    # but an explicit --devices list without 1 still gets a valid report)
+    base, top = device_sweep[0], device_sweep[-1]
+    scaling = {
+        "base_devices": base["devices"],
+        "devices": top["devices"],
+        "end_to_end": round(base["wall_s"] / top["wall_s"], 3),
+        "dispatch": round(
+            top["dispatch_frames_per_s"] / max(base["dispatch_frames_per_s"], 1e-9), 3
+        ),
+    }
+    print(f"scaling {base['devices']} -> {top['devices']} devices: "
+          f"end-to-end {scaling['end_to_end']}x, dispatch {scaling['dispatch']}x")
+
+    report = {
+        "meta": {
+            "bench": "fleet_scale",
+            "tiny": tiny,
+            "policy": POLICY,
+            "jax": jax.__version__,
+            "devices_available": avail,
+            "repeats": repeats,
+            "horizon_ms": cfg.horizon_ms,
+            "arrival_rate_per_s": cfg.arrival_rate_per_s,
+        },
+        "replication_sweep": replication_sweep,
+        "device_sweep": device_sweep,
+        "weak_scaling": weak_scaling,
+        "scaling_1_to_max": scaling,
+    }
+    out_dir = Path(out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / "BENCH_fleet.json"
+    path.write_text(json.dumps(report, indent=2))
+    print(f"wrote {path}")
+    return report
+
+
+def compare_against_baseline(report: dict, baseline_path: str, tolerance: float):
+    """Fail (SystemExit) when single-device throughput regresses by more
+    than ``tolerance`` against the checked-in baseline.  Rows are matched
+    on (n_rep, devices); unmatched rows are skipped, so the baseline can
+    lag the sweep's shape."""
+    baseline = json.loads(Path(baseline_path).read_text())
+    old_rows = {
+        (r["n_rep"], r["devices"]): r for r in baseline.get("replication_sweep", [])
+    }
+    failures, checked = [], 0
+    for row in report["replication_sweep"]:
+        old = old_rows.get((row["n_rep"], row["devices"]))
+        if old is None:
+            continue
+        checked += 1
+        floor = old["reqs_per_s"] * (1.0 - tolerance)
+        verdict = "ok" if row["reqs_per_s"] >= floor else "REGRESSION"
+        print(f"gate,n_rep={row['n_rep']}: {row['reqs_per_s']} vs baseline "
+              f"{old['reqs_per_s']} req/s (floor {floor:.1f}) {verdict}")
+        if row["reqs_per_s"] < floor:
+            failures.append(row)
+    if checked == 0:
+        raise SystemExit(f"perf gate matched no rows in {baseline_path}")
+    if failures:
+        raise SystemExit(
+            f"perf gate: {len(failures)}/{checked} rows regressed more than "
+            f"{tolerance:.0%} vs {baseline_path} — if intentional, refresh it "
+            "with --update-baseline"
+        )
+    print(f"perf gate: {checked} rows within {tolerance:.0%} of baseline")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tiny", action="store_true", help="CI smoke: small sweep")
+    ap.add_argument("--out", default="results/fleet_scale")
+    ap.add_argument("--devices", type=int, action="append",
+                    help="device count to sweep (repeatable; default powers "
+                         "of two up to jax.local_device_count())")
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="timed repeats per row, best kept (default 3; 2 tiny)")
+    ap.add_argument("--compare", metavar="BASELINE_JSON",
+                    help="perf-regression gate against a checked-in baseline")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="allowed fractional throughput drop for --compare")
+    ap.add_argument("--assert-scaling", default=None, metavar="X",
+                    help="fail unless dispatch-phase throughput at the largest "
+                         "mesh beats X times one device; 'auto' requires >1.0 "
+                         "on hosts with >= 4 cores (virtual devices have real "
+                         "parallel headroom there) and a 0.7 no-degradation "
+                         "floor on smaller hosts")
+    ap.add_argument("--update-baseline", metavar="PATH",
+                    help="also write the report to PATH (refresh the baseline)")
+    args = ap.parse_args(argv)
+
+    repeats = args.repeats if args.repeats is not None else (2 if args.tiny else 3)
+    report = run(tiny=args.tiny, out=args.out, device_counts=args.devices,
+                 repeats=repeats)
+
+    if args.update_baseline:
+        Path(args.update_baseline).parent.mkdir(parents=True, exist_ok=True)
+        Path(args.update_baseline).write_text(json.dumps(report, indent=2))
+        print(f"baseline refreshed at {args.update_baseline}")
+    if args.compare:
+        compare_against_baseline(report, args.compare, args.tolerance)
+    if args.assert_scaling is not None:
+        cores = os.cpu_count() or 1
+        if args.assert_scaling == "auto":
+            floor = 1.0 if cores >= 4 else 0.7
+        else:
+            floor = float(args.assert_scaling)
+        got = report["scaling_1_to_max"]["dispatch"]
+        d_base = report["scaling_1_to_max"]["base_devices"]
+        d_max = report["scaling_1_to_max"]["devices"]
+        if d_max <= d_base:
+            raise SystemExit("--assert-scaling needs a multi-device sweep; "
+                             "set XLA_FLAGS=--xla_force_host_platform_device_count=8")
+        if got <= floor:
+            raise SystemExit(
+                f"dispatch throughput scaling {d_base} -> {d_max} devices is "
+                f"{got}x, required > {floor}x ({cores} cores)"
+            )
+        print(f"scaling gate: {got}x > {floor}x on {d_base} -> {d_max} devices "
+              f"({cores} cores)")
+
+
+if __name__ == "__main__":
+    main()

@@ -128,36 +128,36 @@ def _fleet_sweep(fig, x_label, values, make_cfg, spec, *, n_rep, policies):
     return {"x_label": x_label, "rows": rows}
 
 
-def fig_arrival_rate(tiny: bool) -> Dict:
+def fig_arrival_rate(tiny: bool, replications=None) -> Dict:
     """Satisfied-% vs per-edge arrival rate (every vmappable policy, fleet)."""
     spec = demo_cluster_spec()
     values = [1.0, 4.0] if tiny else [0.5, 1.0, 2.0, 4.0, 8.0]
     return _fleet_sweep(
         "arrival-rate", "arrival rate (req/s per edge)", values,
         lambda r: _base_cfg(tiny, arrival_rate_per_s=r),
-        spec, n_rep=2 if tiny else 8, policies=_fleet_policies(),
+        spec, n_rep=replications or (2 if tiny else 8), policies=_fleet_policies(),
     )
 
 
-def fig_qos_deadline(tiny: bool) -> Dict:
+def fig_qos_deadline(tiny: bool, replications=None) -> Dict:
     """Satisfied-% vs requested deadline C_i (stricter deadline -> fewer)."""
     spec = demo_cluster_spec()
     values = [2000.0, 8000.0] if tiny else [1500.0, 3000.0, 6000.0, 12000.0]
     return _fleet_sweep(
         "qos-deadline", "requested deadline C_i (ms)", values,
         lambda d: _base_cfg(tiny, delay_req_ms=d),
-        spec, n_rep=2 if tiny else 8, policies=_fleet_policies(),
+        spec, n_rep=replications or (2 if tiny else 8), policies=_fleet_policies(),
     )
 
 
-def fig_qos_accuracy(tiny: bool) -> Dict:
+def fig_qos_accuracy(tiny: bool, replications=None) -> Dict:
     """Satisfied-% vs requested accuracy A_i (stricter floor -> fewer)."""
     spec = demo_cluster_spec()
     values = [40.0, 70.0] if tiny else [30.0, 45.0, 60.0, 75.0]
     return _fleet_sweep(
         "qos-accuracy", "requested accuracy A_i (%)", values,
         lambda a: _base_cfg(tiny, acc_req_mean=a),
-        spec, n_rep=2 if tiny else 8, policies=_fleet_policies(),
+        spec, n_rep=replications or (2 if tiny else 8), policies=_fleet_policies(),
     )
 
 
@@ -213,7 +213,7 @@ def fig_scenarios(tiny: bool) -> Dict:
     return {"x_label": "scenario", "rows": rows}
 
 
-def fig_congestion(tiny: bool) -> Dict:
+def fig_congestion(tiny: bool, replications=None) -> Dict:
     """Satisfied-% under load-dependent service times (the testbed regime).
 
     Runs the vmapped fleet with the congestion model enabled
@@ -233,7 +233,7 @@ def fig_congestion(tiny: bool) -> Dict:
         [("paper-default", 2.0), ("paper-default", 4.0), ("paper-default", 8.0),
          ("sustained-overload", 2.0)]
     )
-    n_rep = 2 if tiny else 8
+    n_rep = replications or (2 if tiny else 8)
     horizon = 24_000.0 if tiny else 30_000.0
     rows = []
     for scn, rate in points:
@@ -539,24 +539,33 @@ def render_markdown(figures: Dict[str, Dict], claims: Dict, meta: Dict) -> str:
     return "\n".join(lines)
 
 
-def run(*, tiny: bool = False, out: str = "results/paper_figures", only=None):
+def run(
+    *,
+    tiny: bool = False,
+    out: str = "results/paper_figures",
+    only=None,
+    replications: int = None,
+):
     out = Path(out)
     selected = tuple(only) if only else FIGURES
 
+    # fleet-backed figures take the --replications override (the paper's
+    # Monte-Carlo averages 20 000); the sequential-testbed figures don't
     builders = {
-        "arrival-rate": fig_arrival_rate,
-        "num-users": fig_num_users,
-        "qos-deadline": fig_qos_deadline,
-        "qos-accuracy": fig_qos_accuracy,
-        "scenarios": fig_scenarios,
-        "optimality-gap": fig_optimality_gap,
-        "congestion": fig_congestion,
+        "arrival-rate": lambda: fig_arrival_rate(tiny, replications),
+        "num-users": lambda: fig_num_users(tiny),
+        "qos-deadline": lambda: fig_qos_deadline(tiny, replications),
+        "qos-accuracy": lambda: fig_qos_accuracy(tiny, replications),
+        "scenarios": lambda: fig_scenarios(tiny),
+        "optimality-gap": lambda: fig_optimality_gap(tiny),
+        "congestion": lambda: fig_congestion(tiny, replications),
     }
-    figures = {name: builders[name](tiny) for name in selected}
+    figures = {name: builders[name]() for name in selected}
     claims = check_claims(figures)
 
     meta = {
         "tiny": tiny,
+        "replications": replications,
         "policies": list_policies(),
         "scenarios": list_scenarios(),
         "figures": list(selected),
@@ -597,8 +606,15 @@ def main(argv=None):
                     help="output directory for JSON + markdown")
     ap.add_argument("--only", action="append", choices=FIGURES,
                     help="run a subset of figures (repeatable)")
+    ap.add_argument("--replications", type=int, default=None, metavar="R",
+                    help="Monte-Carlo replications for the fleet-backed "
+                         "figures (paper: 20000; sharded over every local "
+                         "device — set XLA_FLAGS or use real accelerators)")
     args = ap.parse_args(argv)
-    return run(tiny=args.tiny, out=args.out, only=args.only)
+    if args.replications is not None and args.replications < 1:
+        ap.error("--replications must be >= 1")
+    return run(tiny=args.tiny, out=args.out, only=args.only,
+               replications=args.replications)
 
 
 if __name__ == "__main__":

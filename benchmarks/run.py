@@ -7,6 +7,7 @@ benches.  ``PYTHONPATH=src python -m benchmarks.run [--fast]``.
   render    — matplotlib panels from the figures JSON (no-op without matplotlib)
   optimal   — GUS vs exact ILP (the ~90%-of-CPLEX table)
   sched     — GUS scheduling throughput (jit/vmap systems number)
+  fleet     — sharded Monte-Carlo fleet throughput (BENCH_fleet.json)
   scenarios — satisfied-% per scheduler per registered workload scenario
   roofline  — per-(arch x shape x mesh) roofline table from dry-run reports
 """
@@ -22,7 +23,7 @@ def main(argv=None):
     ap.add_argument("--fast", action="store_true", help="fewer MC runs")
     ap.add_argument(
         "--only",
-        choices=["fig1num", "fig1test", "figures", "render", "optimal", "sched", "serving", "extensions", "scenarios", "roofline"],
+        choices=["fig1num", "fig1test", "figures", "render", "optimal", "sched", "fleet", "serving", "extensions", "scenarios", "roofline"],
         default=None,
     )
     args = ap.parse_args(argv)
@@ -31,6 +32,7 @@ def main(argv=None):
     from . import (
         fig1_numerical,
         fig1_testbed,
+        fleet_scale,
         optimal_gap,
         paper_figures,
         render_figures,
@@ -51,6 +53,7 @@ def main(argv=None):
         "render": lambda: render_figures.main([]),
         "optimal": lambda: optimal_gap.main(10 if args.fast else 25),
         "sched": scheduler_throughput.main,
+        "fleet": lambda: fleet_scale.main(["--tiny"] if args.fast else []),
         "serving": lambda: serving_bench.main(6 if args.fast else 12),
         "extensions": lambda: extensions_bench.main(fast=args.fast),
         "scenarios": lambda: (

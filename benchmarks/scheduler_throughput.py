@@ -9,7 +9,6 @@ from __future__ import annotations
 import time
 
 import jax
-import numpy as np
 
 from repro.core import GeneratorConfig, generate_batch, generate_instance, gus_schedule, gus_schedule_batch, gus_schedule_np
 

@@ -10,7 +10,6 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.core import (
@@ -24,7 +23,7 @@ from repro.core import (
     satisfied_mask,
     solve_bnb,
 )
-from repro.serving import ModelZoo, ServiceSpec, variant_ladder, request_latency_ms, HW_CLASSES, accuracy_proxy
+from repro.serving import variant_ladder, request_latency_ms, HW_CLASSES, accuracy_proxy
 
 
 def main():

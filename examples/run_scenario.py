@@ -46,6 +46,14 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fleet", type=int, default=0, metavar="R",
                     help="also run R vmapped Monte-Carlo replications")
+    ap.add_argument("--devices", type=int, default=None, metavar="N",
+                    help="shard the fleet's replication axis over N local "
+                         "devices (default: all; asking for more than "
+                         "jax.local_device_count() is an error, results are "
+                         "bit-identical either way)")
+    ap.add_argument("--window", type=int, default=None, metavar="W",
+                    help="run the fleet scan W frames at a time "
+                         "(bounded memory on long horizons)")
     ap.add_argument("--congestion", action="store_true",
                     help="enable load-dependent service times (queueing model)")
     stream = ap.add_mutually_exclusive_group()
@@ -57,6 +65,9 @@ def main(argv=None):
     ap.add_argument("--list", action="store_true",
                     help="list scenarios and policies, then exit")
     args = ap.parse_args(argv)
+
+    if not args.fleet and (args.devices is not None or args.window is not None):
+        ap.error("--devices/--window configure the Monte-Carlo fleet; add --fleet R")
 
     if args.list:
         print("scenarios:")
@@ -105,11 +116,16 @@ def main(argv=None):
         if args.policy == "gus-np":
             raise SystemExit("gus-np is host-only; the fleet needs a registered policy")
         try:
+            # a --devices request the host cannot honor raises a clear
+            # ValueError (never a silent single-device fallback)
             fr = simulate_fleet(spec, cfg, scenario=scn, n_rep=args.fleet,
-                                seed=args.seed, streaming=args.streaming, **sim_kw)
-        except ValueError as e:  # e.g. ILP on an uncapped (queue-less) fleet frame
+                                seed=args.seed, streaming=args.streaming,
+                                devices=args.devices, window=args.window,
+                                **sim_kw)
+        except ValueError as e:  # bad --devices, ILP on an uncapped frame, ...
             raise SystemExit(str(e.args[0]))
-        print(f"=== fleet: {args.fleet} replications, one device program ===")
+        print(f"=== fleet: {args.fleet} replications on "
+              f"{fr.n_devices} device(s) ===")
         for k, v in fr.as_dict().items():
             print(f"  {k:20s} {float(v):10.3f}")
 

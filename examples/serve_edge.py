@@ -23,7 +23,7 @@ from repro.training.data import SyntheticLM
 from repro.core import ClusterSpec, SimConfig, gus_schedule_np, local_all, offload_all, simulate
 from repro.models import Model
 from repro.serving import ServingEngine
-from repro.training import AdamWConfig, batch_iterator, init_state, make_batch, make_train_step
+from repro.training import AdamWConfig, init_state, make_batch, make_train_step
 
 
 # one shared learnable task (peaky Markov chain).  NOTE: at CPU scale (a few

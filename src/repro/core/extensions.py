@@ -19,7 +19,6 @@
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 from typing import Optional
 

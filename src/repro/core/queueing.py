@@ -43,13 +43,13 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from .gus import Assignment
 from .instance import FlatInstance
 
 __all__ = [
     "CongestionConfig",
     "PolicyCarry",
     "init_policy_carry",
+    "fleet_policy_carry",
     "compute_inflation",
     "comm_inflation",
     "step_backlog",
@@ -125,6 +125,29 @@ def init_policy_carry(
         ema_util=jnp.zeros((n_servers,), jnp.float32),
         bw_prev=jnp.float32(bandwidth_init),
         bw_cur=jnp.float32(bandwidth_init),
+    )
+
+
+def fleet_policy_carry(
+    n_rep: int, n_servers: int, *, seed: int = 0, bandwidth_init: float = 0.0
+) -> PolicyCarry:
+    """A batched carry for ``simulate_fleet``: one :class:`PolicyCarry` per
+    replication, stacked on a leading ``(R,)`` axis.
+
+    Replication ``r``'s key chain is ``fold_in(PRNGKey(seed), r)`` — the
+    fleet's legacy per-replication chain — and the leading axis is exactly
+    the axis the sharded fleet places across its ``("rep",)`` device mesh,
+    so the whole carry pytree shards with ``PartitionSpec("rep")``.
+    """
+    return PolicyCarry(
+        key=jax.vmap(lambda r: jax.random.fold_in(jax.random.PRNGKey(seed), r))(
+            jnp.arange(n_rep)
+        ),
+        backlog_gamma=jnp.zeros((n_rep, n_servers), jnp.float32),
+        backlog_eta=jnp.zeros((n_rep, n_servers), jnp.float32),
+        ema_util=jnp.zeros((n_rep, n_servers), jnp.float32),
+        bw_prev=jnp.full((n_rep,), bandwidth_init, jnp.float32),
+        bw_cur=jnp.full((n_rep,), bandwidth_init, jnp.float32),
     )
 
 

@@ -54,6 +54,7 @@ __all__ = [
     "register_scenario",
     "get_scenario",
     "list_scenarios",
+    "bucket_arrivals",
 ]
 
 
@@ -161,6 +162,23 @@ class Scenario:
         for i, r in enumerate(reqs):  # rids in arrival order, like the testbed
             r.rid = i
         return reqs
+
+
+def bucket_arrivals(
+    reqs: List[Request], frame_ms: float, n_frames: int
+) -> List[List[Request]]:
+    """Group a materialized arrival trace into per-frame buckets.
+
+    This is the fleet runner's frame-synchronous layout: frame ``t`` holds
+    every arrival in ``[t * frame_ms, (t + 1) * frame_ms)``, and anything at
+    or past the last boundary clamps into the final frame — the same
+    bucketing the windowed streaming path reproduces by pulling an
+    :class:`~repro.core.streaming.ArrivalStream` one frame at a time.
+    """
+    buckets: List[List[Request]] = [[] for _ in range(n_frames)]
+    for r in reqs:
+        buckets[min(int(r.arrival_ms // frame_ms), n_frames - 1)].append(r)
+    return buckets
 
 
 # ---------------------------------------------------------------------------

@@ -43,35 +43,44 @@ Per-frame policy/simulator state is an explicit
 backlogs, EMA load estimates, bandwidth-estimator state) threaded through
 ``simulate``'s frame loop and — as the ``lax.scan`` carry — through
 :func:`simulate_fleet`'s single jitted/vmapped device program.
+
+:func:`simulate_fleet` additionally shards the replication axis across a
+1-D ``("rep",)`` device mesh (``devices=``) and can run its frame scan in
+bounded-memory windows (``window=``) — both bit-identical to the
+single-device, fully-materialized program.  See the function docstring.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import os
+import time
 from collections import deque
+from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .gus import Assignment, gus_schedule, gus_schedule_np
+from .gus import Assignment, gus_schedule
 from .instance import FlatInstance, pad_instance, stack_instances
 from .policies import Policy, get_policy
 from .queueing import (
     CongestionConfig,
-    PolicyCarry,
     comm_inflation,
     committed_loads,
     compute_inflation,
     congested_ctime,
     effective_capacity,
     ema_update,
+    fleet_policy_carry,
     init_policy_carry,
     step_backlog,
 )
 from .satisfaction import mean_us, satisfied_mask
-from .scenarios import Request, Scenario, get_scenario
-from .streaming import ArrivalStream, stream_trace
+from .scenarios import Request, Scenario, bucket_arrivals, get_scenario
+from .streaming import ArrivalStream, max_frame_arrivals, stream_trace
 
 __all__ = [
     "ClusterSpec",
@@ -192,18 +201,20 @@ def _pad_bucket(n: int) -> int:
     return max(4, 1 << max(n - 1, 0).bit_length())
 
 
-def _build_frame_instance(
-    reqs: Sequence[Request],
-    spec: ClusterSpec,
-    cfg: SimConfig,
-    now_ms: float,
-    bw_est: float,
-    max_cs: float,
-    gamma=None,
-    eta=None,
-) -> FlatInstance:
-    """FlatInstance for the requests pending in this frame, using the
-    scheduler's *estimated* bandwidth for comm delays."""
+#: default width of a fleet replication group — the unit of device dispatch
+#: in :func:`simulate_fleet`.  One program is compiled per group shape and
+#: reused for every group on every device, which is what keeps multi-device
+#: results bit-identical to the single-device run.  Fleets with
+#: ``n_rep <= FLEET_REP_GROUP`` run as a single group (the legacy layout).
+FLEET_REP_GROUP = 8
+
+
+def _frame_arrays(
+    reqs: Sequence[Request], spec: ClusterSpec, cfg: SimConfig, now_ms: float, bw_est: float
+) -> Dict[str, np.ndarray]:
+    """Numpy request-row tensors for one frame, using the scheduler's
+    *estimated* bandwidth for comm delays — shared by
+    :func:`_build_frame_instance` and the fleet's batched grid builder."""
     M = spec.n_servers
     L = spec.acc.shape[1]
     N = len(reqs)
@@ -225,22 +236,113 @@ def _build_frame_instance(
     avail = spec.placed[:, svc, :].transpose(1, 0, 2)
     acc = np.broadcast_to(spec.acc[svc][:, None, :], (N, M, L)).copy()
     u = np.where(local[:, :, None], 0.0, (size / 1024.0)[:, None, None])
+    return dict(
+        cover=cover, A=A, C=C, acc=acc, ctime=ctime, v=proc,
+        u=np.broadcast_to(u, (N, M, L)), avail=avail,
+    )
 
+
+def _build_frame_instance(
+    reqs: Sequence[Request],
+    spec: ClusterSpec,
+    cfg: SimConfig,
+    now_ms: float,
+    bw_est: float,
+    max_cs: float,
+    gamma=None,
+    eta=None,
+) -> FlatInstance:
+    """FlatInstance for the requests pending in this frame."""
+    N = len(reqs)
+    arr = _frame_arrays(reqs, spec, cfg, now_ms, bw_est)
     return FlatInstance(
-        cover=jnp.asarray(cover),
-        A=jnp.asarray(A),
-        C=jnp.asarray(C),
+        cover=jnp.asarray(arr["cover"]),
+        A=jnp.asarray(arr["A"]),
+        C=jnp.asarray(arr["C"]),
         w_a=jnp.full((N,), cfg.w_a, jnp.float32),
         w_c=jnp.full((N,), cfg.w_c, jnp.float32),
-        acc=jnp.asarray(acc, jnp.float32),
-        ctime=jnp.asarray(ctime, jnp.float32),
-        v=jnp.asarray(proc, jnp.float32),
-        u=jnp.asarray(np.broadcast_to(u, (N, M, L)), jnp.float32),
-        avail=jnp.asarray(avail),
+        acc=jnp.asarray(arr["acc"], jnp.float32),
+        ctime=jnp.asarray(arr["ctime"], jnp.float32),
+        v=jnp.asarray(arr["v"], jnp.float32),
+        u=jnp.asarray(arr["u"], jnp.float32),
+        avail=jnp.asarray(arr["avail"]),
         gamma=jnp.asarray(spec.gamma_frame if gamma is None else gamma, jnp.float32),
         eta=jnp.asarray(spec.eta_frame if eta is None else eta, jnp.float32),
         max_as=jnp.float32(cfg.max_as),
         max_cs=jnp.float32(max_cs),
+    )
+
+
+def _build_frame_batch(
+    frames: List[List[Request]],
+    spec: ClusterSpec,
+    cfg: SimConfig,
+    frame_starts: Sequence[float],
+    budgets,
+    n_pad: int,
+) -> FlatInstance:
+    """Stacked, padded ``FlatInstance`` for a whole grid of frames at once.
+
+    Fills preallocated numpy tensors frame by frame and converts each leaf
+    to a device array *once* — the fleet's hot-path grid builder.  With the
+    per-frame ``jnp`` round-trips gone, building a 10^3-frame window costs
+    milliseconds instead of seconds.  The pad-row fill constants mirror
+    :func:`repro.core.instance.pad_instance`, and values are bit-identical
+    to stacking ``pad_instance(_build_frame_instance(...), n_pad)`` per
+    frame (pinned by the sharded-fleet parity tests through the unchanged
+    sequential path).
+    """
+    F = len(frames)
+    M = spec.n_servers
+    L = spec.acc.shape[1]
+    cover = np.zeros((F, n_pad), np.int32)
+    A = np.full((F, n_pad), 1e9, np.float32)     # unreachable accuracy floor
+    C = np.full((F, n_pad), -1.0, np.float32)    # already-expired deadline
+    w_a = np.zeros((F, n_pad), np.float32)       # padded rows contribute zero US
+    w_c = np.zeros((F, n_pad), np.float32)
+    acc = np.zeros((F, n_pad, M, L), np.float32)
+    ctime = np.full((F, n_pad, M, L), 1e9, np.float32)
+    v = np.zeros((F, n_pad, M, L), np.float32)
+    u = np.zeros((F, n_pad, M, L), np.float32)
+    avail = np.zeros((F, n_pad, M, L), bool)
+    gamma = np.zeros((F, M), np.float32)
+    eta = np.zeros((F, M), np.float32)
+    for i, (reqs, t0) in enumerate(zip(frames, frame_starts)):
+        g, e = budgets[i]
+        gamma[i] = g
+        eta[i] = e
+        n = len(reqs)
+        if n == 0:
+            continue
+        arr = _frame_arrays(reqs, spec, cfg, t0 + cfg.frame_ms, spec.bandwidth_true)
+        cover[i, :n] = arr["cover"]
+        A[i, :n] = arr["A"]
+        C[i, :n] = arr["C"]
+        w_a[i, :n] = cfg.w_a
+        w_c[i, :n] = cfg.w_c
+        acc[i, :n] = arr["acc"]
+        ctime[i, :n] = arr["ctime"]
+        v[i, :n] = arr["v"]
+        u[i, :n] = arr["u"]
+        avail[i, :n] = arr["avail"]
+    # numpy leaves on purpose: the fleet slices replication groups on host
+    # and device_puts each slice straight onto its target device (jnp ops
+    # consume numpy leaves transparently on the metrics path)
+    return FlatInstance(
+        cover=cover,
+        A=A,
+        C=C,
+        w_a=w_a,
+        w_c=w_c,
+        acc=acc,
+        ctime=ctime,
+        v=v,
+        u=u,
+        avail=avail,
+        gamma=gamma,
+        eta=eta,
+        max_as=np.full((F,), cfg.max_as, np.float32),
+        max_cs=np.full((F,), cfg.max_cs, np.float32),
     )
 
 
@@ -655,6 +757,15 @@ class FleetResult:
     final_backlog_per_rep: Optional[np.ndarray] = None
     #: mean compute-inflation factor across (rep, frame, server) cells
     mean_compute_inflation: float = 1.0
+    #: devices the replication axis was sharded across (1 = unsharded)
+    n_devices: int = 1
+    #: frames per scan window (== n_frames when fully materialized)
+    window: Optional[int] = None
+    #: wall-clock seconds spent inside the jitted fleet programs (group
+    #: dispatch + device compute + result materialization) — the phase
+    #: device sharding accelerates; host-side arrival generation and
+    #: metrics are excluded
+    dispatch_s: float = 0.0
 
     @property
     def satisfied_pct(self) -> float:
@@ -672,6 +783,7 @@ class FleetResult:
         d = {
             "n_rep": self.n_rep,
             "n_requests": self.n_requests,
+            "n_devices": self.n_devices,
             "satisfied_pct": self.satisfied_pct,
             "satisfied_std": self.satisfied_std,
             "served_pct": 100.0 * self.n_served / max(self.n_requests, 1),
@@ -681,6 +793,142 @@ class FleetResult:
             d["mean_compute_inflation"] = self.mean_compute_inflation
             d["final_backlog_gamma"] = float(self.final_backlog_per_rep.sum(-1).mean())
         return d
+
+
+def _resolve_fleet_devices(devices: Optional[int], n_rep: int) -> int:
+    """Resolve ``simulate_fleet``'s ``devices=`` argument to a shard count.
+
+    ``None`` uses every local device (capped at ``n_rep``: a mesh longer
+    than the replication axis only schedules padding).  Asking for more
+    devices than ``jax.local_device_count()`` is an error, never a silent
+    single-device fallback.
+    """
+    avail = jax.local_device_count()
+    if devices is None:
+        return max(1, min(avail, n_rep))
+    devices = int(devices)
+    if devices < 1:
+        raise ValueError(f"devices must be >= 1, got {devices}")
+    if devices > avail:
+        raise ValueError(
+            f"simulate_fleet requested devices={devices} but only {avail} "
+            "local device(s) are visible; launch with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N for virtual "
+            "CPU devices, or lower devices="
+        )
+    return devices
+
+
+class _RepFrameSource:
+    """One replication's per-frame request buckets, materialized or lazy.
+
+    *Materialized* reproduces the legacy fleet generation bit-for-bit: one
+    ``default_rng(seed + rep)`` drives ``generate_arrivals`` (or the trace
+    comes from :func:`stream_trace`) and then the per-frame mobility draws.
+    *Lazy* holds an :class:`ArrivalStream` and draws each frame's bucket on
+    demand, so a windowed fleet never materializes more than one window of
+    requests — the stream's chunking invariance makes the buckets (and the
+    mobility draw order) identical either way.
+    """
+
+    def __init__(self, scn, rep_seed, n_edge, n_services, cfg, T, use_stream, lazy):
+        self.cfg = cfg
+        self.n_edge = n_edge
+        self.move_prob = cfg.move_prob if scn.move_prob is None else scn.move_prob
+        self.rng = np.random.default_rng(rep_seed)
+        self.stream: Optional[ArrivalStream] = None
+        self.buckets: Optional[List[List[Request]]] = None
+        if lazy:
+            self.stream = ArrivalStream(scn, rep_seed, n_edge, n_services, cfg)
+        else:
+            if use_stream:
+                reqs = stream_trace(scn, rep_seed, n_edge, n_services, cfg)
+            else:
+                reqs = scn.generate_arrivals(self.rng, n_edge, n_services, cfg)
+            self.buckets = bucket_arrivals(reqs, cfg.frame_ms, T)
+        self._next = 0
+
+    @property
+    def max_bucket(self) -> int:
+        """Largest per-frame bucket (materialized sources only)."""
+        return max((len(b) for b in self.buckets), default=0)
+
+    def take(self, upto_frame: int) -> List[List[Request]]:
+        """Buckets for frames ``[next, upto_frame)``, mobility applied in
+        frame order (the rep's single rng keeps the legacy draw sequence)."""
+        out = []
+        for tf in range(self._next, upto_frame):
+            if self.buckets is not None:
+                b = self.buckets[tf]
+            else:
+                b = self.stream.take_until((tf + 1) * self.cfg.frame_ms)
+            _apply_mobility_inplace(b, self.n_edge, self.move_prob, self.rng)
+            out.append(b)
+        self._next = upto_frame
+        return out
+
+
+@functools.lru_cache(maxsize=None)
+def _bound_policy(pol: Policy, n_edge: int, n_servers: int):
+    """``pol.bind`` with a stable identity across ``simulate_fleet`` calls —
+    the bound function keys the compiled-runner cache below, so repeated
+    fleet calls (benchmark sweeps!) reuse the compiled program instead of
+    re-tracing and re-compiling every time."""
+    return pol.bind(n_edge, n_servers)
+
+
+@functools.lru_cache(maxsize=128)
+def _fleet_runner(fn, stateful: bool, needs_key: bool, ccfg: CongestionConfig):
+    """The fleet's jitted vmap-over-reps-of-scan-over-frames runner, cached
+    by (schedule fn, policy mode, congestion config).  jax's own jit cache
+    then holds one executable per (group shape, device)."""
+
+    def step(carry, x):
+        inst, key = x
+        if ccfg.enabled:
+            run_inst = dataclasses.replace(
+                inst,
+                gamma=effective_capacity(inst.gamma, carry.backlog_gamma),
+                eta=effective_capacity(inst.eta, carry.backlog_eta),
+            )
+        else:
+            run_inst = inst
+        if stateful:
+            a, carry = fn(run_inst, carry)
+        elif needs_key:
+            a = fn(run_inst, key)
+        else:
+            a = fn(run_inst)
+        if ccfg.enabled:
+            w, c = committed_loads(inst, a.j, a.l)
+            pc = compute_inflation(carry.backlog_gamma + w, inst.gamma, ccfg)
+            pe = comm_inflation(carry.backlog_eta + c, inst.eta, ccfg)
+            carry = dataclasses.replace(
+                carry,
+                backlog_gamma=step_backlog(carry.backlog_gamma, w, inst.gamma, ccfg),
+                backlog_eta=step_backlog(carry.backlog_eta, c, inst.eta, ccfg),
+                ema_util=ema_update(carry.ema_util, w, inst.gamma, ccfg),
+            )
+        else:
+            pc = jnp.ones_like(inst.gamma)
+            pe = jnp.ones_like(inst.eta)
+        return carry, (a.j, a.l, pc, pe)
+
+    def per_rep(c0, inst_seq, key_seq):
+        return jax.lax.scan(step, c0, (inst_seq, key_seq))
+
+    return jax.jit(jax.vmap(per_rep))
+
+
+def _pad_reps(tree, pad_r: int):
+    """Pad the leading replication axis with copies of replication 0 so it
+    divides the group width; the padded rows are dropped after the run.
+    Works on numpy and jax leaves alike (numpy stays numpy)."""
+    def pad(x):
+        xp = np if isinstance(x, np.ndarray) else jnp
+        return xp.concatenate([x, xp.repeat(x[:1], pad_r, axis=0)])
+
+    return jax.tree.map(pad, tree)
 
 
 def simulate_fleet(
@@ -693,6 +941,9 @@ def simulate_fleet(
     n_rep: int = 16,
     seed: int = 0,
     streaming: Optional[bool] = None,
+    devices: Optional[int] = None,
+    window: Optional[int] = None,
+    rep_group: Optional[int] = None,
 ) -> FleetResult:
     """Monte-Carlo fleet: R independent replications, one device program.
 
@@ -706,6 +957,36 @@ def simulate_fleet(
     congestion model disabled the carry is inert and results are
     bit-identical to scheduling all R*T frames in one flat vmap.
 
+    ``devices`` shards the replication axis across the 1-D ``("rep",)``
+    device mesh of :func:`repro.launch.mesh.make_fleet_mesh`: replications
+    are cut into fixed-width groups of ``rep_group`` (default
+    :data:`FLEET_REP_GROUP`; ``n_rep`` is padded up with throwaway
+    replications and sliced back), and each group's slice of the instance
+    grid, the PRNG-key chain, and the carry pytree is placed on the next
+    mesh device round-robin.  Every group runs the *same* compiled
+    vmap-over-group-of-``lax.scan`` program — only its device changes — and
+    jax's async dispatch overlaps the groups across devices.  Replications
+    never communicate, so sharded results are **bit-identical** to the
+    single-device run.  (An SPMD ``shard_map`` layout was measured and
+    rejected here: the partitioner compiles a different fusion of the
+    scheduler per device count, and greedy argmax/argsort decisions amplify
+    1-ulp differences into different assignments — see
+    ``docs/architecture.md`` section 6.)  ``devices=None`` uses every local
+    device, which with one visible device is exactly the single-device
+    path; asking for more than ``jax.local_device_count()`` raises.
+    ``rep_group`` must be held fixed when comparing runs across device
+    counts; fleets with ``n_rep <= rep_group`` run as one group (the
+    legacy single-program layout).
+
+    ``window`` bounds memory on long horizons: the (R, T) grid is built and
+    scanned ``window`` frames at a time, threading the carry between
+    chunks, instead of materializing all T frames' instance tensors at
+    once.  On a ``streaming`` scenario the arrivals themselves are drawn
+    one window at a time from each replication's
+    :class:`~repro.core.streaming.ArrivalStream` (a count-only pre-pass
+    fixes the padding bucket), so memory stays bounded at 10^5-frame
+    horizons.  Windowed results are bit-identical to the materialized run.
+
     ``policy`` names a registered :class:`~repro.core.policies.Policy`; a
     ``needs_key`` policy (``random``) receives one PRNG key per
     (replication, frame) pair split from ``seed`` (fed through the scan as
@@ -713,7 +994,8 @@ def simulate_fleet(
     its own state in the scan carry, and a non-vmappable policy (the
     ``ilp`` / ``lp-bound`` oracles) falls back to a host-side loop over the
     *unpadded* frames — threading the same carry — feeding the same masked
-    metrics path.
+    metrics path (``devices`` other than ``None``/1 raises there;
+    ``window`` does not apply).
 
     Frame semantics are *frame-synchronous*: one decision per frame at the
     frame boundary (no queue-cap early closes), per-frame budgets refresh
@@ -731,24 +1013,242 @@ def simulate_fleet(
     K = spec.proc_ms.shape[1]
     M = spec.n_servers
     use_stream = scn.streaming if streaming is None else streaming
+    host_side = pol is not None and (not pol.vmappable or not pol.pad)
+    if host_side:
+        if devices is not None and devices != 1:
+            _resolve_fleet_devices(devices, n_rep)  # impossible counts error first
+            raise ValueError(
+                f"policy {pol.name!r} schedules host-side; devices={devices} "
+                "does not apply (use devices=None or 1)"
+            )
+        n_dev = 1
+    else:
+        n_dev = _resolve_fleet_devices(devices, n_rep)
+    W = T if window is None else max(1, min(int(window), T))
+    # lazy per-window arrival generation needs the stream's chunking
+    # invariance; a materialized trace is bucketed up front either way
+    lazy = use_stream and W < T and not host_side
 
-    # host-side generation: per-(rep, frame) request buckets
-    fleet_frames: List[List[Request]] = []
-    for rep in range(n_rep):
-        rng = np.random.default_rng(seed + rep)
-        if use_stream:
-            reqs = stream_trace(scn, seed + rep, spec.n_edge, K, cfg)
+    sources = [
+        _RepFrameSource(scn, seed + rep, spec.n_edge, K, cfg, T, use_stream, lazy)
+        for rep in range(n_rep)
+    ]
+    if lazy:
+        # count-only pre-pass: the global max bucket, in bounded memory —
+        # one padding bucket for every window, identical to materialized
+        n_max = max(
+            max_frame_arrivals(scn, seed + rep, spec.n_edge, K, cfg, T)
+            for rep in range(n_rep)
+        )
+    else:
+        n_max = max(src.max_bucket for src in sources)
+    n_pad = _pad_bucket(n_max)
+
+    if host_side:
+        return _simulate_fleet_host(
+            spec, cfg, scn, pol, sources, n_rep=n_rep, T=T, n_pad=n_pad, seed=seed
+        )
+
+    if pol is not None:
+        fn = _bound_policy(pol, spec.n_edge, spec.n_servers)
+        needs_key = pol.needs_key and not pol.stateful
+        stateful = pol.stateful
+    else:
+        fn = gus_schedule if scheduler is None else scheduler
+        needs_key = False
+        stateful = False
+    run = _fleet_runner(fn, stateful, needs_key, ccfg)
+
+    if needs_key:
+        keys_all = np.asarray(jax.random.split(
+            jax.random.PRNGKey(seed), n_rep * T
+        )).reshape(n_rep, T, -1)
+    else:  # dummy inputs keep the scan signature uniform
+        keys_all = np.zeros((n_rep, T, 2), np.uint32)
+    carry = fleet_policy_carry(n_rep, M, seed=seed, bandwidth_init=spec.bandwidth_true)
+
+    # --- fixed-width replication groups, round-robined across the mesh ------
+    # Every group of G replications runs the SAME jitted program (same
+    # shapes, same HLO) no matter how many devices are in play — only the
+    # device each group is placed on changes.  That is what makes sharded
+    # results bit-identical to the single-device run: an SPMD partitioner
+    # (shard_map) or a device-count-dependent batch width recompiles the
+    # scheduler with different fusion, and greedy argmax/argsort decisions
+    # amplify 1-ulp differences into different assignments.  jax dispatch
+    # is async, so the per-group calls overlap across devices.
+    G = min(FLEET_REP_GROUP if rep_group is None else max(1, int(rep_group)), n_rep)
+    pad_r = (-n_rep) % G
+    n_groups = (n_rep + pad_r) // G
+    if n_dev > 1:
+        from repro.launch.mesh import make_fleet_mesh
+
+        group_devices = list(make_fleet_mesh(n_dev).devices.ravel())
+    else:
+        group_devices = [None]  # default device, no explicit placement
+
+    def to_device(tree, dev):
+        if dev is None:
+            return tree
+        return jax.tree.map(lambda x: jax.device_put(x, dev), tree)
+
+    # worker threads drive the devices concurrently (XLA releases the GIL
+    # during execution); more workers than physical cores only adds
+    # contention on a CPU host, so cap there — device placement still
+    # round-robins over the full mesh
+    n_workers = min(n_dev, os.cpu_count() or 1)
+    executor = ThreadPoolExecutor(max_workers=n_workers) if n_workers > 1 else None
+    if pad_r:
+        carry = _pad_reps(carry, pad_r)
+        keys_all = _pad_reps(keys_all, pad_r)
+    carries = [
+        to_device(
+            jax.tree.map(lambda x: x[g * G:(g + 1) * G], carry),
+            group_devices[g % n_dev],
+        )
+        for g in range(n_groups)
+    ]
+
+    # per-(rep, frame) stores; the final reductions below see the same
+    # values in the same order no matter how the frames were windowed
+    dispatch_s = 0.0
+    sat_frames = np.zeros((n_rep, T), np.int64)
+    served_frames = np.zeros((n_rep, T), np.int64)
+    us_frames = np.zeros((n_rep, T), np.float32)
+    n_real_frames = np.zeros((n_rep, T), np.int32)
+    phi_frames = np.ones((n_rep, T, M), np.float32) if ccfg.enabled else None
+
+    for t0 in range(0, T, W):
+        t1 = min(t0 + W, T)
+        Tc = t1 - t0
+        frames: List[List[Request]] = []
+        frame_starts: List[float] = []
+        n_real = np.zeros((n_rep, Tc), np.int32)
+        tq_flat = np.zeros((n_rep * Tc, n_pad), np.float32)
+        i = 0
+        for rep, src in enumerate(sources):
+            for k, bucket in enumerate(src.take(t1)):
+                frame_start = (t0 + k) * cfg.frame_ms
+                frames.append(bucket)
+                frame_starts.append(frame_start)
+                n_real[rep, k] = len(bucket)
+                if bucket:
+                    tq_flat[i, : len(bucket)] = [
+                        frame_start + cfg.frame_ms - r.arrival_ms for r in bucket
+                    ]
+                i += 1
+        # per-frame budgets are replication-independent: one _frame_budgets
+        # call per frame index, reused across the R replications
+        budgets_by_k = [
+            _frame_budgets(spec, cfg, scn, (t0 + k) * cfg.frame_ms) for k in range(Tc)
+        ]
+        batch = _build_frame_batch(
+            frames, spec, cfg, frame_starts, budgets_by_k * n_rep, n_pad
+        )  # leading axis: n_rep * Tc frames
+        batch_rt = jax.tree.map(
+            lambda x: x.reshape((n_rep, Tc) + x.shape[1:]), batch
+        )
+        keys_rt = keys_all[:, t0:t1]
+        if pad_r:
+            batch_rt = _pad_reps(batch_rt, pad_r)
+
+        def run_group(g):
+            sl = slice(g * G, (g + 1) * G)
+            dev = group_devices[g % n_dev]
+            c, out = run(
+                carries[g],
+                to_device(jax.tree.map(lambda x: x[sl], batch_rt), dev),
+                to_device(keys_rt[sl], dev),
+            )
+            # materialize here (XLA releases the GIL while computing, so
+            # worker threads overlap groups across devices); the carry stays
+            # device-resident for the next window
+            return c, tuple(np.asarray(o) for o in out)
+
+        t_disp = time.perf_counter()
+        if executor is None:
+            results = [run_group(g) for g in range(n_groups)]
         else:
-            reqs = scn.generate_arrivals(rng, spec.n_edge, K, cfg)
-        buckets: List[List[Request]] = [[] for _ in range(T)]
-        for r in reqs:
-            buckets[min(int(r.arrival_ms // cfg.frame_ms), T - 1)].append(r)
-        move_prob = cfg.move_prob if scn.move_prob is None else scn.move_prob
-        for b in buckets:
-            _apply_mobility_inplace(b, spec.n_edge, move_prob, rng)
-        fleet_frames.extend(buckets)
+            results = list(executor.map(run_group, range(n_groups)))
+        dispatch_s += time.perf_counter() - t_disp
+        for g, (c, _) in enumerate(results):
+            carries[g] = c
+        jv, lv, pc, pe = (
+            np.concatenate([r[1][part] for r in results])[:n_rep]
+            for part in range(4)
+        )
+        assign = Assignment(
+            jnp.asarray(jv.reshape(n_rep * Tc, n_pad)),
+            jnp.asarray(lv.reshape(n_rep * Tc, n_pad)),
+        )
+        if ccfg.enabled:
+            phi_c = jnp.asarray(pc.reshape(n_rep * Tc, M))
+            phi_e = jnp.asarray(pe.reshape(n_rep * Tc, M))
+            mbatch = dataclasses.replace(
+                batch,
+                ctime=congested_ctime(batch, jnp.asarray(tq_flat), phi_c, phi_e),
+            )
+            phi_frames[:, t0:t1] = pc
+        else:
+            mbatch = batch
 
-    n_pad = _pad_bucket(max(len(b) for b in fleet_frames))
+        sat = np.asarray(satisfied_mask(mbatch, assign.j, assign.l))
+        us = np.asarray(mean_us(mbatch, assign.j, assign.l))
+        real = np.arange(n_pad)[None, :] < n_real.reshape(-1)[:, None]
+        served = (np.asarray(assign.j) >= 0) & real
+        sat = sat & real
+        sat_frames[:, t0:t1] = sat.sum(-1).reshape(n_rep, Tc)
+        served_frames[:, t0:t1] = served.sum(-1).reshape(n_rep, Tc)
+        us_frames[:, t0:t1] = us.reshape(n_rep, Tc)
+        n_real_frames[:, t0:t1] = n_real
+
+    if executor is not None:
+        executor.shutdown(wait=False)
+    final_backlog = np.concatenate(
+        [np.asarray(c.backlog_gamma) for c in carries]
+    )[:n_rep]
+    reqs_per_rep = n_real_frames.sum(1)
+    sat_per_rep = sat_frames.sum(1)
+    # mean_us averages over n_pad rows (padded rows contribute 0); recover the
+    # per-rep sum (exact: n_pad is a power of two) and renormalize by the
+    # rep's true request count
+    us_sum_per_rep = (us_frames * n_pad).sum(1)
+    return FleetResult(
+        n_rep=n_rep,
+        n_frames=T,
+        n_requests=int(reqs_per_rep.sum()),
+        n_served=int(served_frames.sum()),
+        satisfied_per_rep=100.0 * sat_per_rep / np.maximum(reqs_per_rep, 1),
+        mean_us_per_rep=us_sum_per_rep / np.maximum(reqs_per_rep, 1),
+        final_backlog_per_rep=final_backlog if ccfg.enabled else None,
+        mean_compute_inflation=float(np.mean(phi_frames)) if ccfg.enabled else 1.0,
+        n_devices=n_dev,
+        window=W,
+        dispatch_s=dispatch_s,
+    )
+
+
+def _simulate_fleet_host(
+    spec: ClusterSpec,
+    cfg: SimConfig,
+    scn: Scenario,
+    pol: Policy,
+    sources: List[_RepFrameSource],
+    *,
+    n_rep: int,
+    T: int,
+    n_pad: int,
+    seed: int,
+) -> FleetResult:
+    """Host-side fleet path for non-vmappable / non-padding policies (the
+    ILP / LP-bound oracles): schedule each *unpadded* frame in a Python
+    loop — threading the per-replication carry frame by frame — then re-pad
+    the assignments with drops so the masked metrics tail is shared with
+    the vmapped policies."""
+    ccfg = cfg.congestion
+    M = spec.n_servers
+    fleet_frames: List[List[Request]] = []
+    for src in sources:
+        fleet_frames.extend(src.take(T))
     raw_insts = []
     n_real = np.array([len(b) for b in fleet_frames], np.int32)
     tq_flat = np.zeros((len(fleet_frames), n_pad), np.float32)
@@ -763,99 +1263,25 @@ def simulate_fleet(
             tq_flat[i, : len(bucket)] = [
                 frame_start + cfg.frame_ms - r.arrival_ms for r in bucket
             ]
-    insts = [pad_instance(r, n_pad) for r in raw_insts]
-    batch = stack_instances(insts)  # leading axis: R * T frames
+    batch = stack_instances([pad_instance(r, n_pad) for r in raw_insts])
 
-    if pol is not None and (not pol.vmappable or not pol.pad):
-        # host-side policy (the ILP / LP-bound oracles), or one that opted
-        # out of the padding contract (the vmapped batch path requires
-        # padded shapes): schedule each unpadded frame in a Python loop —
-        # threading the per-replication carry frame by frame — then re-pad
-        # the assignments with drops so the masked metrics path below is
-        # shared with the vmapped policies.
-        fn = pol.bind(spec.n_edge, spec.n_servers)
-        keys = (
-            jax.random.split(jax.random.PRNGKey(seed), len(raw_insts))
-            if pol.needs_key and not pol.stateful else None
+    fn = pol.bind(spec.n_edge, spec.n_servers)
+    keys = (
+        jax.random.split(jax.random.PRNGKey(seed), len(raw_insts))
+        if pol.needs_key and not pol.stateful else None
+    )
+    jv = np.full((len(raw_insts), n_pad), -1, np.int32)
+    lv = np.full((len(raw_insts), n_pad), -1, np.int32)
+    phi_c = np.ones((len(raw_insts), M), np.float32)
+    phi_e = np.ones((len(raw_insts), M), np.float32)
+    final_backlog = np.zeros((n_rep, M), np.float32)
+    for rep in range(n_rep):
+        carry = init_policy_carry(
+            M, seed=seed + rep, bandwidth_init=spec.bandwidth_true
         )
-        jv = np.full((len(raw_insts), n_pad), -1, np.int32)
-        lv = np.full((len(raw_insts), n_pad), -1, np.int32)
-        phi_c = np.ones((len(raw_insts), M), np.float32)
-        phi_e = np.ones((len(raw_insts), M), np.float32)
-        final_backlog = np.zeros((n_rep, M), np.float32)
-        for rep in range(n_rep):
-            carry = init_policy_carry(
-                M, seed=seed + rep, bandwidth_init=spec.bandwidth_true
-            )
-            for tf in range(T):
-                i = rep * T + tf
-                inst, n = raw_insts[i], n_real[i]
-                if ccfg.enabled:
-                    run_inst = dataclasses.replace(
-                        inst,
-                        gamma=effective_capacity(inst.gamma, carry.backlog_gamma),
-                        eta=effective_capacity(inst.eta, carry.backlog_eta),
-                    )
-                else:
-                    run_inst = inst
-                if pol.stateful:
-                    a, carry = fn(run_inst, carry)
-                elif keys is not None:
-                    a = fn(run_inst, keys[i])
-                else:
-                    a = fn(run_inst)
-                jv[i, :n] = np.asarray(a.j)
-                lv[i, :n] = np.asarray(a.l)
-                if ccfg.enabled:
-                    w, c = committed_loads(inst, jnp.asarray(a.j), jnp.asarray(a.l))
-                    phi_c[i] = np.asarray(
-                        compute_inflation(carry.backlog_gamma + w, inst.gamma, ccfg)
-                    )
-                    phi_e[i] = np.asarray(
-                        comm_inflation(carry.backlog_eta + c, inst.eta, ccfg)
-                    )
-                    carry = dataclasses.replace(
-                        carry,
-                        backlog_gamma=step_backlog(carry.backlog_gamma, w, inst.gamma, ccfg),
-                        backlog_eta=step_backlog(carry.backlog_eta, c, inst.eta, ccfg),
-                        ema_util=ema_update(carry.ema_util, w, inst.gamma, ccfg),
-                    )
-            final_backlog[rep] = np.asarray(carry.backlog_gamma)
-        assign = Assignment(jv, lv)
-        phi_c_all, phi_e_all = phi_c, phi_e
-    else:
-        if pol is not None:
-            fn = pol.bind(spec.n_edge, spec.n_servers)
-            needs_key = pol.needs_key and not pol.stateful
-            stateful = pol.stateful
-        else:
-            fn = gus_schedule if scheduler is None else scheduler
-            needs_key = False
-            stateful = False
-
-        # (R, T, ...) layout: vmap over replications, scan over frames
-        batch_rt = jax.tree.map(
-            lambda x: x.reshape((n_rep, T) + x.shape[1:]), batch
-        )
-        if needs_key:
-            keys_rt = jax.random.split(
-                jax.random.PRNGKey(seed), len(insts)
-            ).reshape(n_rep, T, -1)
-        else:  # dummy inputs keep the scan signature uniform
-            keys_rt = jnp.zeros((n_rep, T, 2), jnp.uint32)
-        carry0 = PolicyCarry(
-            key=jax.vmap(lambda r: jax.random.fold_in(jax.random.PRNGKey(seed), r))(
-                jnp.arange(n_rep)
-            ),
-            backlog_gamma=jnp.zeros((n_rep, M), jnp.float32),
-            backlog_eta=jnp.zeros((n_rep, M), jnp.float32),
-            ema_util=jnp.zeros((n_rep, M), jnp.float32),
-            bw_prev=jnp.full((n_rep,), spec.bandwidth_true, jnp.float32),
-            bw_cur=jnp.full((n_rep,), spec.bandwidth_true, jnp.float32),
-        )
-
-        def step(carry, x):
-            inst, key = x
+        for tf in range(T):
+            i = rep * T + tf
+            inst, n = raw_insts[i], n_real[i]
             if ccfg.enabled:
                 run_inst = dataclasses.replace(
                     inst,
@@ -864,45 +1290,36 @@ def simulate_fleet(
                 )
             else:
                 run_inst = inst
-            if stateful:
+            if pol.stateful:
                 a, carry = fn(run_inst, carry)
-            elif needs_key:
-                a = fn(run_inst, key)
+            elif keys is not None:
+                a = fn(run_inst, keys[i])
             else:
                 a = fn(run_inst)
+            jv[i, :n] = np.asarray(a.j)
+            lv[i, :n] = np.asarray(a.l)
             if ccfg.enabled:
-                w, c = committed_loads(inst, a.j, a.l)
-                pc = compute_inflation(carry.backlog_gamma + w, inst.gamma, ccfg)
-                pe = comm_inflation(carry.backlog_eta + c, inst.eta, ccfg)
+                w, c = committed_loads(inst, jnp.asarray(a.j), jnp.asarray(a.l))
+                phi_c[i] = np.asarray(
+                    compute_inflation(carry.backlog_gamma + w, inst.gamma, ccfg)
+                )
+                phi_e[i] = np.asarray(
+                    comm_inflation(carry.backlog_eta + c, inst.eta, ccfg)
+                )
                 carry = dataclasses.replace(
                     carry,
                     backlog_gamma=step_backlog(carry.backlog_gamma, w, inst.gamma, ccfg),
                     backlog_eta=step_backlog(carry.backlog_eta, c, inst.eta, ccfg),
                     ema_util=ema_update(carry.ema_util, w, inst.gamma, ccfg),
                 )
-            else:
-                pc = jnp.ones_like(inst.gamma)
-                pe = jnp.ones_like(inst.eta)
-            return carry, (a.j, a.l, pc, pe)
-
-        def per_rep(c0, inst_seq, key_seq):
-            return jax.lax.scan(step, c0, (inst_seq, key_seq))
-
-        final_carry, (jv, lv, pc, pe) = jax.jit(jax.vmap(per_rep))(
-            carry0, batch_rt, keys_rt
-        )
-        assign = Assignment(
-            jnp.reshape(jv, (n_rep * T, n_pad)), jnp.reshape(lv, (n_rep * T, n_pad))
-        )
-        phi_c_all = jnp.reshape(pc, (n_rep * T, M))
-        phi_e_all = jnp.reshape(pe, (n_rep * T, M))
-        final_backlog = np.asarray(final_carry.backlog_gamma)
+        final_backlog[rep] = np.asarray(carry.backlog_gamma)
+    assign = Assignment(jv, lv)
 
     if ccfg.enabled:
         mbatch = dataclasses.replace(
             batch,
             ctime=congested_ctime(
-                batch, jnp.asarray(tq_flat), jnp.asarray(phi_c_all), jnp.asarray(phi_e_all)
+                batch, jnp.asarray(tq_flat), jnp.asarray(phi_c), jnp.asarray(phi_e)
             ),
         )
     else:
@@ -916,8 +1333,6 @@ def simulate_fleet(
 
     reqs_per_rep = n_real.reshape(n_rep, T).sum(1)
     sat_per_rep = sat.reshape(n_rep, T, n_pad).sum((1, 2))
-    # mean_us averages over n_pad rows (padded rows contribute 0); recover the
-    # per-rep sum and renormalize by the rep's true request count
     us_sum_per_rep = (us * n_pad).reshape(n_rep, T).sum(1)
     return FleetResult(
         n_rep=n_rep,
@@ -927,8 +1342,9 @@ def simulate_fleet(
         satisfied_per_rep=100.0 * sat_per_rep / np.maximum(reqs_per_rep, 1),
         mean_us_per_rep=us_sum_per_rep / np.maximum(reqs_per_rep, 1),
         final_backlog_per_rep=final_backlog if ccfg.enabled else None,
-        mean_compute_inflation=float(np.mean(np.asarray(phi_c_all)))
-        if ccfg.enabled else 1.0,
+        mean_compute_inflation=float(np.mean(phi_c)) if ccfg.enabled else 1.0,
+        n_devices=1,
+        window=T,
     )
 
 

@@ -45,7 +45,7 @@ import numpy as np
 
 from .scenarios import Request, Scenario, get_scenario
 
-__all__ = ["ArrivalStream", "stream_trace"]
+__all__ = ["ArrivalStream", "stream_trace", "max_frame_arrivals"]
 
 
 class ArrivalStream:
@@ -148,3 +148,28 @@ def stream_trace(
     the fleet runner on ``streaming=True`` scenarios)."""
     stream = ArrivalStream(scenario, seed, n_edge, n_services, cfg)
     return stream.take_until(math.inf)
+
+
+def max_frame_arrivals(
+    scenario: Union[str, Scenario],
+    seed: int,
+    n_edge: int,
+    n_services: int,
+    cfg,
+    n_frames: int,
+) -> int:
+    """Largest per-frame arrival count of one replication, in bounded memory.
+
+    Counting pre-pass over a *fresh* :class:`ArrivalStream` (determinism
+    makes it draw the exact trace the caller will stream afterwards): each
+    frame's requests are drawn, counted, and discarded.  The windowed fleet
+    uses this to fix its padding bucket up front — every window then shares
+    one compiled shape AND the bucket matches the materialized path's
+    global maximum, which is what makes windowed-vs-materialized results
+    bit-identical.
+    """
+    stream = ArrivalStream(scenario, seed, n_edge, n_services, cfg)
+    mx = 0
+    for tf in range(n_frames):
+        mx = max(mx, len(stream.take_until((tf + 1) * cfg.frame_ms)))
+    return mx

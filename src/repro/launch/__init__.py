@@ -2,10 +2,11 @@
 
 NOTE: do not import .dryrun from here — it sets XLA_FLAGS at import time and
 must be the first jax-touching import of its process."""
-from .mesh import make_production_mesh, make_test_mesh, mesh_name
+from .mesh import make_fleet_mesh, make_production_mesh, make_test_mesh, mesh_name
 from .specs import SHAPES, ShapeSpec, input_specs, shape_config, model_flops
 
 __all__ = [
+    "make_fleet_mesh",
     "make_production_mesh",
     "make_test_mesh",
     "mesh_name",

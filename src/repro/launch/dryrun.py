@@ -17,18 +17,16 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out reports/dryrun]
 """
 import argparse
-import json
 import sys
 import time
 import traceback
 
-import jax
 
 from ..configs import ARCH_IDS, get_config
 from ..models.model import Model
 from ..roofline import roofline_terms
 from .mesh import make_production_mesh, mesh_name
-from .specs import SHAPES, input_specs, model_flops, shape_config
+from .specs import SHAPES, model_flops, shape_config
 from .steps import build_prefill_step, build_serve_step, build_train_step
 
 

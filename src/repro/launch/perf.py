@@ -14,7 +14,6 @@ Usage:
 """
 import argparse
 import dataclasses
-import json
 import sys
 import time
 

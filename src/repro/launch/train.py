@@ -10,15 +10,10 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from ..configs import ARCH_IDS, get_config, reduce_for_smoke
 from ..models.model import Model
 from ..training import AdamWConfig, batch_iterator, init_state, make_train_step, save_checkpoint
-from ..training.train_loop import TrainState
-from .mesh import make_test_mesh
-from .steps import TRAIN_RULES
-from ..sharding import use_sharding
 
 
 def train(

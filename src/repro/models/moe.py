@@ -15,7 +15,7 @@ router aux (load-balance) loss discourages overflow.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,7 @@ Block layout (mamba2-130m / zamba2 style):
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -8,14 +8,12 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs.base import ModelConfig
 from ..models.model import DecodeCache, Model
 
 __all__ = ["ServingEngine", "make_serve_step", "make_prefill_step", "GenerationResult"]

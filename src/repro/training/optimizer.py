@@ -5,7 +5,7 @@ sharding (m/v get the same PartitionSpec as their weight)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,13 +1,11 @@
 """Training loop: loss, train_step/eval_step builders (jit/pjit-ready)."""
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import ModelConfig
 from ..models.model import Model
 from .optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update
 

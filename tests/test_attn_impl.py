@@ -4,7 +4,6 @@ import dataclasses
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 import pytest
 pytest.importorskip("hypothesis")  # optional dev dep: see requirements-dev.txt
 from hypothesis import given, settings, strategies as st

@@ -7,9 +7,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     GeneratorConfig,
-    SimConfig,
     apply_mobility,
-    best_us_per_request,
     generate_instance,
     gus_schedule,
     gus_schedule_ordered,

@@ -1,0 +1,208 @@
+"""Sharded multi-device fleet: bitwise parity and the devices/window API.
+
+The contract under test (see ``docs/architecture.md`` section 6):
+
+* ``simulate_fleet(devices=d)`` is **bit-identical** to the single-device
+  run for every vmappable policy, congestion on or off — replications are
+  dispatched as fixed-width groups, and every group runs the same compiled
+  program no matter how many devices are in play;
+* ``simulate_fleet(window=W)`` (bounded-memory windowed scan) is
+  bit-identical to the fully materialized run, on materialized and
+  streaming scenarios alike, with and without sharding;
+* asking for more devices than ``jax.local_device_count()`` raises a clear
+  error — never a silent fallback.
+
+The multi-device cases need >= 2 devices; CI runs them with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (see the
+``multi-device`` job).  On a single-device host they skip.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core import (  # noqa: E402
+    CongestionConfig,
+    SimConfig,
+    demo_cluster_spec,
+    get_policy,
+    list_policies,
+    simulate,
+    simulate_fleet,
+)
+
+N_DEV = jax.local_device_count()
+multi_device = pytest.mark.skipif(
+    N_DEV < 2,
+    reason="needs >= 2 devices; run with "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+VMAPPABLE = [p for p in list_policies() if get_policy(p).vmappable]
+
+SPEC = demo_cluster_spec()
+
+
+def fleet_cfg(congestion: bool = False, **kw) -> SimConfig:
+    base = dict(
+        horizon_ms=18_000.0,
+        arrival_rate_per_s=4.0,
+        delay_req_ms=6000.0,
+        acc_req_mean=50.0,
+        acc_req_std=10.0,
+        congestion=CongestionConfig(enabled=congestion),
+    )
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def assert_fleet_identical(a, b, msg=""):
+    """Every numeric field of two FleetResults must match bit for bit."""
+    assert a.n_requests == b.n_requests, msg
+    assert a.n_served == b.n_served, msg
+    np.testing.assert_array_equal(a.satisfied_per_rep, b.satisfied_per_rep, err_msg=msg)
+    np.testing.assert_array_equal(a.mean_us_per_rep, b.mean_us_per_rep, err_msg=msg)
+    if a.final_backlog_per_rep is None:
+        assert b.final_backlog_per_rep is None, msg
+    else:
+        np.testing.assert_array_equal(
+            a.final_backlog_per_rep, b.final_backlog_per_rep, err_msg=msg
+        )
+        assert a.mean_compute_inflation == b.mean_compute_inflation, msg
+
+
+# ---------------------------------------------------------------------------
+# Sharded vs single-device bitwise parity
+# ---------------------------------------------------------------------------
+
+
+@multi_device
+@pytest.mark.parametrize("policy", VMAPPABLE)
+@pytest.mark.parametrize("congestion", [False, True], ids=["plain", "congestion"])
+def test_sharded_bitwise_parity_every_policy(policy, congestion):
+    cfg = fleet_cfg(congestion)
+    single = simulate_fleet(SPEC, cfg, policy=policy, n_rep=12, seed=0, devices=1)
+    sharded = simulate_fleet(SPEC, cfg, policy=policy, n_rep=12, seed=0, devices=N_DEV)
+    assert single.n_devices == 1 and sharded.n_devices == N_DEV
+    assert_fleet_identical(single, sharded, f"{policy} congestion={congestion}")
+
+
+@multi_device
+def test_sharded_parity_on_uneven_and_padded_replication_counts():
+    """n_rep that divides neither the group width nor the mesh still matches
+    (throwaway padding replications are sliced back out)."""
+    cfg = fleet_cfg(congestion=True)
+    for n_rep in (1, 3, 5, 11):
+        single = simulate_fleet(SPEC, cfg, policy="gus", n_rep=n_rep, seed=1, devices=1)
+        sharded = simulate_fleet(
+            SPEC, cfg, policy="gus", n_rep=n_rep, seed=1, devices=min(N_DEV, 4)
+        )
+        assert_fleet_identical(single, sharded, f"n_rep={n_rep}")
+
+
+@multi_device
+def test_default_devices_uses_every_local_device_and_stays_bitwise():
+    cfg = fleet_cfg()
+    auto = simulate_fleet(SPEC, cfg, policy="gus", n_rep=2 * N_DEV, seed=0)
+    assert auto.n_devices == N_DEV
+    single = simulate_fleet(SPEC, cfg, policy="gus", n_rep=2 * N_DEV, seed=0, devices=1)
+    assert_fleet_identical(single, auto)
+
+
+def test_requesting_too_many_devices_raises_not_falls_back():
+    with pytest.raises(ValueError, match="local device"):
+        simulate_fleet(
+            SPEC, fleet_cfg(), policy="gus", n_rep=2, seed=0, devices=N_DEV + 1
+        )
+    with pytest.raises(ValueError, match="devices"):
+        simulate_fleet(SPEC, fleet_cfg(), policy="gus", n_rep=2, seed=0, devices=0)
+
+
+def test_single_device_request_always_works():
+    fr = simulate_fleet(SPEC, fleet_cfg(), policy="gus", n_rep=2, seed=0, devices=1)
+    assert fr.n_devices == 1 and fr.n_requests > 0
+
+
+# ---------------------------------------------------------------------------
+# Windowed (bounded-memory) vs materialized bitwise parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scenario", ["paper-default", "diurnal-week", "flash-crowd"])
+@pytest.mark.parametrize("congestion", [False, True], ids=["plain", "congestion"])
+def test_windowed_fleet_matches_materialized(scenario, congestion):
+    """The windowed scan (including lazy per-window streaming arrivals on
+    diurnal-week) reproduces the one-shot fleet bit for bit."""
+    cfg = fleet_cfg(congestion)
+    full = simulate_fleet(SPEC, cfg, policy="gus", n_rep=2, seed=0, scenario=scenario)
+    for window in (1, 2, 5):
+        windowed = simulate_fleet(
+            SPEC, cfg, policy="gus", n_rep=2, seed=0, scenario=scenario, window=window
+        )
+        assert windowed.window == window
+        assert_fleet_identical(full, windowed, f"{scenario} window={window}")
+
+
+def test_windowed_fleet_with_keyed_policy_keeps_the_key_chain():
+    """`random` draws one key per (rep, frame) from a chain precomputed up
+    front, so windowing must not change what it schedules."""
+    cfg = fleet_cfg()
+    full = simulate_fleet(SPEC, cfg, policy="random", n_rep=3, seed=7)
+    windowed = simulate_fleet(SPEC, cfg, policy="random", n_rep=3, seed=7, window=2)
+    assert_fleet_identical(full, windowed)
+
+
+@multi_device
+def test_windowed_and_sharded_compose():
+    cfg = fleet_cfg(congestion=True)
+    full = simulate_fleet(
+        SPEC, cfg, policy="gus", n_rep=4, seed=0, scenario="diurnal-week", devices=1
+    )
+    both = simulate_fleet(
+        SPEC, cfg, policy="gus", n_rep=4, seed=0, scenario="diurnal-week",
+        devices=min(N_DEV, 4), window=3,
+    )
+    assert_fleet_identical(full, both)
+
+
+def test_window_bounds_memory_not_results_on_long_horizon():
+    """A longer streaming horizon through small windows still matches the
+    materialized run (the count pre-pass pins one shared padding bucket)."""
+    cfg = fleet_cfg(horizon_ms=90_000.0)
+    full = simulate_fleet(
+        SPEC, cfg, policy="gus", n_rep=2, seed=3, scenario="sustained-overload"
+    )
+    windowed = simulate_fleet(
+        SPEC, cfg, policy="gus", n_rep=2, seed=3, scenario="sustained-overload",
+        window=4,
+    )
+    assert_fleet_identical(full, windowed)
+
+
+# ---------------------------------------------------------------------------
+# The sequential testbed stays the parity anchor
+# ---------------------------------------------------------------------------
+
+
+@multi_device
+def test_sharded_fleet_still_matches_sequential_simulator():
+    """Noise-free frame-synchronous settings: the sharded fleet must agree
+    with the sequential testbed exactly, like the single-device fleet does
+    (tests/test_queueing.py pins that one)."""
+    spec = demo_cluster_spec()
+    cfg = SimConfig(
+        horizon_ms=30_000.0, arrival_rate_per_s=6.0, delay_req_ms=6000.0,
+        acc_req_mean=50.0, acc_req_std=10.0,
+        channel_sigma=0.0, proc_sigma=0.0, queue_cap=10**9,
+        bandwidth_init=spec.bandwidth_true, adapt_max_cs=False,
+        congestion=CongestionConfig(enabled=True),
+    )
+    r = simulate(spec, cfg, policy="gus", seed=0)
+    fr = simulate_fleet(
+        spec, cfg, policy="gus", n_rep=1, seed=0, devices=min(N_DEV, 2), window=3
+    )
+    assert fr.n_requests == r.n_requests
+    assert fr.n_served == r.n_served
+    assert int(round(fr.satisfied_per_rep[0] * fr.n_requests / 100.0)) == r.n_satisfied

@@ -11,7 +11,6 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssd_scan import ssd_scan
-from repro.kernels import ops
 
 RNG = np.random.default_rng(42)
 

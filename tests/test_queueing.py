@@ -14,7 +14,6 @@ from repro.core import (  # noqa: E402
     GeneratorConfig,
     Policy,
     SimConfig,
-    comm_inflation,
     committed_loads,
     compute_inflation,
     demo_cluster_spec,

@@ -1,5 +1,4 @@
 """Roofline machinery: HLO shape parsing, collective-bytes accounting, terms."""
-import numpy as np
 
 from repro.roofline import V5E, collective_bytes, roofline_terms, _shape_bytes
 

@@ -8,7 +8,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models import Model
-from repro.sharding import DEFAULT_RULES, resolve_spec, use_sharding, shard
+from repro.sharding import DEFAULT_RULES, resolve_spec, shard
 
 
 def mk_mesh(shape, names):
@@ -27,7 +27,6 @@ def test_resolve_basic():
 def test_resolve_divisibility_fallback():
     # model axis size 1 always divides; test the non-dividing case via a rules
     # table against a fake mesh of size 16 using jax's mesh abstraction
-    import os
     devs = np.array(jax.devices() * 16)[:16]  # replicate the single CPU device
     mesh = Mesh(devs.reshape(4, 4), ("data", "model"))
     # kv_heads=4 divides 4 -> sharded

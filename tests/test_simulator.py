@@ -1,9 +1,8 @@
 """Virtual-testbed simulator: frame protocol, capacity budgets, EMA estimator."""
 import numpy as np
 import jax.numpy as jnp
-import pytest
 
-from repro.core import ClusterSpec, SimConfig, SimResult, gus_schedule_np, local_all, offload_all, simulate
+from repro.core import ClusterSpec, SimConfig, gus_schedule_np, local_all, offload_all, simulate
 
 
 def tiny_spec(edge_gamma=3900.0, cloud_gamma=3000.0, eta=350.0):

@@ -1,6 +1,5 @@
 """End-to-end behaviour tests for the paper's system: zoo -> profiles ->
 GUS scheduling -> serving, plus the launch/dry-run machinery on a test mesh."""
-import dataclasses
 
 import numpy as np
 import jax
@@ -10,7 +9,6 @@ import pytest
 from repro.configs import get_config, reduce_for_smoke
 from repro.configs.paper_zoo import SQUEEZE_LM
 from repro.core import (
-    ClusterSpec,
     SimConfig,
     gus_schedule_np,
     local_all,
