@@ -89,3 +89,48 @@ def run_policy_mc(name: str, cfg: GeneratorConfig, seed: int = 0, mc: int = MC_R
 
 def csv_row(*cells) -> str:
     return ",".join(str(c) for c in cells)
+
+
+def gate_rows_against_baseline(
+    rows,
+    baseline_rows,
+    *,
+    key_fn,
+    metric: str,
+    tolerance: float,
+    baseline_path: str,
+    unit: str = "",
+    gate_name: str = "perf gate",
+) -> int:
+    """Shared perf-regression gate used by the CI benches.
+
+    Matches ``rows`` to ``baseline_rows`` on ``key_fn(row)`` (unmatched rows
+    are skipped, so a baseline can lag a sweep's shape), prints one verdict
+    line per matched row, and raises ``SystemExit`` when any row's
+    ``metric`` falls more than ``tolerance`` below its baseline — or when
+    nothing matched at all.  Returns the number of rows checked.
+    """
+    old = {key_fn(r): r for r in baseline_rows}
+    failures, checked = [], 0
+    for row in rows:
+        base = old.get(key_fn(row))
+        if base is None:
+            continue
+        checked += 1
+        floor = base[metric] * (1.0 - tolerance)
+        verdict = "ok" if row[metric] >= floor else "REGRESSION"
+        label = ",".join(str(k) for k in key_fn(row))
+        print(f"gate,{label}: {row[metric]} vs baseline {base[metric]}{unit} "
+              f"(floor {floor:.1f}) {verdict}")
+        if row[metric] < floor:
+            failures.append(row)
+    if checked == 0:
+        raise SystemExit(f"{gate_name} matched no rows in {baseline_path}")
+    if failures:
+        raise SystemExit(
+            f"{gate_name}: {len(failures)}/{checked} rows regressed more than "
+            f"{tolerance:.0%} vs {baseline_path} — if intentional, refresh it "
+            "with --update-baseline"
+        )
+    print(f"{gate_name}: {checked} rows within {tolerance:.0%} of baseline")
+    return checked

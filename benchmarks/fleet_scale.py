@@ -1,20 +1,27 @@
 """Fleet-scale benchmark: Monte-Carlo throughput toward the paper's 20 000
-replications, across replication counts and device meshes.
+replications, across replication counts, device meshes, and host-pipeline
+modes.
 
-Three sweeps over ``simulate_fleet`` on a paper-sized cluster (10 servers,
+Four sweeps over ``simulate_fleet`` on a paper-sized cluster (10 servers,
 10 model variants), all with the jitted GUS policy:
 
   replication_sweep  wall-clock and requests/s vs n_rep on one device
   device_sweep       fixed n_rep sharded over 1..D devices (strong scaling)
   weak_scaling       n_rep grows with the device count (per-device throughput)
+  overlap_sweep      the 64-replication point under the host-pipeline modes:
+                     the serial PR-4 loop (prefetch=0, per-request RNG) vs
+                     the overlapped producer + vectorized columnar arrivals
+                     (prefetch>0, rng_mode="vectorized", windowed)
 
-Each row reports the end-to-end wall time and the *dispatch* time
+Each row reports the end-to-end wall time, the *dispatch* time
 (``FleetResult.dispatch_s`` — the phase inside the jitted fleet programs,
-which is what device sharding accelerates; host-side arrival generation is
-Python and device-count independent).  Rows keep the best of ``--repeats``
-runs to shave scheduler noise.
+which is what device sharding accelerates) and the *generation* time
+(``FleetResult.gen_s`` — host-side arrival generation + frame-grid build
+that actually *blocked* the pipeline; build work hidden behind device
+compute by ``prefetch`` never shows up there).  Rows keep the best of
+``--repeats`` runs to shave scheduler noise.
 
-Writes ``results/fleet_scale/BENCH_fleet.json``.  CI gates on it twice:
+Writes ``results/fleet_scale/BENCH_fleet.json``.  CI gates on it three ways:
 
 * perf-regression gate — ``--compare benchmarks/baselines/BENCH_fleet.json
   --tolerance 0.30`` fails when single-device throughput regresses by more
@@ -22,12 +29,17 @@ Writes ``results/fleet_scale/BENCH_fleet.json``.  CI gates on it twice:
   (``--update-baseline`` refreshes the file);
 * multi-device gate — ``--assert-scaling 1.0`` (run under
   ``XLA_FLAGS=--xla_force_host_platform_device_count=8``) fails when the
-  dispatch-phase throughput at the largest mesh does not beat one device.
+  dispatch-phase throughput at the largest mesh does not beat one device;
+* overlap gate — ``--assert-overlap 5.0`` fails unless the overlapped +
+  vectorized mode cuts the blocking host generation+build time (``gen_s``)
+  of the 64-replication point by at least that factor vs the serial
+  per-request pipeline.
 
 Run:
 
     python benchmarks/fleet_scale.py --tiny                 # CI smoke
     python benchmarks/fleet_scale.py                        # full sweep
+    python benchmarks/fleet_scale.py --tiny --assert-overlap 5.0
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
         python benchmarks/fleet_scale.py --tiny --assert-scaling 1.0
 """
@@ -48,6 +60,11 @@ import jax
 
 from repro.core import SimConfig, demo_cluster_spec, simulate_fleet
 
+try:  # imported as benchmarks.fleet_scale (run.py)
+    from .common import gate_rows_against_baseline
+except ImportError:  # run as a script: benchmarks/ is sys.path[0]
+    from common import gate_rows_against_baseline
+
 POLICY = "gus"
 
 
@@ -67,32 +84,37 @@ def bench_cfg(tiny: bool) -> SimConfig:
     )
 
 
-def _measure(spec, cfg, *, n_rep: int, devices: int, repeats: int) -> dict:
+def _measure(spec, cfg, *, n_rep: int, devices: int, repeats: int, **fleet_kw) -> dict:
     """Best-of-``repeats`` timing of one fleet configuration (plus one
-    untimed warmup so compilation never lands in a timed run)."""
-    simulate_fleet(spec, cfg, policy=POLICY, n_rep=n_rep, seed=0, devices=devices)
-    best_wall = best_disp = float("inf")
+    untimed warmup so compilation never lands in a timed run).  Extra
+    keywords (prefetch, rng_mode, window) flow through to simulate_fleet."""
+    simulate_fleet(spec, cfg, policy=POLICY, n_rep=n_rep, seed=0, devices=devices, **fleet_kw)
+    best_wall = best_disp = best_gen = float("inf")
     fr = None
     for _ in range(repeats):
         t0 = time.perf_counter()
         fr = simulate_fleet(
-            spec, cfg, policy=POLICY, n_rep=n_rep, seed=0, devices=devices
+            spec, cfg, policy=POLICY, n_rep=n_rep, seed=0, devices=devices, **fleet_kw
         )
         wall = time.perf_counter() - t0
         best_wall = min(best_wall, wall)
         best_disp = min(best_disp, fr.dispatch_s)
+        best_gen = min(best_gen, fr.gen_s)
     frames = n_rep * fr.n_frames
     return {
         "n_rep": n_rep,
         "devices": devices,
         "wall_s": round(best_wall, 4),
         "dispatch_s": round(best_disp, 4),
+        "gen_s": round(best_gen, 4),
+        "gen_share": round(best_gen / best_wall, 4),
         "n_requests": fr.n_requests,
         "n_frames": frames,
         "reqs_per_s": round(fr.n_requests / best_wall, 1),
         "frames_per_s": round(frames / best_wall, 1),
         "dispatch_frames_per_s": round(frames / max(best_disp, 1e-9), 1),
         "per_device_frames_per_s": round(frames / best_wall / devices, 1),
+        **{k: v for k, v in fleet_kw.items() if v is not None},
     }
 
 
@@ -136,6 +158,44 @@ def run(*, tiny: bool, out: str, device_counts, repeats: int) -> dict:
         print(f"weak_scaling,devices={d},n_rep={weak_base * d},"
               f"per_device={row['per_device_frames_per_s']} frames/s", flush=True)
 
+    # host-pipeline modes at the ISSUE's 64-replication point: the serial
+    # PR-4 loop vs the overlapped producer + vectorized columnar arrivals.
+    # `serial` pins prefetch=0 + the per-request RNG (the pre-overlap
+    # pipeline, bit-identical to the default mode's results); `overlap`
+    # windows the scan (~4 windows over the horizon) so the producer has
+    # device compute to hide the grid build behind.
+    import numpy as _np
+
+    T = int(_np.ceil(cfg.horizon_ms / cfg.frame_ms))
+    W = max(1, T // 4)
+    overlap_sweep = []
+    for label, kw in [
+        ("serial", dict(prefetch=0, rng_mode="paper-default")),
+        ("prefetch", dict(prefetch=2, window=W, rng_mode="paper-default")),
+        ("vectorized", dict(prefetch=0, rng_mode="vectorized")),
+        ("overlap", dict(prefetch=2, window=W, rng_mode="vectorized")),
+    ]:
+        row = _measure(spec, cfg, n_rep=64, devices=1, repeats=repeats, **kw)
+        row["mode"] = label
+        overlap_sweep.append(row)
+        print(f"overlap_sweep,mode={label},{row['wall_s']}s,"
+              f"gen={row['gen_s']}s ({row['gen_share']:.0%} of wall),"
+              f"dispatch={row['dispatch_s']}s", flush=True)
+    serial_row = overlap_sweep[0]
+    overlap_row = overlap_sweep[-1]
+    overlap_summary = {
+        "n_rep": 64,
+        "gen_s_serial": serial_row["gen_s"],
+        "gen_s_overlap": overlap_row["gen_s"],
+        "gen_s_reduction": round(serial_row["gen_s"] / max(overlap_row["gen_s"], 1e-9), 2),
+        "gen_share_serial": serial_row["gen_share"],
+        "gen_share_overlap": overlap_row["gen_share"],
+        "wall_speedup": round(serial_row["wall_s"] / overlap_row["wall_s"], 2),
+    }
+    print(f"overlap: host gen+build blocking {serial_row['gen_s']}s -> "
+          f"{overlap_row['gen_s']}s ({overlap_summary['gen_s_reduction']}x lower), "
+          f"end-to-end {overlap_summary['wall_speedup']}x", flush=True)
+
     # scaling between the smallest and largest swept mesh (usually 1 -> D,
     # but an explicit --devices list without 1 still gets a valid report)
     base, top = device_sweep[0], device_sweep[-1]
@@ -165,6 +225,8 @@ def run(*, tiny: bool, out: str, device_counts, repeats: int) -> dict:
         "device_sweep": device_sweep,
         "weak_scaling": weak_scaling,
         "scaling_1_to_max": scaling,
+        "overlap_sweep": overlap_sweep,
+        "overlap_summary": overlap_summary,
     }
     out_dir = Path(out)
     out_dir.mkdir(parents=True, exist_ok=True)
@@ -180,30 +242,16 @@ def compare_against_baseline(report: dict, baseline_path: str, tolerance: float)
     on (n_rep, devices); unmatched rows are skipped, so the baseline can
     lag the sweep's shape."""
     baseline = json.loads(Path(baseline_path).read_text())
-    old_rows = {
-        (r["n_rep"], r["devices"]): r for r in baseline.get("replication_sweep", [])
-    }
-    failures, checked = [], 0
-    for row in report["replication_sweep"]:
-        old = old_rows.get((row["n_rep"], row["devices"]))
-        if old is None:
-            continue
-        checked += 1
-        floor = old["reqs_per_s"] * (1.0 - tolerance)
-        verdict = "ok" if row["reqs_per_s"] >= floor else "REGRESSION"
-        print(f"gate,n_rep={row['n_rep']}: {row['reqs_per_s']} vs baseline "
-              f"{old['reqs_per_s']} req/s (floor {floor:.1f}) {verdict}")
-        if row["reqs_per_s"] < floor:
-            failures.append(row)
-    if checked == 0:
-        raise SystemExit(f"perf gate matched no rows in {baseline_path}")
-    if failures:
-        raise SystemExit(
-            f"perf gate: {len(failures)}/{checked} rows regressed more than "
-            f"{tolerance:.0%} vs {baseline_path} — if intentional, refresh it "
-            "with --update-baseline"
-        )
-    print(f"perf gate: {checked} rows within {tolerance:.0%} of baseline")
+    gate_rows_against_baseline(
+        report["replication_sweep"],
+        baseline.get("replication_sweep", []),
+        key_fn=lambda r: (r["n_rep"], r["devices"]),
+        metric="reqs_per_s",
+        tolerance=tolerance,
+        baseline_path=baseline_path,
+        unit=" req/s",
+        gate_name="perf gate",
+    )
 
 
 def main(argv=None):
@@ -225,6 +273,11 @@ def main(argv=None):
                          "on hosts with >= 4 cores (virtual devices have real "
                          "parallel headroom there) and a 0.7 no-degradation "
                          "floor on smaller hosts")
+    ap.add_argument("--assert-overlap", type=float, default=None, metavar="X",
+                    help="fail unless prefetch + rng_mode=vectorized cut the "
+                         "blocking host generation+build time (gen_s) of the "
+                         "64-replication point by more than X times vs the "
+                         "serial per-request pipeline")
     ap.add_argument("--update-baseline", metavar="PATH",
                     help="also write the report to PATH (refresh the baseline)")
     args = ap.parse_args(argv)
@@ -258,6 +311,16 @@ def main(argv=None):
             )
         print(f"scaling gate: {got}x > {floor}x on {d_base} -> {d_max} devices "
               f"({cores} cores)")
+    if args.assert_overlap is not None:
+        got = report["overlap_summary"]["gen_s_reduction"]
+        if got < args.assert_overlap:
+            raise SystemExit(
+                f"overlap gate: blocking host gen+build reduced only {got}x "
+                f"at the 64-replication point, required >= {args.assert_overlap}x "
+                f"(serial {report['overlap_summary']['gen_s_serial']}s vs "
+                f"overlapped {report['overlap_summary']['gen_s_overlap']}s)"
+            )
+        print(f"overlap gate: gen_s reduced {got}x >= {args.assert_overlap}x")
 
 
 if __name__ == "__main__":

@@ -110,12 +110,12 @@ def _base_cfg(tiny: bool, **overrides) -> SimConfig:
     return SimConfig(**kw)
 
 
-def _fleet_sweep(fig, x_label, values, make_cfg, spec, *, n_rep, policies):
+def _fleet_sweep(fig, x_label, values, make_cfg, spec, *, n_rep, policies, rng_mode=None):
     rows = []
     for x in values:
         cfg = make_cfg(x)
         for pol in policies:
-            fr = simulate_fleet(spec, cfg, policy=pol, n_rep=n_rep, seed=0)
+            fr = simulate_fleet(spec, cfg, policy=pol, n_rep=n_rep, seed=0, rng_mode=rng_mode)
             rows.append({
                 "x": x,
                 "policy": pol,
@@ -128,7 +128,7 @@ def _fleet_sweep(fig, x_label, values, make_cfg, spec, *, n_rep, policies):
     return {"x_label": x_label, "rows": rows}
 
 
-def fig_arrival_rate(tiny: bool, replications=None) -> Dict:
+def fig_arrival_rate(tiny: bool, replications=None, rng_mode=None) -> Dict:
     """Satisfied-% vs per-edge arrival rate (every vmappable policy, fleet)."""
     spec = demo_cluster_spec()
     values = [1.0, 4.0] if tiny else [0.5, 1.0, 2.0, 4.0, 8.0]
@@ -136,10 +136,11 @@ def fig_arrival_rate(tiny: bool, replications=None) -> Dict:
         "arrival-rate", "arrival rate (req/s per edge)", values,
         lambda r: _base_cfg(tiny, arrival_rate_per_s=r),
         spec, n_rep=replications or (2 if tiny else 8), policies=_fleet_policies(),
+        rng_mode=rng_mode,
     )
 
 
-def fig_qos_deadline(tiny: bool, replications=None) -> Dict:
+def fig_qos_deadline(tiny: bool, replications=None, rng_mode=None) -> Dict:
     """Satisfied-% vs requested deadline C_i (stricter deadline -> fewer)."""
     spec = demo_cluster_spec()
     values = [2000.0, 8000.0] if tiny else [1500.0, 3000.0, 6000.0, 12000.0]
@@ -147,10 +148,11 @@ def fig_qos_deadline(tiny: bool, replications=None) -> Dict:
         "qos-deadline", "requested deadline C_i (ms)", values,
         lambda d: _base_cfg(tiny, delay_req_ms=d),
         spec, n_rep=replications or (2 if tiny else 8), policies=_fleet_policies(),
+        rng_mode=rng_mode,
     )
 
 
-def fig_qos_accuracy(tiny: bool, replications=None) -> Dict:
+def fig_qos_accuracy(tiny: bool, replications=None, rng_mode=None) -> Dict:
     """Satisfied-% vs requested accuracy A_i (stricter floor -> fewer)."""
     spec = demo_cluster_spec()
     values = [40.0, 70.0] if tiny else [30.0, 45.0, 60.0, 75.0]
@@ -158,6 +160,7 @@ def fig_qos_accuracy(tiny: bool, replications=None) -> Dict:
         "qos-accuracy", "requested accuracy A_i (%)", values,
         lambda a: _base_cfg(tiny, acc_req_mean=a),
         spec, n_rep=replications or (2 if tiny else 8), policies=_fleet_policies(),
+        rng_mode=rng_mode,
     )
 
 
@@ -213,7 +216,7 @@ def fig_scenarios(tiny: bool) -> Dict:
     return {"x_label": "scenario", "rows": rows}
 
 
-def fig_congestion(tiny: bool, replications=None) -> Dict:
+def fig_congestion(tiny: bool, replications=None, rng_mode=None) -> Dict:
     """Satisfied-% under load-dependent service times (the testbed regime).
 
     Runs the vmapped fleet with the congestion model enabled
@@ -242,7 +245,8 @@ def fig_congestion(tiny: bool, replications=None) -> Dict:
         )
         for pol in _fleet_policies():
             fr = simulate_fleet(
-                spec, cfg, policy=pol, scenario=scn, n_rep=n_rep, seed=0
+                spec, cfg, policy=pol, scenario=scn, n_rep=n_rep, seed=0,
+                rng_mode=rng_mode,
             )
             rows.append({
                 "x": rate,
@@ -545,6 +549,7 @@ def run(
     out: str = "results/paper_figures",
     only=None,
     replications: int = None,
+    rng_mode: str = None,
 ):
     out = Path(out)
     selected = tuple(only) if only else FIGURES
@@ -552,13 +557,13 @@ def run(
     # fleet-backed figures take the --replications override (the paper's
     # Monte-Carlo averages 20 000); the sequential-testbed figures don't
     builders = {
-        "arrival-rate": lambda: fig_arrival_rate(tiny, replications),
+        "arrival-rate": lambda: fig_arrival_rate(tiny, replications, rng_mode),
         "num-users": lambda: fig_num_users(tiny),
-        "qos-deadline": lambda: fig_qos_deadline(tiny, replications),
-        "qos-accuracy": lambda: fig_qos_accuracy(tiny, replications),
+        "qos-deadline": lambda: fig_qos_deadline(tiny, replications, rng_mode),
+        "qos-accuracy": lambda: fig_qos_accuracy(tiny, replications, rng_mode),
         "scenarios": lambda: fig_scenarios(tiny),
         "optimality-gap": lambda: fig_optimality_gap(tiny),
-        "congestion": lambda: fig_congestion(tiny, replications),
+        "congestion": lambda: fig_congestion(tiny, replications, rng_mode),
     }
     figures = {name: builders[name]() for name in selected}
     claims = check_claims(figures)
@@ -566,6 +571,7 @@ def run(
     meta = {
         "tiny": tiny,
         "replications": replications,
+        "rng_mode": rng_mode or "paper-default",
         "policies": list_policies(),
         "scenarios": list_scenarios(),
         "figures": list(selected),
@@ -610,11 +616,17 @@ def main(argv=None):
                     help="Monte-Carlo replications for the fleet-backed "
                          "figures (paper: 20000; sharded over every local "
                          "device — set XLA_FLAGS or use real accelerators)")
+    ap.add_argument("--rng-mode", choices=["paper-default", "vectorized"],
+                    default=None,
+                    help="arrival generator for the fleet-backed figures: "
+                         "'vectorized' cuts host-side generation ~10x for "
+                         "large --replications runs (opt-in trace family; "
+                         "see docs/reproducing_paper.md)")
     args = ap.parse_args(argv)
     if args.replications is not None and args.replications < 1:
         ap.error("--replications must be >= 1")
     return run(tiny=args.tiny, out=args.out, only=args.only,
-               replications=args.replications)
+               replications=args.replications, rng_mode=args.rng_mode)
 
 
 if __name__ == "__main__":

@@ -52,7 +52,7 @@ def main(argv=None):
         "figures": lambda: paper_figures.run(tiny=args.fast),
         "render": lambda: render_figures.main([]),
         "optimal": lambda: optimal_gap.main(10 if args.fast else 25),
-        "sched": scheduler_throughput.main,
+        "sched": lambda: scheduler_throughput.main([]),
         "fleet": lambda: fleet_scale.main(["--tiny"] if args.fast else []),
         "serving": lambda: serving_bench.main(6 if args.fast else 12),
         "extensions": lambda: extensions_bench.main(fast=args.fast),

@@ -3,16 +3,41 @@
 The paper argues GUS is a 'polynomial constant-time' online decision
 algorithm; here we measure the jit+vmap implementation's decisions/second —
 the number that determines how many edge frames per second one controller
-can schedule.  Prints CSV: impl,batch,instances_per_s,us_per_call."""
+can schedule.  Prints CSV (impl,batch,instances_per_s,us_per_call) and
+writes ``results/scheduler_throughput/BENCH_scheduler.json``.
+
+CI gates on it: ``--compare benchmarks/baselines/BENCH_scheduler.json
+--tolerance 0.50`` fails when a jitted row's throughput regresses by more
+than the band against the checked-in baseline (the wide band absorbs
+shared-runner noise; ``--update-baseline`` refreshes the file).  The
+un-jitted numpy oracle row is reported but never gated — it is a parity
+reference, not a product.
+
+Run:
+
+    PYTHONPATH=src python -m benchmarks.scheduler_throughput
+    PYTHONPATH=src python -m benchmarks.scheduler_throughput \\
+        --compare benchmarks/baselines/BENCH_scheduler.json
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
+from pathlib import Path
 
 import jax
 
-from repro.core import GeneratorConfig, generate_batch, generate_instance, gus_schedule, gus_schedule_batch, gus_schedule_np
+from repro.core import (
+    GeneratorConfig,
+    generate_batch,
+    generate_instance,
+    gus_schedule,
+    gus_schedule_batch,
+    gus_schedule_np,
+)
 
-from .common import csv_row
+from .common import csv_row, gate_rows_against_baseline
 
 CFG = GeneratorConfig()  # paper scale: N=100, M=10, L=10
 
@@ -25,20 +50,83 @@ def _time(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps
 
 
-def main():
+def run(repeats: int = 3) -> dict:
     print("impl,batch,instances_per_s,us_per_call")
     inst = generate_instance(0, CFG)
+    rows = []
 
-    t_np = _time(lambda i: gus_schedule_np(i), inst, reps=1)
-    print(csv_row("numpy", 1, f"{1/t_np:.1f}", f"{t_np*1e6:.0f}"))
+    def add(impl, batch, per_call_s, gated):
+        rows.append(
+            {
+                "impl": impl,
+                "batch": batch,
+                "instances_per_s": round(batch / per_call_s, 1),
+                "us_per_call": round(per_call_s / batch * 1e6, 1),
+                "gated": gated,
+            }
+        )
+        print(csv_row(impl, batch, f"{batch / per_call_s:.1f}",
+                      f"{per_call_s / batch * 1e6:.0f}"))
 
-    t_jax = _time(gus_schedule, inst)
-    print(csv_row("jax-jit", 1, f"{1/t_jax:.1f}", f"{t_jax*1e6:.0f}"))
-
+    add("numpy", 1, _time(lambda i: gus_schedule_np(i), inst, reps=1), gated=False)
+    add("jax-jit", 1, _time(gus_schedule, inst, reps=repeats), gated=True)
     for bs in (16, 64):
         batch = generate_batch(0, bs, CFG)
-        t = _time(gus_schedule_batch, batch)
-        print(csv_row("jax-vmap", bs, f"{bs/t:.1f}", f"{t/bs*1e6:.0f}"))
+        add("jax-vmap", bs, _time(gus_schedule_batch, batch, reps=repeats), gated=True)
+
+    return {
+        "meta": {
+            "bench": "scheduler_throughput",
+            "jax": jax.__version__,
+            "n_requests": CFG.n_requests,
+            "repeats": repeats,
+        },
+        "rows": rows,
+    }
+
+
+def compare_against_baseline(report: dict, baseline_path: str, tolerance: float):
+    """Fail (SystemExit) when a gated row's throughput regresses by more than
+    ``tolerance``; rows match on (impl, batch), unmatched rows are skipped."""
+    baseline = json.loads(Path(baseline_path).read_text())
+    gate_rows_against_baseline(
+        [r for r in report["rows"] if r["gated"]],
+        baseline.get("rows", []),
+        key_fn=lambda r: (r["impl"], r["batch"]),
+        metric="instances_per_s",
+        tolerance=tolerance,
+        baseline_path=baseline_path,
+        unit=" inst/s",
+        gate_name="scheduler perf gate",
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default="results/scheduler_throughput")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--compare", metavar="BASELINE_JSON",
+                    help="perf-regression gate against a checked-in baseline")
+    ap.add_argument("--tolerance", type=float, default=0.50,
+                    help="allowed fractional throughput drop for --compare "
+                         "(wide by default: jit timings on shared runners are noisy)")
+    ap.add_argument("--update-baseline", metavar="PATH",
+                    help="also write the report to PATH (refresh the baseline)")
+    args = ap.parse_args(argv)
+
+    report = run(repeats=args.repeats)
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / "BENCH_scheduler.json"
+    path.write_text(json.dumps(report, indent=2))
+    print(f"wrote {path}")
+
+    if args.update_baseline:
+        Path(args.update_baseline).parent.mkdir(parents=True, exist_ok=True)
+        Path(args.update_baseline).write_text(json.dumps(report, indent=2))
+        print(f"baseline refreshed at {args.update_baseline}")
+    if args.compare:
+        compare_against_baseline(report, args.compare, args.tolerance)
     return True
 
 

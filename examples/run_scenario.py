@@ -54,6 +54,18 @@ def main(argv=None):
     ap.add_argument("--window", type=int, default=None, metavar="W",
                     help="run the fleet scan W frames at a time "
                          "(bounded memory on long horizons)")
+    ap.add_argument("--prefetch", type=int, default=None, metavar="D",
+                    help="fleet host-pipeline depth: build window k+1's "
+                         "arrivals+grid in a producer thread while window k "
+                         "computes (bit-identical; 0 = serial build, "
+                         "default 1)")
+    ap.add_argument("--rng-mode", choices=["paper-default", "vectorized"],
+                    default=None,
+                    help="arrival generator: 'paper-default' keeps the "
+                         "frozen per-request draw order (bit-compatible "
+                         "traces), 'vectorized' batches the draws in numpy "
+                         "(~10x faster generation, same distribution, "
+                         "different seed-deterministic traces)")
     ap.add_argument("--congestion", action="store_true",
                     help="enable load-dependent service times (queueing model)")
     stream = ap.add_mutually_exclusive_group()
@@ -66,8 +78,12 @@ def main(argv=None):
                     help="list scenarios and policies, then exit")
     args = ap.parse_args(argv)
 
-    if not args.fleet and (args.devices is not None or args.window is not None):
-        ap.error("--devices/--window configure the Monte-Carlo fleet; add --fleet R")
+    if not args.fleet and (
+        args.devices is not None or args.window is not None
+        or args.prefetch is not None
+    ):
+        ap.error("--devices/--window/--prefetch configure the Monte-Carlo "
+                 "fleet; add --fleet R")
 
     if args.list:
         print("scenarios:")
@@ -102,11 +118,13 @@ def main(argv=None):
         mode.append("congestion")
     if args.streaming or (args.streaming is None and scn.streaming):
         mode.append("streaming")
+    if args.rng_mode == "vectorized" or (args.rng_mode is None and scn.rng_mode == "vectorized"):
+        mode.append("vectorized-rng")
     tag = f" [{', '.join(mode)}]" if mode else ""
     print(f"=== scenario {scn.name!r} / policy {args.policy!r}{tag} ===")
     try:
         r = simulate(spec, cfg, scenario=scn, seed=args.seed,
-                     streaming=args.streaming, **sim_kw)
+                     streaming=args.streaming, rng_mode=args.rng_mode, **sim_kw)
     except (KeyError, ValueError) as e:  # unknown policy / ILP frame too big
         raise SystemExit(str(e.args[0]))
     for k, v in r.as_dict().items():
@@ -118,10 +136,13 @@ def main(argv=None):
         try:
             # a --devices request the host cannot honor raises a clear
             # ValueError (never a silent single-device fallback)
+            fleet_kw = dict(sim_kw)
+            if args.prefetch is not None:
+                fleet_kw["prefetch"] = args.prefetch
             fr = simulate_fleet(spec, cfg, scenario=scn, n_rep=args.fleet,
                                 seed=args.seed, streaming=args.streaming,
                                 devices=args.devices, window=args.window,
-                                **sim_kw)
+                                rng_mode=args.rng_mode, **fleet_kw)
         except ValueError as e:  # bad --devices, ILP on an uncapped frame, ...
             raise SystemExit(str(e.args[0]))
         print(f"=== fleet: {args.fleet} replications on "

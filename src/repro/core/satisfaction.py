@@ -56,14 +56,26 @@ def satisfied_mask(inst: FlatInstance, assign_j, assign_l) -> jnp.ndarray:
 
 
 def mean_us(inst: FlatInstance, assign_j, assign_l) -> jnp.ndarray:
-    """Objective (2): mean US over all |N| requests (dropped contribute 0)."""
-    us = us_tensor(inst)
+    """Objective (2): mean US over all |N| requests (dropped contribute 0).
+
+    Gathers the chosen (j, l) cell of ``acc``/``ctime`` first and evaluates
+    Eq. (1) only there — the same elementwise operations, in the same order,
+    on the same operands as picking out of the full :func:`us_tensor`, so
+    the result is bit-identical while doing ~M*L times less arithmetic
+    (this sits on the fleet's per-window metrics path).
+    """
     served = assign_j >= 0
     j = jnp.maximum(assign_j, 0)
     l = jnp.maximum(assign_l, 0)
-    picked = jnp.take_along_axis(
-        jnp.take_along_axis(us, j[..., :, None, None], axis=-2)[..., :, 0, :],
-        l[..., :, None],
-        axis=-1,
-    )[..., :, 0]
+
+    def pick(x):
+        return jnp.take_along_axis(
+            jnp.take_along_axis(x, j[..., :, None, None], axis=-2)[..., :, 0, :],
+            l[..., :, None],
+            axis=-1,
+        )[..., :, 0]
+
+    acc_term = (pick(inst.acc) - inst.A) / inst.max_as[..., None]
+    time_term = (inst.C - pick(inst.ctime)) / inst.max_cs[..., None]
+    picked = inst.w_a * acc_term + inst.w_c * time_term
     return jnp.where(served, picked, 0.0).mean(axis=-1)

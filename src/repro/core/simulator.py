@@ -54,6 +54,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 import os
+import queue as queue_mod
+import threading
 import time
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
@@ -79,8 +81,21 @@ from .queueing import (
     step_backlog,
 )
 from .satisfaction import mean_us, satisfied_mask
-from .scenarios import Request, Scenario, bucket_arrivals, get_scenario
-from .streaming import ArrivalStream, max_frame_arrivals, stream_trace
+from .scenarios import (
+    Request,
+    RequestColumns,
+    Scenario,
+    _resolve_rng_mode,
+    bucket_arrivals,
+    bucket_columns,
+    get_scenario,
+)
+from .streaming import (
+    ArrivalStream,
+    max_frame_arrivals,
+    stream_trace,
+    stream_trace_columns,
+)
 
 __all__ = [
     "ClusterSpec",
@@ -214,18 +229,32 @@ def _frame_arrays(
 ) -> Dict[str, np.ndarray]:
     """Numpy request-row tensors for one frame, using the scheduler's
     *estimated* bandwidth for comm delays — shared by
-    :func:`_build_frame_instance` and the fleet's batched grid builder."""
+    :func:`_build_frame_instance` and the fleet's batched grid builder.
+
+    ``reqs`` is either a list of :class:`Request` objects or a
+    :class:`~repro.core.scenarios.RequestColumns` view (the vectorized
+    trace); the columnar branch narrows the same float64 values to float32,
+    so the two layouts produce bit-identical tensors from identical draws.
+    """
     M = spec.n_servers
     L = spec.acc.shape[1]
     N = len(reqs)
     is_cloud = spec.is_cloud()
 
-    cover = np.array([r.cover for r in reqs], np.int32)
-    A = np.array([r.A for r in reqs], np.float32)
-    C = np.array([r.C for r in reqs], np.float32)
-    Tq = np.array([now_ms - r.arrival_ms for r in reqs], np.float32)
-    size = np.array([r.size_bytes for r in reqs], np.float32)
-    svc = np.array([r.service for r in reqs], np.int32)
+    if isinstance(reqs, RequestColumns):
+        cover = reqs.cover.astype(np.int32)
+        A = reqs.A.astype(np.float32)
+        C = reqs.C.astype(np.float32)
+        Tq = (now_ms - reqs.arrival_ms).astype(np.float32)
+        size = reqs.size_bytes.astype(np.float32)
+        svc = reqs.service.astype(np.int32)
+    else:
+        cover = np.array([r.cover for r in reqs], np.int32)
+        A = np.array([r.A for r in reqs], np.float32)
+        C = np.array([r.C for r in reqs], np.float32)
+        Tq = np.array([now_ms - r.arrival_ms for r in reqs], np.float32)
+        size = np.array([r.size_bytes for r in reqs], np.float32)
+        svc = np.array([r.service for r in reqs], np.int32)
 
     local = cover[:, None] == np.arange(M)[None, :]
     comm = size[:, None] / bw_est + np.where(is_cloud[None, :], spec.cloud_extra_delay, 0.0)
@@ -234,7 +263,10 @@ def _frame_arrays(
     proc = spec.proc_ms[:, svc, :].transpose(1, 0, 2)       # (N, M, L)
     ctime = Tq[:, None, None] + proc + comm[:, :, None]
     avail = spec.placed[:, svc, :].transpose(1, 0, 2)
-    acc = np.broadcast_to(spec.acc[svc][:, None, :], (N, M, L)).copy()
+    # broadcast view, not a copy: every consumer only reads (scatter/slice
+    # assignment or jnp.asarray), and skipping the 16MB materialization
+    # keeps the producer thread off the critical path
+    acc = np.broadcast_to(spec.acc[svc][:, None, :], (N, M, L))
     u = np.where(local[:, :, None], 0.0, (size / 1024.0)[:, None, None])
     return dict(
         cover=cover, A=A, C=C, acc=acc, ctime=ctime, v=proc,
@@ -291,6 +323,13 @@ def _build_frame_batch(
     to stacking ``pad_instance(_build_frame_instance(...), n_pad)`` per
     frame (pinned by the sharded-fleet parity tests through the unchanged
     sequential path).
+
+    A fully columnar grid (every frame a :class:`RequestColumns` — the
+    vectorized rng mode) skips the per-frame Python loop: the grid's
+    requests are concatenated, :func:`_frame_arrays` runs *once* over all
+    of them (its formulas are elementwise given each request's ``now_ms``),
+    and one fancy-indexed scatter per leaf writes the real rows — the same
+    values the per-frame fill writes, computed by the same elementwise ops.
     """
     F = len(frames)
     M = spec.n_servers
@@ -307,24 +346,48 @@ def _build_frame_batch(
     avail = np.zeros((F, n_pad, M, L), bool)
     gamma = np.zeros((F, M), np.float32)
     eta = np.zeros((F, M), np.float32)
-    for i, (reqs, t0) in enumerate(zip(frames, frame_starts)):
+    for i in range(F):
         g, e = budgets[i]
         gamma[i] = g
         eta[i] = e
-        n = len(reqs)
-        if n == 0:
-            continue
-        arr = _frame_arrays(reqs, spec, cfg, t0 + cfg.frame_ms, spec.bandwidth_true)
-        cover[i, :n] = arr["cover"]
-        A[i, :n] = arr["A"]
-        C[i, :n] = arr["C"]
-        w_a[i, :n] = cfg.w_a
-        w_c[i, :n] = cfg.w_c
-        acc[i, :n] = arr["acc"]
-        ctime[i, :n] = arr["ctime"]
-        v[i, :n] = arr["v"]
-        u[i, :n] = arr["u"]
-        avail[i, :n] = arr["avail"]
+    columnar = F > 0 and all(isinstance(b, RequestColumns) for b in frames)
+    if columnar:
+        lengths = np.fromiter((len(b) for b in frames), np.int64, F)
+        nn = int(lengths.sum())
+        if nn:
+            cat = RequestColumns.concatenate(frames)
+            row = np.repeat(np.arange(F), lengths)
+            col = np.arange(nn) - np.repeat(np.cumsum(lengths) - lengths, lengths)
+            now = np.repeat(
+                np.asarray(frame_starts, np.float64) + cfg.frame_ms, lengths
+            )
+            arr = _frame_arrays(cat, spec, cfg, now, spec.bandwidth_true)
+            cover[row, col] = arr["cover"]
+            A[row, col] = arr["A"]
+            C[row, col] = arr["C"]
+            w_a[row, col] = cfg.w_a
+            w_c[row, col] = cfg.w_c
+            acc[row, col] = arr["acc"]
+            ctime[row, col] = arr["ctime"]
+            v[row, col] = arr["v"]
+            u[row, col] = arr["u"]
+            avail[row, col] = arr["avail"]
+    else:
+        for i, (reqs, t0) in enumerate(zip(frames, frame_starts)):
+            n = len(reqs)
+            if n == 0:
+                continue
+            arr = _frame_arrays(reqs, spec, cfg, t0 + cfg.frame_ms, spec.bandwidth_true)
+            cover[i, :n] = arr["cover"]
+            A[i, :n] = arr["A"]
+            C[i, :n] = arr["C"]
+            w_a[i, :n] = cfg.w_a
+            w_c[i, :n] = cfg.w_c
+            acc[i, :n] = arr["acc"]
+            ctime[i, :n] = arr["ctime"]
+            v[i, :n] = arr["v"]
+            u[i, :n] = arr["u"]
+            avail[i, :n] = arr["avail"]
     # numpy leaves on purpose: the fleet slices replication groups on host
     # and device_puts each slice straight onto its target device (jnp ops
     # consume numpy leaves transparently on the metrics path)
@@ -349,11 +412,21 @@ def _build_frame_batch(
 def _apply_mobility_inplace(
     reqs: Sequence[Request], n_edge: int, move_prob: float, rng: np.random.Generator
 ) -> None:
-    """Re-attach each pending request's covering edge with prob ``move_prob``."""
+    """Re-attach each pending request's covering edge with prob ``move_prob``.
+
+    Accepts a Request list or a :class:`RequestColumns` view — the RNG draw
+    count (two batches of ``len(reqs)``, nothing when the frame is empty) is
+    identical either way, so both trace layouts stay on one draw sequence.
+    """
     if move_prob <= 0 or not reqs:
         return
     from .extensions import apply_mobility
 
+    if isinstance(reqs, RequestColumns):
+        reqs.cover = apply_mobility(
+            reqs.cover.astype(np.int32), n_edge, move_prob, rng
+        ).astype(np.int64)
+        return
     cov = np.array([r.cover for r in reqs], np.int32)
     cov = apply_mobility(cov, n_edge, move_prob, rng)
     for r, c in zip(reqs, cov):
@@ -448,6 +521,7 @@ def simulate(
     seed: int = 0,
     n_requests: Optional[int] = None,
     streaming: Optional[bool] = None,
+    rng_mode: Optional[str] = None,
 ) -> SimResult:
     """Run the virtual testbed.
 
@@ -476,6 +550,13 @@ def simulate(
     :class:`~repro.core.streaming.ArrivalStream` (long horizons), ``False``
     forces the legacy materialized trace.
 
+    ``rng_mode`` selects the arrival generator's draw discipline (``None``
+    defers to ``scenario.rng_mode``): ``"paper-default"`` is the frozen
+    per-request order — every historical trace bit-for-bit —
+    ``"vectorized"`` draws the same process in numpy batches (~10x faster,
+    different RNG consumption, so distributions match but individual
+    traces differ; deterministic given the seed either way).
+
     With ``cfg.congestion.enabled``, service times become load-dependent:
     each server carries a work backlog across frames, the scheduler sees
     only the backlog-reduced budget, and realized processing/transfer times
@@ -503,12 +584,14 @@ def simulate(
 
     # --- arrivals (materialized trace, or bounded-memory stream) -------------
     use_stream = scn.streaming if streaming is None else streaming
+    mode = _resolve_rng_mode(scn.rng_mode if rng_mode is None else rng_mode)
     if use_stream:
         source = _ArrivalSource(
-            stream=ArrivalStream(scn, seed, spec.n_edge, K, cfg), limit=n_requests
+            stream=ArrivalStream(scn, seed, spec.n_edge, K, cfg, rng_mode=mode),
+            limit=n_requests,
         )
     else:
-        reqs = scn.generate_arrivals(rng, spec.n_edge, K, cfg)
+        reqs = scn.generate_arrivals(rng, spec.n_edge, K, cfg, rng_mode=mode)
         if n_requests is not None:
             reqs = reqs[:n_requests]
         source = _ArrivalSource(reqs=reqs)
@@ -766,6 +849,14 @@ class FleetResult:
     #: device sharding accelerates; host-side arrival generation and
     #: metrics are excluded
     dispatch_s: float = 0.0
+    #: wall-clock seconds the pipeline was *blocked* on host-side arrival
+    #: generation + frame-grid building: the up-front trace/pre-pass cost
+    #: plus, per window, either the inline build time (``prefetch=0``) or
+    #: the time spent waiting on the producer's queue (``prefetch>0`` —
+    #: build work hidden behind device compute never shows up here)
+    gen_s: float = 0.0
+    #: producer-queue depth the run used (0 = serial single-thread build)
+    prefetch: int = 0
 
     @property
     def satisfied_pct(self) -> float:
@@ -829,17 +920,36 @@ class _RepFrameSource:
     demand, so a windowed fleet never materializes more than one window of
     requests — the stream's chunking invariance makes the buckets (and the
     mobility draw order) identical either way.
+
+    In ``rng_mode="vectorized"`` the materialized trace stays columnar
+    (:class:`RequestColumns` buckets) end to end — the grid builder fills
+    frames from array slices and per-request Python objects never exist;
+    the lazy stream uses the chunk-buffered vectorized engine.  Columnar
+    and lazy buckets carry the same values for the same seed (one chunk
+    code path underneath), so windowed==materialized holds in both modes.
     """
 
-    def __init__(self, scn, rep_seed, n_edge, n_services, cfg, T, use_stream, lazy):
+    def __init__(
+        self, scn, rep_seed, n_edge, n_services, cfg, T, use_stream, lazy,
+        rng_mode="paper-default",
+    ):
         self.cfg = cfg
         self.n_edge = n_edge
         self.move_prob = cfg.move_prob if scn.move_prob is None else scn.move_prob
         self.rng = np.random.default_rng(rep_seed)
         self.stream: Optional[ArrivalStream] = None
-        self.buckets: Optional[List[List[Request]]] = None
+        self.buckets = None  # List[List[Request]] | List[RequestColumns]
+        vectorized = rng_mode == "vectorized"
         if lazy:
-            self.stream = ArrivalStream(scn, rep_seed, n_edge, n_services, cfg)
+            self.stream = ArrivalStream(
+                scn, rep_seed, n_edge, n_services, cfg, rng_mode=rng_mode
+            )
+        elif vectorized:
+            if use_stream:
+                cols = stream_trace_columns(scn, rep_seed, n_edge, n_services, cfg)
+            else:
+                cols = scn.generate_arrivals_columns(self.rng, n_edge, n_services, cfg)
+            self.buckets = bucket_columns(cols, cfg.frame_ms, T)
         else:
             if use_stream:
                 reqs = stream_trace(scn, rep_seed, n_edge, n_services, cfg)
@@ -944,6 +1054,8 @@ def simulate_fleet(
     devices: Optional[int] = None,
     window: Optional[int] = None,
     rep_group: Optional[int] = None,
+    rng_mode: Optional[str] = None,
+    prefetch: int = 1,
 ) -> FleetResult:
     """Monte-Carlo fleet: R independent replications, one device program.
 
@@ -987,6 +1099,26 @@ def simulate_fleet(
     fixes the padding bucket), so memory stays bounded at 10^5-frame
     horizons.  Windowed results are bit-identical to the materialized run.
 
+    ``prefetch`` overlaps the host with the devices: a single producer
+    thread builds window ``k+1``'s arrivals and instance grid (the same
+    work, in the same order, as the serial loop — all host-side RNG lives
+    in the producer, so results are **bit-identical**) while window ``k``'s
+    replication groups compute, with a bounded queue of depth ``prefetch``
+    applying backpressure.  ``prefetch=0`` degrades to the serial
+    build-then-dispatch loop (the pre-overlap pipeline, and the reference
+    the parity tests compare against); the default of 1 double-buffers.
+    A builder exception propagates to the caller, and an early exit (or a
+    caller-side error) drains and joins the producer — no hung threads.
+    ``FleetResult.gen_s`` reports how long the pipeline actually *blocked*
+    on host-side generation + building; hiding that time is the point.
+
+    ``rng_mode`` (``None`` defers to ``scenario.rng_mode``) selects the
+    arrival generator: ``"paper-default"`` keeps the frozen per-request
+    draw order, ``"vectorized"`` generates in numpy batches and keeps the
+    whole trace columnar (:class:`~repro.core.scenarios.RequestColumns`) so
+    the grid builder fills frames from array slices — ~10x faster host
+    generation, different (equally distributed, seed-deterministic) traces.
+
     ``policy`` names a registered :class:`~repro.core.policies.Policy`; a
     ``needs_key`` policy (``random``) receives one PRNG key per
     (replication, frame) pair split from ``seed`` (fed through the scan as
@@ -1028,25 +1160,32 @@ def simulate_fleet(
     # lazy per-window arrival generation needs the stream's chunking
     # invariance; a materialized trace is bucketed up front either way
     lazy = use_stream and W < T and not host_side
+    mode = _resolve_rng_mode(scn.rng_mode if rng_mode is None else rng_mode)
+    prefetch = max(0, int(prefetch))
 
+    t_gen0 = time.perf_counter()
     sources = [
-        _RepFrameSource(scn, seed + rep, spec.n_edge, K, cfg, T, use_stream, lazy)
+        _RepFrameSource(
+            scn, seed + rep, spec.n_edge, K, cfg, T, use_stream, lazy, rng_mode=mode
+        )
         for rep in range(n_rep)
     ]
     if lazy:
         # count-only pre-pass: the global max bucket, in bounded memory —
         # one padding bucket for every window, identical to materialized
         n_max = max(
-            max_frame_arrivals(scn, seed + rep, spec.n_edge, K, cfg, T)
+            max_frame_arrivals(scn, seed + rep, spec.n_edge, K, cfg, T, rng_mode=mode)
             for rep in range(n_rep)
         )
     else:
         n_max = max(src.max_bucket for src in sources)
     n_pad = _pad_bucket(n_max)
+    gen_s = time.perf_counter() - t_gen0  # trace generation + padding pre-pass
 
     if host_side:
         return _simulate_fleet_host(
-            spec, cfg, scn, pol, sources, n_rep=n_rep, T=T, n_pad=n_pad, seed=seed
+            spec, cfg, scn, pol, sources, n_rep=n_rep, T=T, n_pad=n_pad, seed=seed,
+            gen_s=gen_s,
         )
 
     if pol is not None:
@@ -1117,10 +1256,15 @@ def simulate_fleet(
     n_real_frames = np.zeros((n_rep, T), np.int32)
     phi_frames = np.ones((n_rep, T, M), np.float32) if ccfg.enabled else None
 
-    for t0 in range(0, T, W):
+    def build_window(t0: int):
+        """Host-side build of one window: pull every replication's buckets,
+        fill the queueing-delay rows, and assemble the padded instance grid.
+        Pure numpy + the sources' own RNGs, so it runs unchanged — same
+        work, same draw order — inline (``prefetch=0``) or on the producer
+        thread (``prefetch>0``); that is the whole bit-identity argument."""
         t1 = min(t0 + W, T)
         Tc = t1 - t0
-        frames: List[List[Request]] = []
+        frames: List = []
         frame_starts: List[float] = []
         n_real = np.zeros((n_rep, Tc), np.int32)
         tq_flat = np.zeros((n_rep * Tc, n_pad), np.float32)
@@ -1130,11 +1274,17 @@ def simulate_fleet(
                 frame_start = (t0 + k) * cfg.frame_ms
                 frames.append(bucket)
                 frame_starts.append(frame_start)
-                n_real[rep, k] = len(bucket)
-                if bucket:
-                    tq_flat[i, : len(bucket)] = [
-                        frame_start + cfg.frame_ms - r.arrival_ms for r in bucket
-                    ]
+                nb = len(bucket)
+                n_real[rep, k] = nb
+                if nb:
+                    if isinstance(bucket, RequestColumns):
+                        tq_flat[i, :nb] = (
+                            frame_start + cfg.frame_ms - bucket.arrival_ms
+                        )
+                    else:
+                        tq_flat[i, :nb] = [
+                            frame_start + cfg.frame_ms - r.arrival_ms for r in bucket
+                        ]
                 i += 1
         # per-frame budgets are replication-independent: one _frame_budgets
         # call per frame index, reused across the R replications
@@ -1147,59 +1297,120 @@ def simulate_fleet(
         batch_rt = jax.tree.map(
             lambda x: x.reshape((n_rep, Tc) + x.shape[1:]), batch
         )
-        keys_rt = keys_all[:, t0:t1]
         if pad_r:
             batch_rt = _pad_reps(batch_rt, pad_r)
+        return t0, t1, Tc, batch, batch_rt, n_real, tq_flat
 
-        def run_group(g):
-            sl = slice(g * G, (g + 1) * G)
-            dev = group_devices[g % n_dev]
-            c, out = run(
-                carries[g],
-                to_device(jax.tree.map(lambda x: x[sl], batch_rt), dev),
-                to_device(keys_rt[sl], dev),
-            )
-            # materialize here (XLA releases the GIL while computing, so
-            # worker threads overlap groups across devices); the carry stays
-            # device-resident for the next window
-            return c, tuple(np.asarray(o) for o in out)
+    window_starts = list(range(0, T, W))
+    prod_thread = None
+    if prefetch > 0 and len(window_starts) > 0:
+        # bounded producer: builds windows ahead of the consumer, at most
+        # `prefetch` in flight.  Timeout-polling puts let it notice a
+        # consumer that stopped pulling (early exit / error) and unwind.
+        work_q: queue_mod.Queue = queue_mod.Queue(maxsize=prefetch)
+        stop_producer = threading.Event()
 
-        t_disp = time.perf_counter()
-        if executor is None:
-            results = [run_group(g) for g in range(n_groups)]
-        else:
-            results = list(executor.map(run_group, range(n_groups)))
-        dispatch_s += time.perf_counter() - t_disp
-        for g, (c, _) in enumerate(results):
-            carries[g] = c
-        jv, lv, pc, pe = (
-            np.concatenate([r[1][part] for r in results])[:n_rep]
-            for part in range(4)
+        def _offer(item) -> bool:
+            while not stop_producer.is_set():
+                try:
+                    work_q.put(item, timeout=0.05)
+                    return True
+                except queue_mod.Full:
+                    continue
+            return False
+
+        def _produce():
+            try:
+                for t0 in window_starts:
+                    if not _offer(build_window(t0)):
+                        return
+            except BaseException as e:  # delivered to the consumer's get()
+                _offer(e)
+
+        prod_thread = threading.Thread(
+            target=_produce, name="fleet-window-producer", daemon=True
         )
-        assign = Assignment(
-            jnp.asarray(jv.reshape(n_rep * Tc, n_pad)),
-            jnp.asarray(lv.reshape(n_rep * Tc, n_pad)),
-        )
-        if ccfg.enabled:
-            phi_c = jnp.asarray(pc.reshape(n_rep * Tc, M))
-            phi_e = jnp.asarray(pe.reshape(n_rep * Tc, M))
-            mbatch = dataclasses.replace(
-                batch,
-                ctime=congested_ctime(batch, jnp.asarray(tq_flat), phi_c, phi_e),
-            )
-            phi_frames[:, t0:t1] = pc
-        else:
-            mbatch = batch
+        prod_thread.start()
 
-        sat = np.asarray(satisfied_mask(mbatch, assign.j, assign.l))
-        us = np.asarray(mean_us(mbatch, assign.j, assign.l))
-        real = np.arange(n_pad)[None, :] < n_real.reshape(-1)[:, None]
-        served = (np.asarray(assign.j) >= 0) & real
-        sat = sat & real
-        sat_frames[:, t0:t1] = sat.sum(-1).reshape(n_rep, Tc)
-        served_frames[:, t0:t1] = served.sum(-1).reshape(n_rep, Tc)
-        us_frames[:, t0:t1] = us.reshape(n_rep, Tc)
-        n_real_frames[:, t0:t1] = n_real
+    def next_window(t0: int):
+        """The consumer's pull: inline build when serial, else a queue get
+        whose wait time is exactly the un-hidden host cost (gen_s)."""
+        if prod_thread is None:
+            return build_window(t0)
+        item = work_q.get()
+        if isinstance(item, BaseException):
+            raise item
+        return item
+
+    try:
+        for wi_t0 in window_starts:
+            t_gen = time.perf_counter()
+            t0, t1, Tc, batch, batch_rt, n_real, tq_flat = next_window(wi_t0)
+            gen_s += time.perf_counter() - t_gen
+            keys_rt = keys_all[:, t0:t1]
+
+            def run_group(g):
+                sl = slice(g * G, (g + 1) * G)
+                dev = group_devices[g % n_dev]
+                c, out = run(
+                    carries[g],
+                    to_device(jax.tree.map(lambda x: x[sl], batch_rt), dev),
+                    to_device(keys_rt[sl], dev),
+                )
+                # materialize here (XLA releases the GIL while computing, so
+                # worker threads overlap groups across devices); the carry stays
+                # device-resident for the next window
+                return c, tuple(np.asarray(o) for o in out)
+
+            t_disp = time.perf_counter()
+            if executor is None:
+                results = [run_group(g) for g in range(n_groups)]
+            else:
+                results = list(executor.map(run_group, range(n_groups)))
+            dispatch_s += time.perf_counter() - t_disp
+            for g, (c, _) in enumerate(results):
+                carries[g] = c
+            jv, lv, pc, pe = (
+                np.concatenate([r[1][part] for r in results])[:n_rep]
+                for part in range(4)
+            )
+            assign = Assignment(
+                jnp.asarray(jv.reshape(n_rep * Tc, n_pad)),
+                jnp.asarray(lv.reshape(n_rep * Tc, n_pad)),
+            )
+            if ccfg.enabled:
+                phi_c = jnp.asarray(pc.reshape(n_rep * Tc, M))
+                phi_e = jnp.asarray(pe.reshape(n_rep * Tc, M))
+                mbatch = dataclasses.replace(
+                    batch,
+                    ctime=congested_ctime(batch, jnp.asarray(tq_flat), phi_c, phi_e),
+                )
+                phi_frames[:, t0:t1] = pc
+            else:
+                mbatch = batch
+
+            sat = np.asarray(satisfied_mask(mbatch, assign.j, assign.l))
+            us = np.asarray(mean_us(mbatch, assign.j, assign.l))
+            real = np.arange(n_pad)[None, :] < n_real.reshape(-1)[:, None]
+            served = (np.asarray(assign.j) >= 0) & real
+            sat = sat & real
+            sat_frames[:, t0:t1] = sat.sum(-1).reshape(n_rep, Tc)
+            served_frames[:, t0:t1] = served.sum(-1).reshape(n_rep, Tc)
+            us_frames[:, t0:t1] = us.reshape(n_rep, Tc)
+            n_real_frames[:, t0:t1] = n_real
+
+    finally:
+        if prod_thread is not None:
+            # early exit or error: unblock the producer (it polls the stop
+            # event between put attempts), drain whatever it queued, join
+            stop_producer.set()
+            while prod_thread.is_alive():
+                try:
+                    work_q.get_nowait()
+                except queue_mod.Empty:
+                    pass
+                prod_thread.join(timeout=0.05)
+            prod_thread.join()
 
     if executor is not None:
         executor.shutdown(wait=False)
@@ -1224,6 +1435,8 @@ def simulate_fleet(
         n_devices=n_dev,
         window=W,
         dispatch_s=dispatch_s,
+        gen_s=gen_s,
+        prefetch=prefetch if prod_thread is not None else 0,
     )
 
 
@@ -1238,6 +1451,7 @@ def _simulate_fleet_host(
     T: int,
     n_pad: int,
     seed: int,
+    gen_s: float = 0.0,
 ) -> FleetResult:
     """Host-side fleet path for non-vmappable / non-padding policies (the
     ILP / LP-bound oracles): schedule each *unpadded* frame in a Python
@@ -1260,9 +1474,14 @@ def _simulate_fleet_host(
             spec.bandwidth_true, cfg.max_cs, gamma=gamma, eta=eta,
         ))
         if bucket:
-            tq_flat[i, : len(bucket)] = [
-                frame_start + cfg.frame_ms - r.arrival_ms for r in bucket
-            ]
+            if isinstance(bucket, RequestColumns):
+                tq_flat[i, : len(bucket)] = (
+                    frame_start + cfg.frame_ms - bucket.arrival_ms
+                )
+            else:
+                tq_flat[i, : len(bucket)] = [
+                    frame_start + cfg.frame_ms - r.arrival_ms for r in bucket
+                ]
     batch = stack_instances([pad_instance(r, n_pad) for r in raw_insts])
 
     fn = pol.bind(spec.n_edge, spec.n_servers)
@@ -1345,6 +1564,7 @@ def _simulate_fleet_host(
         mean_compute_inflation=float(np.mean(phi_c)) if ccfg.enabled else 1.0,
         n_devices=1,
         window=T,
+        gen_s=gen_s,
     )
 
 

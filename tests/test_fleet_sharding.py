@@ -182,6 +182,111 @@ def test_window_bounds_memory_not_results_on_long_horizon():
 
 
 # ---------------------------------------------------------------------------
+# Overlapped dispatch pipeline (prefetch) — bit-identical to the serial loop
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", VMAPPABLE)
+@pytest.mark.parametrize("congestion", [False, True], ids=["plain", "congestion"])
+def test_prefetch_bitwise_parity_every_policy(policy, congestion):
+    """The producer thread does the same host work in the same order as the
+    serial loop, so prefetch>0 == prefetch=0 (the pre-overlap pipeline) for
+    every vmappable policy, congestion on or off."""
+    cfg = fleet_cfg(congestion)
+    serial = simulate_fleet(SPEC, cfg, policy=policy, n_rep=6, seed=0, prefetch=0)
+    assert serial.prefetch == 0
+    for pf in (1, 2):
+        overlapped = simulate_fleet(SPEC, cfg, policy=policy, n_rep=6, seed=0, prefetch=pf)
+        assert overlapped.prefetch == pf
+        msg = f"{policy} congestion={congestion} prefetch={pf}"
+        assert_fleet_identical(serial, overlapped, msg)
+
+
+@pytest.mark.parametrize("scenario", ["paper-default", "diurnal-week", "sustained-overload"])
+def test_prefetch_parity_windowed_and_materialized(scenario):
+    """prefetch composes with window= (where the overlap actually bites) on
+    materialized and streaming scenarios alike."""
+    cfg = fleet_cfg(congestion=True)
+    serial = simulate_fleet(SPEC, cfg, policy="gus", n_rep=3, seed=0, scenario=scenario, prefetch=0)
+    for window in (None, 2, 5):
+        overlapped = simulate_fleet(
+            SPEC, cfg, policy="gus", n_rep=3, seed=0, scenario=scenario, window=window, prefetch=2
+        )
+        assert_fleet_identical(serial, overlapped, f"{scenario} window={window}")
+
+
+def test_prefetch_parity_with_keyed_policy():
+    cfg = fleet_cfg()
+    serial = simulate_fleet(SPEC, cfg, policy="random", n_rep=3, seed=7, window=2, prefetch=0)
+    overlapped = simulate_fleet(SPEC, cfg, policy="random", n_rep=3, seed=7, window=2, prefetch=2)
+    assert_fleet_identical(serial, overlapped)
+
+
+@multi_device
+@pytest.mark.parametrize("congestion", [False, True], ids=["plain", "congestion"])
+def test_prefetch_parity_on_multi_device_mesh(congestion):
+    """prefetch>0 stays bit-identical when the replication axis is sharded:
+    the producer feeds the same groups to the same compiled program."""
+    cfg = fleet_cfg(congestion)
+    serial = simulate_fleet(SPEC, cfg, policy="gus", n_rep=12, seed=0, devices=1, prefetch=0)
+    both = simulate_fleet(
+        SPEC, cfg, policy="gus", n_rep=12, seed=0, devices=N_DEV, window=3, prefetch=2
+    )
+    assert both.n_devices == N_DEV
+    assert_fleet_identical(serial, both, f"congestion={congestion}")
+
+
+def test_gen_s_is_reported_and_bounded_by_wall():
+    import time
+
+    t0 = time.perf_counter()
+    fr = simulate_fleet(SPEC, fleet_cfg(), policy="gus", n_rep=4, seed=0, prefetch=1)
+    wall = time.perf_counter() - t0
+    assert fr.gen_s > 0.0
+    assert fr.gen_s <= wall + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Vectorized rng mode on the fleet: same invariants, different (opt-in) trace
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scenario", ["paper-default", "diurnal-week", "flash-crowd"])
+@pytest.mark.parametrize("congestion", [False, True], ids=["plain", "congestion"])
+def test_vectorized_windowed_matches_materialized(scenario, congestion):
+    """In rng_mode='vectorized' the materialized grid is columnar and the
+    windowed/lazy path streams Request objects — they must still agree bit
+    for bit (one chunk engine underneath)."""
+    cfg = fleet_cfg(congestion)
+    kw = dict(policy="gus", n_rep=2, seed=0, scenario=scenario, rng_mode="vectorized")
+    full = simulate_fleet(SPEC, cfg, prefetch=0, **kw)
+    for window in (1, 2, 5):
+        windowed = simulate_fleet(SPEC, cfg, window=window, prefetch=2, **kw)
+        assert_fleet_identical(full, windowed, f"{scenario} window={window}")
+
+
+def test_vectorized_fleet_deterministic_and_close_to_default():
+    """Different RNG order, same law: satisfied-% from the two modes must
+    agree within Monte-Carlo noise at moderate replication counts."""
+    cfg = fleet_cfg()
+    v1 = simulate_fleet(SPEC, cfg, policy="gus", n_rep=16, seed=0, rng_mode="vectorized")
+    v2 = simulate_fleet(SPEC, cfg, policy="gus", n_rep=16, seed=0, rng_mode="vectorized")
+    assert_fleet_identical(v1, v2, "vectorized determinism")
+    d = simulate_fleet(SPEC, cfg, policy="gus", n_rep=16, seed=0)
+    assert abs(v1.satisfied_pct - d.satisfied_pct) < 6.0
+
+
+@multi_device
+@pytest.mark.parametrize("congestion", [False, True], ids=["plain", "congestion"])
+def test_vectorized_sharded_bitwise_parity(congestion):
+    cfg = fleet_cfg(congestion)
+    kw = dict(policy="gus", n_rep=12, seed=0, rng_mode="vectorized")
+    single = simulate_fleet(SPEC, cfg, devices=1, **kw)
+    sharded = simulate_fleet(SPEC, cfg, devices=N_DEV, window=3, prefetch=2, **kw)
+    assert_fleet_identical(single, sharded, f"vectorized congestion={congestion}")
+
+
+# ---------------------------------------------------------------------------
 # The sequential testbed stays the parity anchor
 # ---------------------------------------------------------------------------
 

@@ -2,6 +2,7 @@
 bounded-memory invariants, the streaming scenarios, and simulate/fleet runs
 off the stream."""
 import math
+import threading
 
 import numpy as np
 import pytest
@@ -181,6 +182,144 @@ def test_fleet_rep0_arrivals_match_sequential_stream():
     fr = simulate_fleet(spec, c, policy="gus", scenario="sustained-overload",
                         n_rep=1, seed=7)
     assert fr.n_requests == len(reqs)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized stream mode: chunking invariance + determinism off the stream
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scenario", sorted(["paper-default", "diurnal", "flash-crowd",
+                                             "hetero-tiers", "sustained-overload",
+                                             "diurnal-week"]))
+@pytest.mark.parametrize("chunk_ms", [250.0, 3000.0, 7777.0])
+def test_vectorized_streaming_chunk_invariance(scenario, chunk_ms):
+    """The vectorized stream buffers numpy chunks per edge, but the pull
+    pattern still cannot change the draws — frame-by-frame == one-shot."""
+    c = cfg()
+    one_shot = stream_trace(scenario, 11, 4, 3, c, rng_mode="vectorized")
+    s = ArrivalStream(scenario, 11, 4, 3, c, rng_mode="vectorized")
+    chunked = []
+    t = 0.0
+    while not s.exhausted:
+        t += chunk_ms
+        chunked.extend(s.take_until(t))
+    assert [_req_tuple(r) for r in chunked] == [_req_tuple(r) for r in one_shot]
+
+
+def test_vectorized_stream_bounded_lookahead_and_order():
+    s = ArrivalStream("paper-default", 0, 6, 3, cfg(), rng_mode="vectorized")
+    assert len(s._heap) <= 6
+    first = s.take_until(5000.0)
+    assert all(r.arrival_ms < 5000.0 for r in first)
+    assert len(s._heap) <= 6
+    times = [r.arrival_ms for r in first]
+    assert times == sorted(times)
+    assert [r.rid for r in first] == list(range(len(first)))
+
+
+def test_simulate_streaming_vectorized_deterministic():
+    spec = demo_cluster_spec()
+    a = simulate(spec, cfg(), policy="gus", scenario="sustained-overload", seed=0,
+                 rng_mode="vectorized")
+    b = simulate(spec, cfg(), policy="gus", scenario="sustained-overload", seed=0,
+                 rng_mode="vectorized")
+    assert a.as_dict() == b.as_dict()
+    assert a.n_served + a.n_dropped == a.n_requests
+    assert a.n_requests > 0
+
+
+# ---------------------------------------------------------------------------
+# Overlapped window pipeline: thread safety, shutdown, long-horizon parity
+# ---------------------------------------------------------------------------
+
+
+def _producer_threads():
+    return [
+        t for t in threading.enumerate() if t.name == "fleet-window-producer"
+    ]
+
+
+def test_producer_exception_propagates_without_hang():
+    """An exception inside the host-side window builder must surface to the
+    caller (not deadlock the queue) and leave no producer thread behind."""
+    import repro.core.simulator as sim_mod
+
+    spec = demo_cluster_spec()
+    real_build = sim_mod._build_frame_batch
+    calls = {"n": 0}
+
+    def exploding_build(*args, **kw):
+        calls["n"] += 1
+        if calls["n"] >= 2:  # let window 0 through, fail while overlapped
+            raise RuntimeError("boom in host builder")
+        return real_build(*args, **kw)
+
+    sim_mod._build_frame_batch = exploding_build
+    try:
+        with pytest.raises(RuntimeError, match="boom in host builder"):
+            simulate_fleet(spec, cfg(), policy="gus", n_rep=2, seed=0,
+                           window=2, prefetch=2)
+    finally:
+        sim_mod._build_frame_batch = real_build
+    for t in _producer_threads():
+        t.join(timeout=5.0)
+    assert not [t for t in _producer_threads() if t.is_alive()]
+
+
+def test_consumer_error_drains_producer_and_joins():
+    """If the *consumer* dies mid-run (device-side error), the early exit
+    must drain the bounded queue so the producer unblocks and joins."""
+    import repro.core.simulator as sim_mod
+
+    spec = demo_cluster_spec()
+    real_mask = sim_mod.satisfied_mask
+    calls = {"n": 0}
+
+    def exploding_mask(*args, **kw):
+        calls["n"] += 1
+        if calls["n"] >= 2:
+            raise RuntimeError("boom in consumer")
+        return real_mask(*args, **kw)
+
+    sim_mod.satisfied_mask = exploding_mask
+    try:
+        with pytest.raises(RuntimeError, match="boom in consumer"):
+            # depth-1 queue + tiny windows: the producer is guaranteed to be
+            # blocked in put() when the consumer raises
+            simulate_fleet(spec, cfg(), policy="gus", n_rep=2, seed=0,
+                           window=1, prefetch=1)
+    finally:
+        sim_mod.satisfied_mask = real_mask
+    for t in _producer_threads():
+        t.join(timeout=5.0)
+    assert not [t for t in _producer_threads() if t.is_alive()]
+
+
+def test_no_producer_thread_leak_on_success():
+    spec = demo_cluster_spec()
+    before = len([t for t in _producer_threads() if t.is_alive()])
+    simulate_fleet(spec, cfg(), policy="gus", n_rep=2, seed=0, window=2, prefetch=2)
+    assert len([t for t in _producer_threads() if t.is_alive()]) == before
+
+
+@pytest.mark.slow
+def test_sustained_overload_long_horizon_overlap_matches_serial():
+    """A long-horizon streaming run under the overlapped pipeline (lazy
+    per-window arrivals built in the producer thread) is bit-identical to
+    the serial loop — the satellite case the ISSUE calls out."""
+    spec = demo_cluster_spec()
+    c = cfg(horizon_ms=240_000.0, arrival_rate_per_s=2.0)
+    serial = simulate_fleet(spec, c, policy="gus", n_rep=2, seed=3,
+                            scenario="sustained-overload", window=4, prefetch=0)
+    overlapped = simulate_fleet(spec, c, policy="gus", n_rep=2, seed=3,
+                                scenario="sustained-overload", window=4, prefetch=2)
+    assert serial.n_requests == overlapped.n_requests
+    assert serial.n_served == overlapped.n_served
+    np.testing.assert_array_equal(
+        serial.satisfied_per_rep, overlapped.satisfied_per_rep
+    )
+    np.testing.assert_array_equal(serial.mean_us_per_rep, overlapped.mean_us_per_rep)
 
 
 @pytest.mark.slow
