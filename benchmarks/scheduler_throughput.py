@@ -6,12 +6,23 @@ the number that determines how many edge frames per second one controller
 can schedule.  Prints CSV (impl,batch,instances_per_s,us_per_call) and
 writes ``results/scheduler_throughput/BENCH_scheduler.json``.
 
+Two device backends are measured: the jitted XLA loop (``jax-jit`` /
+``jax-vmap`` rows) and the fused Pallas kernel (``pallas`` rows, see
+:mod:`repro.kernels.gus_pallas`).  Before any Pallas row is timed its
+assignments are asserted **bit-identical** to the XLA path — a CPU run
+(interpret mode) therefore gates *parity*, while an accelerator run also
+gates *speed*: on TPU the Pallas rows are compiled Mosaic, enter the
+baseline gate, and the batch-64 Pallas point must be no slower than the
+batch-64 XLA point.
+
 CI gates on it: ``--compare benchmarks/baselines/BENCH_scheduler.json
---tolerance 0.50`` fails when a jitted row's throughput regresses by more
+--tolerance 0.50`` fails when a gated row's throughput regresses by more
 than the band against the checked-in baseline (the wide band absorbs
 shared-runner noise; ``--update-baseline`` refreshes the file).  The
-un-jitted numpy oracle row is reported but never gated — it is a parity
-reference, not a product.
+un-jitted numpy oracle row and interpret-mode Pallas rows are reported but
+never gated — parity references, not products.  The report's ``meta``
+records the jax/jaxlib versions and the device platform/kind so baseline
+mismatches across containers are diagnosable from the JSON alone.
 
 Run:
 
@@ -27,6 +38,8 @@ import time
 from pathlib import Path
 
 import jax
+import jaxlib
+import numpy as np
 
 from repro.core import (
     GeneratorConfig,
@@ -36,6 +49,7 @@ from repro.core import (
     gus_schedule_batch,
     gus_schedule_np,
 )
+from repro.kernels.gus_pallas import gus_pallas_interpret_default
 
 from .common import csv_row, gate_rows_against_baseline
 
@@ -50,9 +64,39 @@ def _time(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps
 
 
+def _env_meta() -> dict:
+    """Toolchain + device identity for cross-container baseline forensics."""
+    dev = jax.devices()[0]
+    return {
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "device_platform": dev.platform,
+        "device_kind": dev.device_kind,
+        "n_devices": jax.local_device_count(),
+        "pallas_interpret": gus_pallas_interpret_default(),
+    }
+
+
+def _assert_bit_parity(a, b, what: str):
+    """Integer assignments must agree exactly — the Pallas rows are only
+    timed after they have earned their place on the same plot."""
+    for field in ("j", "l"):
+        av, bv = np.asarray(getattr(a, field)), np.asarray(getattr(b, field))
+        if not np.array_equal(av, bv):
+            raise SystemExit(
+                f"scheduler bench: pallas/xla assignment mismatch on {what} "
+                f"({field}: {int((av != bv).sum())} cells differ) — refusing "
+                "to benchmark a kernel that is not bit-identical"
+            )
+
+
 def run(repeats: int = 3) -> dict:
     print("impl,batch,instances_per_s,us_per_call")
     inst = generate_instance(0, CFG)
+    env = _env_meta()
+    # interpret-mode (CPU) Pallas rows are parity evidence, not perf claims;
+    # only the compiled Mosaic path enters the perf gates
+    pallas_gated = not env["pallas_interpret"]
     rows = []
 
     def add(impl, batch, per_call_s, gated):
@@ -70,19 +114,61 @@ def run(repeats: int = 3) -> dict:
 
     add("numpy", 1, _time(lambda i: gus_schedule_np(i), inst, reps=1), gated=False)
     add("jax-jit", 1, _time(gus_schedule, inst, reps=repeats), gated=True)
+
+    pallas1 = lambda i: gus_schedule(i, backend="pallas")  # noqa: E731
+    _assert_bit_parity(pallas1(inst), gus_schedule(inst), "batch-1 instance")
+    add("pallas", 1, _time(pallas1, inst, reps=repeats), gated=pallas_gated)
+
+    pallas_b = lambda b: gus_schedule_batch(b, backend="pallas")  # noqa: E731
     for bs in (16, 64):
         batch = generate_batch(0, bs, CFG)
-        add("jax-vmap", bs, _time(gus_schedule_batch, batch, reps=repeats), gated=True)
+        add("jax-vmap", bs, _time(gus_schedule_batch, batch, reps=repeats),
+            gated=True)
+        _assert_bit_parity(
+            pallas_b(batch), gus_schedule_batch(batch), f"batch-{bs} grid"
+        )
+        add("pallas", bs, _time(pallas_b, batch, reps=repeats),
+            gated=pallas_gated)
 
     return {
         "meta": {
             "bench": "scheduler_throughput",
-            "jax": jax.__version__,
             "n_requests": CFG.n_requests,
             "repeats": repeats,
+            **env,
         },
         "rows": rows,
     }
+
+
+def _row(report: dict, impl: str, batch: int):
+    return next(
+        (r for r in report["rows"] if r["impl"] == impl and r["batch"] == batch),
+        None,
+    )
+
+
+def gate_pallas_vs_xla(report: dict, slack: float = 0.10):
+    """Accelerator-only speed gate: the compiled Pallas kernel must be no
+    slower than the jitted XLA path at the batch-64 bench point (``slack``
+    absorbs timer noise).  Interpret-mode (CPU) runs skip this — there the
+    Pallas rows gate parity, not speed."""
+    if report["meta"].get("pallas_interpret", True):
+        print("pallas-vs-xla speed gate skipped (interpret mode: parity-only)")
+        return
+    xla = _row(report, "jax-vmap", 64)
+    pal = _row(report, "pallas", 64)
+    if xla is None or pal is None:
+        raise SystemExit("scheduler bench: missing batch-64 row for the "
+                         "pallas-vs-xla gate")
+    if pal["instances_per_s"] < xla["instances_per_s"] * (1.0 - slack):
+        raise SystemExit(
+            f"scheduler perf gate: pallas batch-64 {pal['instances_per_s']} "
+            f"inst/s is slower than xla {xla['instances_per_s']} inst/s "
+            f"(allowed slack {slack:.0%})"
+        )
+    print(f"pallas-vs-xla speed gate OK ({pal['instances_per_s']} vs "
+          f"{xla['instances_per_s']} inst/s at batch 64)")
 
 
 def compare_against_baseline(report: dict, baseline_path: str, tolerance: float):
@@ -126,6 +212,7 @@ def main(argv=None):
         Path(args.update_baseline).write_text(json.dumps(report, indent=2))
         print(f"baseline refreshed at {args.update_baseline}")
     if args.compare:
+        gate_pallas_vs_xla(report)
         compare_against_baseline(report, args.compare, args.tolerance)
     return True
 

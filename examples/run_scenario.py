@@ -66,6 +66,11 @@ def main(argv=None):
                          "traces), 'vectorized' batches the draws in numpy "
                          "(~10x faster generation, same distribution, "
                          "different seed-deterministic traces)")
+    ap.add_argument("--backend", choices=["xla", "pallas"], default=None,
+                    help="GUS scheduler implementation: 'xla' jitted loop "
+                         "(default) or 'pallas' fused kernel (interpret mode "
+                         "off-TPU; bit-identical assignments either way). "
+                         "Applies to the default/'gus' policy only")
     ap.add_argument("--congestion", action="store_true",
                     help="enable load-dependent service times (queueing model)")
     stream = ap.add_mutually_exclusive_group()
@@ -113,9 +118,16 @@ def main(argv=None):
         {"scheduler": gus_schedule_np} if args.policy == "gus-np"
         else {"policy": args.policy}
     )
+    if args.backend is not None:
+        if args.policy == "gus-np":
+            raise SystemExit("--backend selects the jitted GUS implementation; "
+                             "gus-np is the host-side NumPy oracle")
+        sim_kw["backend"] = args.backend
     mode = []
     if args.congestion:
         mode.append("congestion")
+    if args.backend == "pallas":
+        mode.append("pallas-backend")
     if args.streaming or (args.streaming is None and scn.streaming):
         mode.append("streaming")
     if args.rng_mode == "vectorized" or (args.rng_mode is None and scn.rng_mode == "vectorized"):

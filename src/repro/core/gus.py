@@ -1,31 +1,73 @@
 """GUS — the paper's greedy scheduler (Algorithm 1) as a composable JAX module.
 
-Two implementations:
+Three implementations behind one dispatcher:
 
 * ``gus_schedule_np``  — direct NumPy transcription of Algorithm 1 (the oracle).
-* ``gus_schedule``     — pure-JAX: ``lax.fori_loop`` over requests (the greedy
+* ``backend="xla"``    — pure-JAX: ``lax.fori_loop`` over requests (the greedy
   is sequential in its capacity state) with fully vectorized masked-argmax over
   the (M, L) candidate grid per step.  ``jit``-able and ``vmap``-able over a
   leading instance-batch axis — the paper's 20 000 Monte-Carlo repetitions
-  become one device program.
+  become one device program.  The default.
+* ``backend="pallas"`` — the fused Pallas kernel
+  (:mod:`repro.kernels.gus_pallas`): utility computation, feasibility and the
+  greedy capacity loop in one on-chip program, one grid step per frame in the
+  batch.  Compiled Mosaic on TPU; ``interpret=True`` (plain jax ops) on CPU,
+  which is how CI validates it.
 
-Both return ``Assignment(j, l)`` with j = l = -1 encoding *drop*.
+All three return ``Assignment(j, l)`` with j = l = -1 encoding *drop* and are
+held to **bit-identical** assignments on the same frame — integer outputs, so
+exact equality, not tolerance, is the test bar (``tests/test_gus_parity.py``).
+The backend is picked per call (``backend=``) or process-wide via the
+``REPRO_GUS_BACKEND`` environment variable (read when no explicit ``backend=``
+is passed; the default is ``"xla"``).
+
+The shared tie-break rule: among equal-utility feasible candidates, the lowest
+flat ``(j * L + l)`` index wins.  The JAX paths get this from ``argmax``'s
+first-occurrence semantics; the NumPy oracle uses a *stable* descending sort
+so duplicate-utility frames (padding rows, quantized QoS tiers) cannot drift
+between implementations.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import os
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.gus_pallas import gus_assign_pallas
+
 from .instance import FlatInstance
 from .satisfaction import hard_feasible, us_tensor
 
-__all__ = ["Assignment", "gus_schedule", "gus_schedule_np", "gus_schedule_batch"]
+__all__ = [
+    "Assignment",
+    "GUS_BACKENDS",
+    "gus_schedule",
+    "gus_schedule_np",
+    "gus_schedule_batch",
+    "gus_backend_fn",
+    "resolve_gus_backend",
+]
 
 NEG = -1e30
+
+#: registered GUS dispatch backends (``gus_schedule``'s ``backend=``)
+GUS_BACKENDS = ("xla", "pallas")
+
+
+def resolve_gus_backend(backend=None) -> str:
+    """Resolve a ``backend=`` argument: explicit value, else the
+    ``REPRO_GUS_BACKEND`` environment variable, else ``"xla"``."""
+    b = backend if backend is not None else os.environ.get("REPRO_GUS_BACKEND", "xla")
+    if b not in GUS_BACKENDS:
+        raise ValueError(
+            f"unknown GUS backend {b!r}; expected one of {', '.join(GUS_BACKENDS)}"
+        )
+    return b
 
 
 @jax.tree_util.register_dataclass
@@ -66,8 +108,12 @@ def gus_schedule_np(inst: FlatInstance) -> Assignment:
 
     for i in range(N):  # foreach request (line 1)
         s_i = cover[i]  # line 2
-        # line 3: servers sorted by US descending
-        order = np.argsort(-us[i], axis=None)
+        # line 3: servers sorted by US descending.  The sort is *stable* so
+        # equal-utility candidates keep ascending flat (j*L + l) order — the
+        # same tie-break argmax's first-occurrence rule gives the JAX and
+        # Pallas backends, which is what makes bit-parity well-defined on
+        # duplicate-utility frames.
+        order = np.argsort(-us[i], axis=None, kind="stable")
         for flat in order:
             j, l = divmod(int(flat), L)
             # line 4: deadline, accuracy floor, compute capacity, placement
@@ -125,15 +171,13 @@ def _gus_body(i, state, *, inst, us, feas):
 
 
 @partial(jax.jit, static_argnames=("relax_compute", "relax_comm"))
-def gus_schedule(
+def _gus_schedule_xla(
     inst: FlatInstance,
     *,
     relax_compute: bool = False,
     relax_comm: bool = False,
 ) -> Assignment:
-    """Run GUS on one instance.  ``relax_*`` implement the paper's
-    Happy-Computation / Happy-Communication baselines (constraints 2d/2e
-    dropped)."""
+    """The jitted XLA implementation (the default backend)."""
     us = us_tensor(inst)
     feas = hard_feasible(inst)
     N = us.shape[0]
@@ -141,6 +185,8 @@ def gus_schedule(
     eta0 = jnp.full_like(inst.eta, jnp.inf) if relax_comm else inst.eta
     out_j = jnp.full((N,), -1, jnp.int32)
     out_l = jnp.full((N,), -1, jnp.int32)
+    if N == 0:  # static under jit; fori_loop would trace a size-0 gather
+        return Assignment(out_j, out_l)
     body = partial(_gus_body, inst=inst, us=us, feas=feas)
     gamma, eta, out_j, out_l = jax.lax.fori_loop(
         0, N, body, (gamma0, eta0, out_j, out_l)
@@ -148,12 +194,121 @@ def gus_schedule(
     return Assignment(out_j, out_l)
 
 
+def _relaxed_budgets(inst: FlatInstance, relax_compute: bool, relax_comm: bool):
+    """The Happy-* budget substitution, shared by both JAX backends."""
+    gamma0 = jnp.full_like(inst.gamma, jnp.inf) if relax_compute else inst.gamma
+    eta0 = jnp.full_like(inst.eta, jnp.inf) if relax_comm else inst.eta
+    return gamma0, eta0
+
+
+@partial(jax.jit, static_argnames=("relax_compute", "relax_comm", "interpret"))
+def _gus_schedule_pallas(
+    inst: FlatInstance,
+    *,
+    relax_compute: bool = False,
+    relax_comm: bool = False,
+    interpret: bool = True,
+) -> Assignment:
+    """Single-frame entry to the fused Pallas kernel (batch of one grid
+    program; ``vmap`` lifts it to one program per batched frame)."""
+    gamma0, eta0 = _relaxed_budgets(inst, relax_compute, relax_comm)
+    add = lambda x: jnp.asarray(x)[None]  # noqa: E731 — lift to batch of 1
+    j, l = gus_assign_pallas(
+        add(inst.cover), add(inst.A), add(inst.C), add(inst.w_a), add(inst.w_c),
+        add(inst.acc), add(inst.ctime), add(inst.v), add(inst.u), add(inst.avail),
+        add(gamma0), add(eta0), add(inst.max_as), add(inst.max_cs),
+        interpret=interpret,
+    )
+    return Assignment(j[0], l[0])
+
+
+@partial(jax.jit, static_argnames=("relax_compute", "relax_comm", "interpret"))
+def _gus_schedule_batch_pallas(
+    batch: FlatInstance,
+    *,
+    relax_compute: bool = False,
+    relax_comm: bool = False,
+    interpret: bool = True,
+) -> Assignment:
+    """Natively-batched Pallas entry: grid = the leading batch axis, one
+    grid program per frame — no vmap lifting."""
+    gamma0, eta0 = _relaxed_budgets(batch, relax_compute, relax_comm)
+    j, l = gus_assign_pallas(
+        batch.cover, batch.A, batch.C, batch.w_a, batch.w_c,
+        batch.acc, batch.ctime, batch.v, batch.u, batch.avail,
+        gamma0, eta0, batch.max_as, batch.max_cs,
+        interpret=interpret,
+    )
+    return Assignment(j, l)
+
+
+def _pallas_interpret() -> bool:
+    from repro.kernels.gus_pallas import gus_pallas_interpret_default
+
+    return gus_pallas_interpret_default()
+
+
+def gus_schedule(
+    inst: FlatInstance,
+    *,
+    relax_compute: bool = False,
+    relax_comm: bool = False,
+    backend: str = None,
+) -> Assignment:
+    """Run GUS on one instance.  ``relax_*`` implement the paper's
+    Happy-Computation / Happy-Communication baselines (constraints 2d/2e
+    dropped).  ``backend`` selects the implementation (``"xla"`` jitted
+    loop, ``"pallas"`` fused kernel; ``None`` defers to the
+    ``REPRO_GUS_BACKEND`` environment variable) — assignments are
+    bit-identical across backends."""
+    if resolve_gus_backend(backend) == "pallas":
+        return _gus_schedule_pallas(
+            inst, relax_compute=relax_compute, relax_comm=relax_comm,
+            interpret=_pallas_interpret(),
+        )
+    return _gus_schedule_xla(
+        inst, relax_compute=relax_compute, relax_comm=relax_comm
+    )
+
+
 @partial(jax.jit, static_argnames=("relax_compute", "relax_comm"))
-def gus_schedule_batch(
+def _gus_schedule_batch_xla(
     batch: FlatInstance, *, relax_compute: bool = False, relax_comm: bool = False
 ) -> Assignment:
-    """vmapped GUS over a leading instance-batch axis (Monte-Carlo runs)."""
     fn = partial(
-        gus_schedule, relax_compute=relax_compute, relax_comm=relax_comm
+        _gus_schedule_xla, relax_compute=relax_compute, relax_comm=relax_comm
     )
     return jax.vmap(fn)(batch)
+
+
+def gus_schedule_batch(
+    batch: FlatInstance,
+    *,
+    relax_compute: bool = False,
+    relax_comm: bool = False,
+    backend: str = None,
+) -> Assignment:
+    """GUS over a leading instance-batch axis (Monte-Carlo runs): vmapped
+    XLA by default, or the natively-batched Pallas kernel (one grid program
+    per frame) with ``backend="pallas"``."""
+    if resolve_gus_backend(backend) == "pallas":
+        return _gus_schedule_batch_pallas(
+            batch, relax_compute=relax_compute, relax_comm=relax_comm,
+            interpret=_pallas_interpret(),
+        )
+    return _gus_schedule_batch_xla(
+        batch, relax_compute=relax_compute, relax_comm=relax_comm
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def gus_backend_fn(backend: str):
+    """A stable-identity ``FlatInstance -> Assignment`` callable for one
+    backend.  The fleet runner's compiled-program cache keys on the schedule
+    function's identity, so ad-hoc ``partial(gus_schedule, backend=...)``
+    objects would force a re-trace per call — this cache hands every caller
+    the same object per backend."""
+    backend = resolve_gus_backend(backend)
+    if backend == "xla":
+        return gus_schedule  # the default object every existing cache keys on
+    return functools.partial(gus_schedule, backend=backend)

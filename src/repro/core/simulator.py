@@ -65,7 +65,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .gus import Assignment, gus_schedule
+from .gus import Assignment, gus_backend_fn, gus_schedule
 from .instance import FlatInstance, pad_instance, stack_instances
 from .policies import Policy, get_policy
 from .queueing import (
@@ -463,6 +463,30 @@ def _resolve_policy(
     return None
 
 
+def _apply_backend(pol, scheduler, backend):
+    """Fold a ``backend=`` request into the (pol, scheduler) pair.
+
+    ``backend`` selects the *implementation* of the default GUS scheduler
+    (``"xla"`` jitted loop / ``"pallas"`` fused kernel — bit-identical
+    assignments, see :mod:`repro.core.gus`), so it only composes with the
+    default scheduler or the explicit ``"gus"`` policy; combining it with a
+    different policy or a raw callable is an error, not a silent no-op.
+    GUS-cored policies (``happy_*``) follow the ``REPRO_GUS_BACKEND``
+    environment variable instead.
+    """
+    if backend is None:
+        return pol, scheduler
+    if pol is not None and pol.name != "gus":
+        raise ValueError(
+            f"backend={backend!r} selects the default GUS scheduler's "
+            f"implementation; policy {pol.name!r} does not take it (set "
+            "REPRO_GUS_BACKEND to steer GUS-cored policies process-wide)"
+        )
+    if pol is None and scheduler is not None:
+        raise ValueError("pass either scheduler= or backend=, not both")
+    return None, gus_backend_fn(backend)
+
+
 class _ArrivalSource:
     """Uniform pull interface over the two arrival engines.
 
@@ -522,8 +546,14 @@ def simulate(
     n_requests: Optional[int] = None,
     streaming: Optional[bool] = None,
     rng_mode: Optional[str] = None,
+    backend: Optional[str] = None,
 ) -> SimResult:
     """Run the virtual testbed.
+
+    ``backend`` picks the default GUS scheduler's implementation on the
+    padded hot path (``"xla"`` jitted loop — the default — or ``"pallas"``
+    fused kernel; assignments are bit-identical, see :mod:`repro.core.gus`).
+    It composes only with the default scheduler / the ``"gus"`` policy.
 
     ``policy`` names a registered :class:`~repro.core.policies.Policy`
     (``"gus"``, ``"gus-ordered"``, the five baselines, ``"ilp"``,
@@ -566,6 +596,7 @@ def simulate(
     submissions (the paper's x-axis in Fig. 1(e)-(h) is total #requests).
     """
     pol = _resolve_policy(scheduler, policy)
+    pol, scheduler = _apply_backend(pol, scheduler, backend)
     pad = True
     stateful = False
     needs_key = False
@@ -1056,6 +1087,7 @@ def simulate_fleet(
     rep_group: Optional[int] = None,
     rng_mode: Optional[str] = None,
     prefetch: int = 1,
+    backend: Optional[str] = None,
 ) -> FleetResult:
     """Monte-Carlo fleet: R independent replications, one device program.
 
@@ -1137,8 +1169,15 @@ def simulate_fleet(
     congestion factors when ``cfg.congestion.enabled``.  Use
     :func:`simulate` for stochastic channel realizations and the EMA
     bandwidth estimator.
+
+    ``backend`` picks the default GUS scheduler's implementation for the
+    whole grid (``"xla"`` / ``"pallas"``, bit-identical assignments — the
+    Pallas kernel schedules one grid program per (replication, frame)
+    inside the same vmapped scan); it composes only with the default
+    scheduler / the ``"gus"`` policy.
     """
     pol = _resolve_policy(scheduler, policy)
+    pol, scheduler = _apply_backend(pol, scheduler, backend)
     scn = get_scenario(scenario)
     ccfg = cfg.congestion
     T = max(1, int(np.ceil(cfg.horizon_ms / cfg.frame_ms)))

@@ -1,0 +1,178 @@
+"""Fused Pallas kernel for the GUS greedy assignment core.
+
+One grid program schedules one frame: the per-candidate utility tensor
+(Eq. 1), hard feasibility, and the capacity-aware greedy argmax loop of
+Algorithm 1 all run fused in on-chip memory — the (N, M, L) candidate
+tensors are loaded into VMEM once and never round-trip to HBM between the
+utility computation and the N sequential greedy steps.  The grid is the
+frame batch, so a fleet's ``R`` replications (or a Monte-Carlo sweep's
+stacked instances) become ``R`` independent grid programs.
+
+Layout per program (all VMEM):
+
+  cover/A/C/w_a/w_c : (1, N)        request rows
+  acc/ctime/v/u     : (1, N, M, L)  candidate tensors, f32
+  avail             : (1, N, M, L)  placement mask, f32 0/1 (f32 keeps the
+                                    VMEM tiling uniform with the candidate
+                                    tensors; bool/i8 loads buy nothing here)
+  gamma/eta         : (1, M)        per-server budgets (greedy loop state)
+  scal              : (1, 2)        [max_as, max_cs] normalizers
+  out j/l           : (1, N)        int32 assignment (-1 = dropped)
+
+The greedy loop is a ``fori_loop`` whose carry holds the depleting budgets
+and the assignment vectors; each step is a masked argmax over the (M, L)
+candidate slab.  Bit-parity contract: the utility expression below is
+op-for-op the one in :func:`repro.core.satisfaction.us_tensor`, the
+feasibility mask matches :func:`~repro.core.satisfaction.hard_feasible`,
+and the loop body mirrors ``repro.core.gus._gus_body`` — integer
+assignments from this kernel must equal the jitted XLA path and the NumPy
+oracle *exactly* (``tests/test_gus_parity.py`` is the three-way harness).
+
+This module depends only on jax — never on ``repro.core`` (the core's GUS
+module imports *us*, and a reverse import would cycle).  ``interpret=True``
+runs the kernel body as plain jax ops, which is how the CPU CI validates
+it; on a TPU backend the default is the compiled Mosaic path.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["gus_assign_pallas", "gus_pallas_interpret_default"]
+
+#: matches ``repro.core.gus.NEG`` — the masked-out candidate score.  The
+#: parity bar requires the identical sentinel: a served/dropped decision is
+#: ``score > NEG`` in both implementations.
+NEG = -1e30
+
+
+def gus_pallas_interpret_default() -> bool:
+    """Interpret off (compiled Mosaic) on TPU, on everywhere else.
+
+    ``REPRO_PALLAS_INTERPRET=0|1`` overrides — e.g. force interpret on a TPU
+    host to debug, or assert the compiled path in an accelerator CI job.
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def _gus_kernel(
+    cover_ref, A_ref, C_ref, wa_ref, wc_ref,
+    acc_ref, ctime_ref, v_ref, u_ref, avail_ref,
+    gamma_ref, eta_ref, scal_ref,
+    j_ref, l_ref,
+    *, n_requests: int,
+):
+    cover = cover_ref[0]
+    A = A_ref[0]
+    C = C_ref[0]
+    w_a = wa_ref[0]
+    w_c = wc_ref[0]
+    acc = acc_ref[0]
+    ctime = ctime_ref[0]
+    v = v_ref[0]
+    u = u_ref[0]
+    avail = avail_ref[0] != 0.0
+    max_as = scal_ref[0, 0]
+    max_cs = scal_ref[0, 1]
+    M, L = acc.shape[1], acc.shape[2]
+
+    # --- fused utility + feasibility (us_tensor / hard_feasible, op-for-op)
+    acc_term = (acc - A[:, None, None]) / max_as
+    time_term = (C[:, None, None] - ctime) / max_cs
+    us = w_a[:, None, None] * acc_term + w_c[:, None, None] * time_term
+    feas = avail & (acc >= A[:, None, None]) & (ctime <= C[:, None, None])
+
+    # --- Algorithm 1's greedy loop (mirrors repro.core.gus._gus_body) ------
+    def body(i, state):
+        gamma, eta, out_j, out_l = state
+        s_i = jax.lax.dynamic_index_in_dim(cover, i, keepdims=False)
+        row_us = jax.lax.dynamic_index_in_dim(us, i, keepdims=False)
+        row_v = jax.lax.dynamic_index_in_dim(v, i, keepdims=False)
+        row_u = jax.lax.dynamic_index_in_dim(u, i, keepdims=False)
+        row_ok = jax.lax.dynamic_index_in_dim(feas, i, keepdims=False)
+        is_local = jnp.arange(M) == s_i
+        eta_s = jax.lax.dynamic_index_in_dim(eta, s_i, keepdims=False)
+
+        ok = row_ok & (row_v <= gamma[:, None]) & (is_local[:, None] | (row_u <= eta_s))
+        score = jnp.where(ok, row_us, NEG)
+        flat = jnp.argmax(score.reshape(-1))
+        any_ok = score.reshape(-1)[flat] > NEG
+        j = (flat // L).astype(jnp.int32)
+        l = (flat % L).astype(jnp.int32)
+
+        served = any_ok
+        offload = served & (j != s_i)
+        gamma = gamma.at[j].add(jnp.where(served, -row_v[j, l], 0.0))
+        eta = eta.at[s_i].add(jnp.where(offload, -row_u[j, l], 0.0))
+        out_j = out_j.at[i].set(jnp.where(served, j, -1))
+        out_l = out_l.at[i].set(jnp.where(served, l, -1))
+        return gamma, eta, out_j, out_l
+
+    init = (
+        gamma_ref[0],
+        eta_ref[0],
+        jnp.full((n_requests,), -1, jnp.int32),
+        jnp.full((n_requests,), -1, jnp.int32),
+    )
+    _, _, out_j, out_l = jax.lax.fori_loop(0, n_requests, body, init)
+    j_ref[0] = out_j
+    l_ref[0] = out_l
+
+
+def gus_assign_pallas(
+    cover, A, C, w_a, w_c, acc, ctime, v, u, avail, gamma, eta,
+    max_as, max_cs, *, interpret=None,
+):
+    """Run the fused GUS kernel on a batch of frames.
+
+    Shapes (leading batch axis ``B`` required; ``repro.core.gus`` adds it
+    for single frames): ``cover/A/C/w_a/w_c`` ``(B, N)``;
+    ``acc/ctime/v/u/avail`` ``(B, N, M, L)``; ``gamma/eta`` ``(B, M)``;
+    ``max_as/max_cs`` ``(B,)``.  Returns ``(j, l)`` int32 ``(B, N)`` arrays
+    with ``-1`` encoding *drop*.  ``interpret=None`` resolves via
+    :func:`gus_pallas_interpret_default`.
+    """
+    if interpret is None:
+        interpret = gus_pallas_interpret_default()
+    B, N, M, L = acc.shape
+    if N == 0:
+        empty = jnp.full((B, 0), -1, jnp.int32)
+        return empty, empty
+    scal = jnp.stack(
+        [jnp.broadcast_to(max_as, (B,)), jnp.broadcast_to(max_cs, (B,))], axis=-1
+    ).astype(jnp.float32)
+
+    row = pl.BlockSpec((1, N), lambda b: (b, 0))
+    cand = pl.BlockSpec((1, N, M, L), lambda b: (b, 0, 0, 0))
+    srv = pl.BlockSpec((1, M), lambda b: (b, 0))
+    out_j, out_l = pl.pallas_call(
+        functools.partial(_gus_kernel, n_requests=N),
+        grid=(B,),
+        in_specs=[row, row, row, row, row, cand, cand, cand, cand, cand,
+                  srv, srv, pl.BlockSpec((1, 2), lambda b: (b, 0))],
+        out_specs=[row, row],
+        out_shape=[jax.ShapeDtypeStruct((B, N), jnp.int32)] * 2,
+        interpret=interpret,
+    )(
+        cover.astype(jnp.int32),
+        A.astype(jnp.float32),
+        C.astype(jnp.float32),
+        w_a.astype(jnp.float32),
+        w_c.astype(jnp.float32),
+        acc.astype(jnp.float32),
+        ctime.astype(jnp.float32),
+        v.astype(jnp.float32),
+        u.astype(jnp.float32),
+        avail.astype(jnp.float32),
+        gamma.astype(jnp.float32),
+        eta.astype(jnp.float32),
+        scal,
+    )
+    return out_j, out_l

@@ -1,0 +1,109 @@
+"""Regenerate the golden GUS frame fixtures (``gus_golden_*.npz``).
+
+Each fixture is one *real* scheduler input — a padded frame captured from a
+short :func:`repro.core.simulate` run — plus the assignment the NumPy oracle
+produced for it.  ``tests/test_gus_parity.py::test_golden_frame`` pins all
+three GUS implementations (NumPy / XLA / Pallas) to these stored outputs, so
+any behaviour change in utility computation, feasibility, tie-breaking or
+the greedy loop shows up as a fixture diff instead of a silent drift.
+
+Three regimes are pinned:
+
+* ``paper-default``                  — the Sec. IV workload, light load;
+* ``flash-crowd``                    — bursty overload (big, busy frames);
+* ``sustained-overload-congested``   — the congestion model's
+  backlog-reduced budgets (the frame's gamma is strictly below the
+  cluster's per-frame budget).
+
+Regenerate (and commit the result) only when the scheduling semantics are
+*meant* to change:
+
+    PYTHONPATH=src python tests/fixtures/make_golden_frames.py
+"""
+from __future__ import annotations
+
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core import (
+    CongestionConfig,
+    SimConfig,
+    demo_cluster_spec,
+    gus_schedule,
+    gus_schedule_np,
+    simulate,
+)
+
+OUT_DIR = Path(__file__).parent
+
+LEAVES = ("cover", "A", "C", "w_a", "w_c", "acc", "ctime", "v", "u",
+          "avail", "gamma", "eta", "max_as", "max_cs")
+
+#: name -> (scenario, congestion, arrival rate/s, horizon s)
+REGIMES = {
+    "paper-default": ("paper-default", False, 3.0, 9.0),
+    "flash-crowd": ("flash-crowd", False, 3.0, 9.0),
+    "sustained-overload-congested": ("sustained-overload", True, 6.0, 12.0),
+}
+
+
+class _Capture:
+    def __init__(self):
+        self.frames = []
+
+    def __call__(self, inst):
+        self.frames.append(jax.tree.map(np.asarray, inst))
+        return gus_schedule(inst)
+
+
+def _pick_frame(frames, spec, congestion):
+    """The most interesting captured frame: for the congested regime, the
+    last one whose budget is strictly backlog-reduced; otherwise the busiest
+    (most feasible rows) so the greedy loop actually contends for capacity."""
+    if congestion:
+        reduced = [
+            f for f in frames
+            if (np.asarray(f.gamma) < spec.gamma_frame - 1e-6).any()
+        ]
+        if not reduced:
+            raise SystemExit("no backlog-reduced frame captured; raise the rate")
+        return reduced[-1]
+    return max(frames, key=lambda f: int(np.asarray(f.avail).any((1, 2)).sum()))
+
+
+def main():
+    spec = demo_cluster_spec()
+    for name, (scenario, congestion, rate, horizon_s) in REGIMES.items():
+        cap = _Capture()
+        cfg = SimConfig(
+            horizon_ms=horizon_s * 1000.0,
+            arrival_rate_per_s=rate,
+            delay_req_ms=6000.0,
+            acc_req_mean=50.0,
+            acc_req_std=10.0,
+            congestion=CongestionConfig(enabled=congestion),
+        )
+        simulate(spec, cfg, scheduler=cap, scenario=scenario, seed=0)
+        frame = _pick_frame(cap.frames, spec, congestion)
+        ref = gus_schedule_np(frame)
+        n_real = int(np.asarray(frame.avail).any((1, 2)).sum())
+        path = OUT_DIR / f"gus_golden_{name}.npz"
+        np.savez_compressed(
+            path,
+            **{f: np.asarray(getattr(frame, f)) for f in LEAVES},
+            exp_j=np.asarray(ref.j),
+            exp_l=np.asarray(ref.l),
+            n_real=np.int64(n_real),
+            congestion=np.bool_(congestion),
+            gamma_frame=spec.gamma_frame,
+            scenario=np.str_(scenario),
+        )
+        served = int((np.asarray(ref.j) >= 0).sum())
+        print(f"{path.name}: N_pad={frame.A.shape[0]} n_real={n_real} "
+              f"served={served} congestion={congestion}")
+
+
+if __name__ == "__main__":
+    main()

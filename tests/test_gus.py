@@ -1,10 +1,18 @@
-"""Unit + property tests for the paper's core: US metric, GUS, ILP, baselines."""
+"""Unit + property tests for the paper's core: US metric, GUS, ILP, baselines.
+
+The deterministic tests always run; only the Hypothesis property tests at
+the bottom are gated on the optional dev dependency (requirements-dev.txt)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-pytest.importorskip("hypothesis")  # optional dev dep: see requirements-dev.txt
-from hypothesis import given, settings, strategies as st
+
+try:  # optional dev dep: see requirements-dev.txt
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import (
     GeneratorConfig,
@@ -155,44 +163,44 @@ def test_vmapped_batch_matches_loop():
 
 
 # ---------------------------------------------------------------------------
-# property tests
+# property tests (hypothesis widens the seed space when installed)
 # ---------------------------------------------------------------------------
 
-@settings(max_examples=25, deadline=None)
-@given(seed=st.integers(0, 10_000))
-def test_property_constraints_hold(seed):
-    inst = generate_instance(seed, SMALL)
-    a = gus_schedule(inst)
-    assert _cap_ok(inst, a)
-    assert _qos_ok(inst, a)
+if HAVE_HYPOTHESIS:
 
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_property_constraints_hold(seed):
+        inst = generate_instance(seed, SMALL)
+        a = gus_schedule(inst)
+        assert _cap_ok(inst, a)
+        assert _qos_ok(inst, a)
 
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 10_000), scale=st.floats(0.2, 3.0))
-def test_property_more_capacity_never_hurts(seed, scale):
-    """Scaling all capacities up can only increase total satisfaction."""
-    import dataclasses as dc
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000), scale=st.floats(0.2, 3.0))
+    def test_property_more_capacity_never_hurts(seed, scale):
+        """Scaling all capacities up can only increase total satisfaction."""
+        import dataclasses as dc
 
-    inst = generate_instance(seed, TINY)
-    bigger = dc.replace(
-        inst,
-        gamma=inst.gamma * (1 + scale),
-        eta=inst.eta * (1 + scale),
-    )
-    _, v1 = solve_bnb(inst)
-    _, v2 = solve_bnb(bigger)
-    assert v2 >= v1 - 1e-9
+        inst = generate_instance(seed, TINY)
+        bigger = dc.replace(
+            inst,
+            gamma=inst.gamma * (1 + scale),
+            eta=inst.eta * (1 + scale),
+        )
+        _, v1 = solve_bnb(inst)
+        _, v2 = solve_bnb(bigger)
+        assert v2 >= v1 - 1e-9
 
-
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 10_000))
-def test_property_us_definition(seed):
-    """US decomposes into the two normalized head-room terms (Eq. 1)."""
-    inst = generate_instance(seed, TINY)
-    us = np.asarray(us_tensor(inst))
-    acc_term = (np.asarray(inst.acc) - np.asarray(inst.A)[:, None, None]) / float(inst.max_as)
-    t_term = (np.asarray(inst.C)[:, None, None] - np.asarray(inst.ctime)) / float(inst.max_cs)
-    np.testing.assert_allclose(us, acc_term + t_term, rtol=1e-5, atol=1e-5)
-    # feasible assignments always have nonnegative US under hard constraints
-    feas = np.asarray(hard_feasible(inst))
-    assert (us[feas] >= -1e-6).all()
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_property_us_definition(seed):
+        """US decomposes into the two normalized head-room terms (Eq. 1)."""
+        inst = generate_instance(seed, TINY)
+        us = np.asarray(us_tensor(inst))
+        acc_term = (np.asarray(inst.acc) - np.asarray(inst.A)[:, None, None]) / float(inst.max_as)
+        t_term = (np.asarray(inst.C)[:, None, None] - np.asarray(inst.ctime)) / float(inst.max_cs)
+        np.testing.assert_allclose(us, acc_term + t_term, rtol=1e-5, atol=1e-5)
+        # feasible assignments always have nonnegative US under hard constraints
+        feas = np.asarray(hard_feasible(inst))
+        assert (us[feas] >= -1e-6).all()
