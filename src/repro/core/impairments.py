@@ -1,0 +1,472 @@
+"""Resilience layer — link impairments, stochastic outages, admission control.
+
+The paper's testbed (Fig. 1(e)-(h)) runs over a *real* wireless network:
+links drop, hand off and add latency, servers fail, and overload must be
+shed before it poisons every later frame.  The numerical model in
+:mod:`repro.core.simulator` is a perfect network, so this module adds the
+three missing mechanisms behind the same switch discipline as
+:class:`~repro.core.queueing.CongestionConfig` — **bit-identical results
+when disabled**, deterministic given a seed when enabled:
+
+* **Link-quality traces** — each edge carries a :class:`LinkTrace`: a
+  frame-indexed sequence of ``(bandwidth_scale, extra_latency_ms)`` pairs
+  drawn from a composable :class:`LinkProfile` (intermittent connectivity,
+  bursty loss, 4G/5G handoff gaps, satellite latency).  The trace modulates
+  the *scheduler-visible* transfer times (through the frame instance's
+  ``ctime``) and the *realized* channel in the sequential testbed, and the
+  current per-edge bandwidth scale rides the
+  :class:`~repro.core.queueing.PolicyCarry` (``carry.link_bw``) so adaptive
+  policies can see it.  Traces are memoized prefix-stable: the value at
+  frame ``t`` depends only on ``(profile, seed, t)``, never on how the
+  frames were pulled — which is what keeps the windowed / prefetched /
+  sharded fleet paths bitwise identical to the serial run.
+* **Server outage/recovery events** — a per-server up/down Markov chain
+  parameterized by MTBF/MTTR (in frames).  Where the ``outage`` *scenario*
+  scripts one fixed window, the :class:`ResilienceEngine` generalizes it to
+  a stochastic event stream: the engine's capacity mask multiplies into the
+  per-frame budgets exactly like a scenario ``capacity_scale``, and the
+  up/down vector rides the carry (``carry.server_up``).
+* **Admission control** — :class:`AdmissionConfig` adds per-server queue
+  caps (refuse assignments to servers whose carried backlog exceeds
+  ``queue_cap_mult`` frame budgets) and deadline-based shedding (mask out
+  requests that provably cannot meet their deadline under the *pre-frame*
+  congestion estimate).  The shed test uses the backlog-only inflation
+  ``phi(backlog)`` — a lower bound on the realized ``phi(backlog +
+  committed)`` since inflation is monotone in load — so a shed request
+  could never have been satisfied: shedding never drops a feasible
+  in-deadline request.
+
+The amplitude blend gives an exact identity at zero: a trace value
+``(raw_bw, raw_lat)`` is applied as ``bw = 1 + amplitude * (raw_bw - 1)``
+and ``lat = amplitude * raw_lat``, so ``amplitude=0.0`` multiplies by
+exactly ``1.0`` and adds exactly ``0.0`` — bitwise inert even with the
+subsystem enabled (pinned in ``tests/test_impairments.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .instance import FlatInstance
+from .queueing import (
+    CongestionConfig,
+    comm_inflation,
+    compute_inflation,
+    congested_ctime,
+)
+
+__all__ = [
+    "LinkProfile",
+    "IdealLink",
+    "IntermittentLink",
+    "BurstyLossLink",
+    "HandoffLink",
+    "SatelliteLink",
+    "ComposedLink",
+    "LinkTrace",
+    "OutageTrace",
+    "ImpairmentConfig",
+    "AdmissionConfig",
+    "ResilienceEngine",
+    "predicted_inflation",
+    "admission_keep",
+    "apply_queue_cap",
+]
+
+#: hard floor on any profile's bandwidth scale — a "down" link is slow, not
+#: a division by zero
+MIN_BW_SCALE = 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Link-quality profiles (composable trace generators)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkProfile:
+    """Base profile: the ideal link.  Subclasses override :meth:`init_state`
+    and :meth:`sample` to define a per-frame Markov process emitting
+    ``(bandwidth_scale, extra_latency_ms)`` — scale in ``(0, 1]``, latency
+    ``>= 0``.  Profiles are frozen (hashable) so they can live inside
+    :class:`ImpairmentConfig` and cache keys.
+    """
+
+    def init_state(self, rng: np.random.Generator):
+        return 0
+
+    def sample(self, state, rng: np.random.Generator):
+        """One frame: ``(next_state, bandwidth_scale, extra_latency_ms)``.
+
+        Called exactly once per frame in frame order — a profile may draw
+        from ``rng`` freely; sequential consumption is what makes traces
+        prefix-stable."""
+        return state, 1.0, 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class IdealLink(LinkProfile):
+    """No impairment: scale 1, zero extra latency (the explicit default)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class IntermittentLink(LinkProfile):
+    """Intermittent connectivity: an up/down Markov chain.  While down the
+    link limps at ``down_bw`` of nominal bandwidth plus ``down_lat`` ms of
+    retry latency (disconnect/reconnect, not a hard zero)."""
+
+    p_down: float = 0.15   # P(up -> down) per frame
+    p_up: float = 0.5      # P(down -> up) per frame
+    down_bw: float = 0.05
+    down_lat: float = 400.0
+
+    def sample(self, state, rng):
+        u = rng.random()
+        if state == 0:  # up
+            state = 1 if u < self.p_down else 0
+        else:
+            state = 0 if u < self.p_up else 1
+        if state:
+            return state, self.down_bw, self.down_lat
+        return state, 1.0, 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class BurstyLossLink(LinkProfile):
+    """Gilbert–Elliott bursty loss: a good/bad chain where the bad state
+    models retransmission pressure — reduced goodput and added latency."""
+
+    p_enter: float = 0.2   # P(good -> bad)
+    p_exit: float = 0.5    # P(bad -> good)
+    bad_bw: float = 0.4
+    bad_lat: float = 120.0
+
+    def sample(self, state, rng):
+        u = rng.random()
+        if state == 0:
+            state = 1 if u < self.p_enter else 0
+        else:
+            state = 0 if u < self.p_exit else 1
+        if state:
+            return state, self.bad_bw, self.bad_lat
+        return state, 1.0, 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class HandoffLink(LinkProfile):
+    """4G/5G handoff: roughly every ``period_frames`` (jittered) the link
+    stalls for ``gap_frames`` while the user re-attaches — bandwidth
+    collapses and control-plane latency spikes.  State is the countdown to
+    the next handoff (negative while inside the gap)."""
+
+    period_frames: int = 20
+    period_jitter: int = 4
+    gap_frames: int = 1
+    gap_bw: float = 0.1
+    gap_lat: float = 250.0
+
+    def _next_period(self, rng) -> int:
+        lo = max(1, self.period_frames - self.period_jitter)
+        hi = self.period_frames + self.period_jitter
+        return int(rng.integers(lo, hi + 1))
+
+    def init_state(self, rng):
+        return self._next_period(rng)
+
+    def sample(self, state, rng):
+        if state > 0:  # connected; count down to the handoff
+            return state - 1, 1.0, 0.0
+        # in the gap: state counts 0, -1, ..., -(gap_frames - 1)
+        if state <= -(self.gap_frames - 1):  # last gap frame: re-arm the timer
+            return self._next_period(rng), self.gap_bw, self.gap_lat
+        return state - 1, self.gap_bw, self.gap_lat
+
+
+@dataclasses.dataclass(frozen=True)
+class SatelliteLink(LinkProfile):
+    """Satellite backhaul: a constant high propagation delay with jitter and
+    a mildly reduced goodput — impaired every frame, never disconnected."""
+
+    bw: float = 0.8
+    lat: float = 550.0
+    lat_jitter: float = 40.0
+
+    def sample(self, state, rng):
+        lat = self.lat + self.lat_jitter * rng.standard_normal()
+        return state, self.bw, max(lat, 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class ComposedLink(LinkProfile):
+    """Composition of profiles: bandwidth scales multiply, latencies add —
+    e.g. a satellite link that also suffers bursty loss."""
+
+    parts: Tuple[LinkProfile, ...] = ()
+
+    def init_state(self, rng):
+        return tuple(p.init_state(rng) for p in self.parts)
+
+    def sample(self, state, rng):
+        new_states: List = []
+        bw, lat = 1.0, 0.0
+        for p, s in zip(self.parts, state):
+            s2, b, t = p.sample(s, rng)
+            new_states.append(s2)
+            bw *= b
+            lat += t
+        return tuple(new_states), bw, lat
+
+
+class LinkTrace:
+    """One edge's frame-indexed link-quality trace, drawn lazily.
+
+    Values are memoized and extended strictly in frame order from a private
+    generator, so ``value(t)`` depends only on ``(profile, seed, t)`` — the
+    pull pattern (one frame at a time, whole windows, or everything at once)
+    never changes the sequence.  ``tests/test_impairments.py`` pins
+    chunked == one-shot draining.
+    """
+
+    def __init__(self, profile: LinkProfile, seed: int = 0):
+        self.profile = profile
+        self._rng = np.random.default_rng(seed)
+        self._state = profile.init_state(self._rng)
+        self._bw: List[float] = []
+        self._lat: List[float] = []
+
+    def __len__(self) -> int:
+        return len(self._bw)
+
+    def _extend_to(self, t: int) -> None:
+        while len(self._bw) <= t:
+            self._state, bw, lat = self.profile.sample(self._state, self._rng)
+            self._bw.append(min(max(float(bw), MIN_BW_SCALE), 1.0))
+            self._lat.append(max(float(lat), 0.0))
+
+    def value(self, t: int) -> Tuple[float, float]:
+        """``(bandwidth_scale, extra_latency_ms)`` for frame ``t``."""
+        self._extend_to(t)
+        return self._bw[t], self._lat[t]
+
+    def values(self, t0: int, t1: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Arrays of (scale, latency) for frames ``[t0, t1)``."""
+        if t1 > t0:
+            self._extend_to(t1 - 1)
+        return (
+            np.asarray(self._bw[t0:t1], np.float64),
+            np.asarray(self._lat[t0:t1], np.float64),
+        )
+
+
+class OutageTrace:
+    """One server's up/down Markov chain: per frame,
+    ``P(up -> down) = 1/mtbf`` and ``P(down -> up) = 1/mttr`` (frames).
+    Memoized prefix-stable like :class:`LinkTrace`; starts up."""
+
+    def __init__(self, mtbf_frames: float, mttr_frames: float, seed: int = 0):
+        self.p_fail = 1.0 / max(float(mtbf_frames), 1.0)
+        self.p_repair = 1.0 / max(float(mttr_frames), 1.0)
+        self._rng = np.random.default_rng(seed)
+        self._up: List[bool] = []
+        self._state = True
+
+    def up(self, t: int) -> bool:
+        while len(self._up) <= t:
+            u = self._rng.random()
+            if self._state:
+                self._state = not (u < self.p_fail)
+            else:
+                self._state = u < self.p_repair
+            self._up.append(self._state)
+        return self._up[t]
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ImpairmentConfig:
+    """Switchboard for the network/server fault injection.
+
+    ``enabled=False`` (the default) skips the whole subsystem — no engine is
+    built and every code path is bit-identical to the pre-resilience
+    simulator.  With ``enabled=True`` and ``amplitude=0.0`` the subsystem
+    *runs* but applies exact-identity values (multiply by 1.0, add 0.0), so
+    results are still bitwise unchanged — the identity the tests pin.
+    """
+
+    enabled: bool = False
+    #: blend factor for link traces: ``bw = 1 + amplitude * (raw - 1)``,
+    #: ``lat = amplitude * raw``.  0 is an exact identity, 1 the full trace.
+    amplitude: float = 1.0
+    #: per-edge link profiles, cycled when shorter than ``n_edge``; empty
+    #: means every edge gets :class:`IdealLink`.
+    link_profiles: Tuple[LinkProfile, ...] = ()
+    #: impairment stream seed — *independent* of the simulation seed and of
+    #: the replication index, so every fleet replication faces the same
+    #: network weather (what makes the per-frame trace arrays shareable
+    #: across the rep axis, and sharded == serial trivially).
+    seed: int = 0
+    #: mean frames between failures for the stochastic outage stream;
+    #: ``0.0`` disables server outages entirely.
+    outage_mtbf_frames: float = 0.0
+    #: mean frames to repair
+    outage_mttr_frames: float = 3.0
+    #: servers subject to the outage stream (empty = none)
+    outage_servers: Tuple[int, ...] = ()
+
+    @property
+    def has_outages(self) -> bool:
+        return self.outage_mtbf_frames > 0.0 and len(self.outage_servers) > 0
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """Admission-control knobs (protection mechanisms).
+
+    ``enabled=False`` skips every admission computation.  With
+    ``enabled=True`` the defaults are still inert: ``queue_cap_mult=inf``
+    never refuses (``backlog >= inf`` is False, and ``inf * 0`` is NaN whose
+    comparisons are False, so even a zero-budget outage server passes), and
+    ``shed=False`` keeps every request.  Hashable — part of the fleet
+    runner's compile-cache key.
+    """
+
+    enabled: bool = False
+    #: refuse assignments to a server whose carried backlog exceeds this
+    #: many frame budgets (compute side by the serving server, comm side by
+    #: the covering edge).  ``inf`` = never refuse; finite values also
+    #: refuse dead (zero-budget) servers.
+    queue_cap_mult: float = math.inf
+    #: deadline-based shedding: drop requests that provably cannot finish
+    #: in deadline under the pre-frame congestion estimate (see
+    #: :func:`admission_keep`)
+    shed: bool = False
+
+
+# ---------------------------------------------------------------------------
+# The engine (host-side, deterministic, frame-indexed)
+# ---------------------------------------------------------------------------
+
+
+class ResilienceEngine:
+    """Deterministic fault-injection state for one simulation run.
+
+    A pure function of ``(config, frame_index)``: link values and outage
+    states are memoized prefix-stable per trace, so any caller — the
+    sequential frame loop, the fleet's windowed grid builder (inline or on
+    the prefetch producer thread), the host-side oracle fallback — sees the
+    same values for the same frame.  Replication-independent by design (see
+    :attr:`ImpairmentConfig.seed`).
+    """
+
+    def __init__(self, rcfg: ImpairmentConfig, n_edge: int, n_servers: int):
+        self.rcfg = rcfg
+        self.n_edge = n_edge
+        self.n_servers = n_servers
+        profiles = rcfg.link_profiles or (IdealLink(),)
+        self._traces = [
+            LinkTrace(profiles[e % len(profiles)], seed=rcfg.seed * 1_000_003 + e)
+            for e in range(n_edge)
+        ]
+        self._outages = {
+            j: OutageTrace(
+                rcfg.outage_mtbf_frames,
+                rcfg.outage_mttr_frames,
+                seed=rcfg.seed * 2_000_003 + j,
+            )
+            for j in rcfg.outage_servers
+            if 0 <= j < n_servers
+        } if rcfg.has_outages else {}
+
+    def link_frame(self, t: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Amplitude-blended per-*server* ``(bandwidth_scale, extra_lat_ms)``
+        for frame ``t`` — entries beyond ``n_edge`` (the cloud tier, never a
+        covering edge) stay at identity."""
+        amp = self.rcfg.amplitude
+        scale = np.ones(self.n_servers, np.float64)
+        lat = np.zeros(self.n_servers, np.float64)
+        for e, tr in enumerate(self._traces):
+            bw, lt = tr.value(t)
+            scale[e] = 1.0 + amp * (bw - 1.0)
+            lat[e] = amp * lt
+        np.clip(scale, MIN_BW_SCALE, None, out=scale)
+        return scale, lat
+
+    def server_up(self, t: int) -> np.ndarray:
+        """(M,) float32 up/down vector for frame ``t`` (1.0 = up)."""
+        up = np.ones(self.n_servers, np.float32)
+        for j, tr in self._outages.items():
+            if not tr.up(t):
+                up[j] = 0.0
+        return up
+
+    def capacity_scale(self, t: int) -> Optional[np.ndarray]:
+        """Per-frame budget multiplier from the outage stream, or ``None``
+        when no outage process is configured (budgets untouched bitwise)."""
+        if not self._outages:
+            return None
+        return self.server_up(t).astype(np.float64)
+
+
+# ---------------------------------------------------------------------------
+# Admission-control primitives (pure jnp; shared by frame loop, fleet scan
+# and the host-side oracle fallback)
+# ---------------------------------------------------------------------------
+
+
+def predicted_inflation(backlog_gamma, backlog_eta, gamma, eta, ccfg: CongestionConfig):
+    """Pre-frame inflation estimate ``phi(backlog)`` against the *full*
+    frame budgets — a lower bound on the realized ``phi(backlog +
+    committed)`` because inflation is monotone in load.  All-ones when the
+    congestion model is off (nothing ever inflates)."""
+    if not ccfg.enabled:
+        return jnp.ones_like(gamma), jnp.ones_like(eta)
+    return (
+        compute_inflation(backlog_gamma, gamma, ccfg),
+        comm_inflation(backlog_eta, eta, ccfg),
+    )
+
+
+def admission_keep(inst: FlatInstance, tq, phi_c, phi_e) -> jnp.ndarray:
+    """(N,) bool: request has at least one placed candidate meeting both its
+    accuracy floor and its deadline under the inflation estimate.
+
+    With the conservative (under-)estimate from :func:`predicted_inflation`
+    this can only be False when *every* candidate also misses under the
+    realized inflation — shedding on ``~keep`` never drops a request that
+    could have been satisfied."""
+    ct = congested_ctime(inst, tq, phi_c, phi_e)
+    ok = (
+        inst.avail
+        & (inst.acc >= inst.A[..., :, None, None])
+        & (ct <= inst.C[..., :, None, None])
+    )
+    return ok.any((-1, -2))
+
+
+def apply_queue_cap(
+    assign_j, inst: FlatInstance, backlog_gamma, backlog_eta, acfg: AdmissionConfig
+):
+    """Refuse (-> -1) assignments to servers over their backlog cap.
+
+    A server is over-cap when its carried backlog reaches
+    ``queue_cap_mult`` times its frame budget — compute side checked for the
+    serving server, comm side for the covering edge of offloaded requests.
+    ``inst.gamma``/``inst.eta`` must be the *full* frame budgets.  With the
+    default ``inf`` cap nothing is ever refused (``>= inf`` and ``>= nan``
+    are both False), keeping the call bitwise inert."""
+    over_c = backlog_gamma >= acfg.queue_cap_mult * inst.gamma
+    over_e = backlog_eta >= acfg.queue_cap_mult * inst.eta
+    served = assign_j >= 0
+    j = jnp.maximum(assign_j, 0)
+    refuse = served & (
+        over_c[j] | ((assign_j != inst.cover) & over_e[inst.cover])
+    )
+    return jnp.where(refuse, -1, assign_j)

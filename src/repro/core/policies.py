@@ -209,6 +209,38 @@ register_policy(Policy(
     kind="greedy",
 ))
 
+def _make_gus_adaptive(n_edge: int, n_servers: int):
+    """GUS with resilience awareness, fed by the simulator-threaded carry:
+    servers reported down (``carry.server_up``) are masked out of every
+    request's candidate set, and a server whose EMA utilization runs over
+    1 gets its visible capacity shaded down proportionally.  With
+    congestion and impairments off the carry sits at its init values
+    (``ema_util == 0``, ``server_up == 1``), both transforms are exact
+    identities (``x / 1.0``, ``avail & True``), and the assignments are
+    bit-identical to plain ``gus`` — pinned in ``tests/test_resilience.py``.
+    """
+
+    def schedule(inst: FlatInstance, carry):
+        over = jnp.maximum(carry.ema_util - 1.0, 0.0)
+        up = carry.server_up > 0.0
+        shaded = dataclasses.replace(
+            inst,
+            gamma=inst.gamma / (1.0 + over),
+            avail=inst.avail & up[None, :, None],
+        )
+        return gus_schedule(shaded), carry
+
+    return schedule
+
+
+register_policy(Policy(
+    name="gus-adaptive",
+    description="GUS reading the carry: skips down servers, shades overloaded ones",
+    make=_make_gus_adaptive,
+    kind="greedy",
+    stateful=True,
+))
+
 register_policy(Policy(
     name="random",
     description="baseline 1: one uniformly-random server per request",

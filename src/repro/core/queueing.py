@@ -104,6 +104,13 @@ class PolicyCarry:
     * ``bw_prev`` / ``bw_cur`` — the paper's bandwidth-estimator state
       ``B_{t-1}``, ``B_t`` (sequential testbed only; the fleet schedules
       with the true mean bandwidth).
+    * ``link_bw`` — ``(M,)`` this frame's per-edge link bandwidth scale
+      from the resilience engine (:mod:`repro.core.impairments`); all ones
+      when impairments are disabled.  Simulator-owned, policy-readable.
+    * ``server_up`` — ``(M,)`` this frame's up/down vector from the outage
+      stream (1.0 = up); all ones when disabled.  Simulator-owned,
+      policy-readable (the hook ``gus-adaptive`` uses to route around
+      down servers).
     """
 
     key: jnp.ndarray
@@ -112,6 +119,8 @@ class PolicyCarry:
     ema_util: jnp.ndarray
     bw_prev: jnp.ndarray
     bw_cur: jnp.ndarray
+    link_bw: jnp.ndarray
+    server_up: jnp.ndarray
 
 
 def init_policy_carry(
@@ -125,6 +134,8 @@ def init_policy_carry(
         ema_util=jnp.zeros((n_servers,), jnp.float32),
         bw_prev=jnp.float32(bandwidth_init),
         bw_cur=jnp.float32(bandwidth_init),
+        link_bw=jnp.ones((n_servers,), jnp.float32),
+        server_up=jnp.ones((n_servers,), jnp.float32),
     )
 
 
@@ -148,6 +159,8 @@ def fleet_policy_carry(
         ema_util=jnp.zeros((n_rep, n_servers), jnp.float32),
         bw_prev=jnp.full((n_rep,), bandwidth_init, jnp.float32),
         bw_cur=jnp.full((n_rep,), bandwidth_init, jnp.float32),
+        link_bw=jnp.ones((n_rep, n_servers), jnp.float32),
+        server_up=jnp.ones((n_rep, n_servers), jnp.float32),
     )
 
 

@@ -67,6 +67,7 @@ __all__ = [
     "MobilityScenario",
     "HeteroTiersScenario",
     "OutageScenario",
+    "FlashCrowdOutageScenario",
     "SustainedOverloadScenario",
     "DiurnalWeekScenario",
     "SCENARIOS",
@@ -757,6 +758,39 @@ class OutageScenario(Scenario):
     outage_start_frac: float = 0.33
     outage_end_frac: float = 0.66
     down_servers: Tuple[int, ...] = (0,)
+
+    def capacity_scale(self, frame_start_ms, cfg, n_edge, n_servers):
+        in_outage = (
+            self.outage_start_frac * cfg.horizon_ms
+            <= frame_start_ms
+            < self.outage_end_frac * cfg.horizon_ms
+        )
+        if not in_outage:
+            return None
+        scale = np.ones(n_servers, np.float32)
+        for j in self.down_servers:
+            if 0 <= j < n_servers:
+                scale[j] = 0.0
+        return scale
+
+
+@register_scenario
+@dataclasses.dataclass(frozen=True)
+class FlashCrowdOutageScenario(FlashCrowdScenario):
+    """The resilience composite: a flash crowd *and* a server outage hit at
+    once.  Arrivals follow :class:`FlashCrowdScenario` (``burst_mult`` x on
+    the hot edges mid-run) while ``down_servers`` lose all capacity inside
+    the same window — the flash crowd lands exactly when the cluster is a
+    server short.  This is the stress test for admission control: without
+    protection, the doomed burst's committed work snowballs into carried
+    backlog (congestion on) and poisons the recovery; queue caps and
+    deadline shedding bound the damage."""
+
+    name: str = "flash-crowd-outage"
+    description: str = "flash crowd on the hot edges while servers are down"
+    outage_start_frac: float = 0.4
+    outage_end_frac: float = 0.6
+    down_servers: Tuple[int, ...] = (1,)
 
     def capacity_scale(self, frame_start_ms, cfg, n_edge, n_servers):
         in_outage = (

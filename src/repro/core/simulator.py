@@ -66,6 +66,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from .gus import Assignment, gus_backend_fn, gus_schedule
+from .impairments import (
+    AdmissionConfig,
+    ImpairmentConfig,
+    ResilienceEngine,
+    admission_keep,
+    apply_queue_cap,
+    predicted_inflation,
+)
 from .instance import FlatInstance, pad_instance, stack_instances
 from .policies import Policy, get_policy
 from .queueing import (
@@ -157,6 +165,14 @@ class SimConfig:
     #: load-independent and every result is bit-identical to the
     #: pre-congestion simulator)
     congestion: CongestionConfig = dataclasses.field(default_factory=CongestionConfig)
+    #: network/server fault injection — per-edge link-quality traces and
+    #: stochastic MTBF/MTTR server outages (disabled by default: no engine
+    #: is built and results are bit-identical to the unimpaired simulator)
+    impairments: ImpairmentConfig = dataclasses.field(default_factory=ImpairmentConfig)
+    #: admission control — per-server queue caps and deadline-based
+    #: shedding (disabled by default, and inert at its defaults even when
+    #: enabled; see :class:`repro.core.impairments.AdmissionConfig`)
+    admission: AdmissionConfig = dataclasses.field(default_factory=AdmissionConfig)
 
 
 @dataclasses.dataclass
@@ -175,6 +191,10 @@ class SimResult:
     #: work-accounting of the congestion model (None when disabled):
     #: enqueued/drained/carried chip-ms + KB totals and inflation stats
     congestion_stats: Optional[Dict[str, float]] = None
+    #: fault-injection accounting (None unless impairments or admission
+    #: control are enabled): requests shed at admission, assignments
+    #: refused by the queue cap, frames with a down server
+    resilience_stats: Optional[Dict[str, float]] = None
 
     @property
     def satisfied_pct(self) -> float:
@@ -225,7 +245,8 @@ FLEET_REP_GROUP = 8
 
 
 def _frame_arrays(
-    reqs: Sequence[Request], spec: ClusterSpec, cfg: SimConfig, now_ms: float, bw_est: float
+    reqs: Sequence[Request], spec: ClusterSpec, cfg: SimConfig, now_ms: float, bw_est: float,
+    link=None,
 ) -> Dict[str, np.ndarray]:
     """Numpy request-row tensors for one frame, using the scheduler's
     *estimated* bandwidth for comm delays — shared by
@@ -235,6 +256,13 @@ def _frame_arrays(
     :class:`~repro.core.scenarios.RequestColumns` view (the vectorized
     trace); the columnar branch narrows the same float64 values to float32,
     so the two layouts produce bit-identical tensors from identical draws.
+
+    ``link`` is an optional pair of per-request ``(bandwidth_scale,
+    extra_latency_ms)`` arrays from the resilience engine, gathered by each
+    request's covering edge: transfer time becomes ``size / (bw * scale) +
+    lat``.  ``None`` (impairments off) leaves the formula untouched; at
+    amplitude 0 the scale is exactly 1.0 and the latency exactly 0.0, so
+    the result is bitwise identical either way.
     """
     M = spec.n_servers
     L = spec.acc.shape[1]
@@ -257,7 +285,14 @@ def _frame_arrays(
         svc = np.array([r.service for r in reqs], np.int32)
 
     local = cover[:, None] == np.arange(M)[None, :]
-    comm = size[:, None] / bw_est + np.where(is_cloud[None, :], spec.cloud_extra_delay, 0.0)
+    transfer = size[:, None] / bw_est
+    if link is not None:
+        # bandwidth scales divide the transfer time, extra latency adds;
+        # at identity (scale 1.0, lat 0.0) both ops are bitwise no-ops
+        bw_scale, extra_lat = link
+        transfer = transfer / np.asarray(bw_scale, np.float64)[:, None] \
+            + np.asarray(extra_lat, np.float64)[:, None]
+    comm = transfer + np.where(is_cloud[None, :], spec.cloud_extra_delay, 0.0)
     comm = np.where(local, 0.0, comm)
 
     proc = spec.proc_ms[:, svc, :].transpose(1, 0, 2)       # (N, M, L)
@@ -283,10 +318,11 @@ def _build_frame_instance(
     max_cs: float,
     gamma=None,
     eta=None,
+    link=None,
 ) -> FlatInstance:
     """FlatInstance for the requests pending in this frame."""
     N = len(reqs)
-    arr = _frame_arrays(reqs, spec, cfg, now_ms, bw_est)
+    arr = _frame_arrays(reqs, spec, cfg, now_ms, bw_est, link=link)
     return FlatInstance(
         cover=jnp.asarray(arr["cover"]),
         A=jnp.asarray(arr["A"]),
@@ -312,8 +348,14 @@ def _build_frame_batch(
     frame_starts: Sequence[float],
     budgets,
     n_pad: int,
+    links=None,
 ) -> FlatInstance:
     """Stacked, padded ``FlatInstance`` for a whole grid of frames at once.
+
+    ``links`` (optional, aligned with ``frames`` like ``budgets``) carries
+    each frame's per-*server* ``(bandwidth_scale, extra_latency_ms)`` pair
+    from the resilience engine; the builder gathers them per request by
+    covering edge and hands them to :func:`_frame_arrays`.
 
     Fills preallocated numpy tensors frame by frame and converts each leaf
     to a device array *once* — the fleet's hot-path grid builder.  With the
@@ -361,7 +403,13 @@ def _build_frame_batch(
             now = np.repeat(
                 np.asarray(frame_starts, np.float64) + cfg.frame_ms, lengths
             )
-            arr = _frame_arrays(cat, spec, cfg, now, spec.bandwidth_true)
+            link = None
+            if links is not None:
+                cov = cat.cover.astype(np.intp)
+                sc = np.stack([l[0] for l in links])  # (F, M)
+                la = np.stack([l[1] for l in links])
+                link = (sc[row, cov], la[row, cov])
+            arr = _frame_arrays(cat, spec, cfg, now, spec.bandwidth_true, link=link)
             cover[row, col] = arr["cover"]
             A[row, col] = arr["A"]
             C[row, col] = arr["C"]
@@ -377,7 +425,18 @@ def _build_frame_batch(
             n = len(reqs)
             if n == 0:
                 continue
-            arr = _frame_arrays(reqs, spec, cfg, t0 + cfg.frame_ms, spec.bandwidth_true)
+            link = None
+            if links is not None:
+                cov = (
+                    reqs.cover.astype(np.intp)
+                    if isinstance(reqs, RequestColumns)
+                    else np.array([r.cover for r in reqs], np.intp)
+                )
+                sc, la = links[i]
+                link = (sc[cov], la[cov])
+            arr = _frame_arrays(
+                reqs, spec, cfg, t0 + cfg.frame_ms, spec.bandwidth_true, link=link
+            )
             cover[i, :n] = arr["cover"]
             A[i, :n] = arr["A"]
             C[i, :n] = arr["C"]
@@ -433,15 +492,24 @@ def _apply_mobility_inplace(
         r.cover = int(c)
 
 
-def _frame_budgets(spec: ClusterSpec, cfg: SimConfig, scn: Scenario, frame_start_ms: float):
+def _frame_budgets(
+    spec: ClusterSpec, cfg: SimConfig, scn: Scenario, frame_start_ms: float,
+    engine: Optional[ResilienceEngine] = None,
+):
     """Fresh per-frame (gamma, eta) budgets, masked by the scenario's
-    capacity stream (outages etc.)."""
+    capacity stream (outages etc.) and — when a resilience engine is active —
+    by its stochastic MTBF/MTTR outage stream."""
     g = spec.gamma_frame.astype(np.float64)
     e = spec.eta_frame.astype(np.float64)
     scale = scn.capacity_scale(frame_start_ms, cfg, spec.n_edge, spec.n_servers)
     if scale is not None:
         g = g * scale
         e = e * scale
+    if engine is not None:
+        up = engine.capacity_scale(int(round(frame_start_ms / cfg.frame_ms)))
+        if up is not None:
+            g = g * up
+            e = e * up
     return g.copy(), e.copy()
 
 
@@ -609,9 +677,14 @@ def simulate(
         scheduler = gus_schedule
     scn = get_scenario(scenario)
     ccfg = cfg.congestion
+    acfg = cfg.admission
     rng = np.random.default_rng(seed)
     M, K, L = spec.proc_ms.shape
     move_prob = cfg.move_prob if scn.move_prob is None else scn.move_prob
+    engine = (
+        ResilienceEngine(cfg.impairments, spec.n_edge, M)
+        if cfg.impairments.enabled else None
+    )
 
     # --- arrivals (materialized trace, or bounded-memory stream) -------------
     use_stream = scn.streaming if streaming is None else streaming
@@ -666,10 +739,12 @@ def simulate(
 
     # capacity budgets deplete WITHIN a wall-clock frame (queue-full decisions
     # fire early but do not refresh gamma/eta — they share the frame budget)
-    frame_budget_g, frame_budget_e = _frame_budgets(spec, cfg, scn, 0.0)
+    frame_budget_g, frame_budget_e = _frame_budgets(spec, cfg, scn, 0.0, engine=engine)
     rem_gamma = frame_budget_g.copy()
     rem_eta = frame_budget_e.copy()
     frame_boundary = cfg.frame_ms
+    n_shed = n_refused = 0
+    frames_down = 0
 
     while t < cfg.horizon_ms + 10 * cfg.frame_ms:
         frame_end = t + cfg.frame_ms
@@ -708,7 +783,7 @@ def simulate(
                     ema_util=ema,
                 )
             frame_budget_g, frame_budget_e = _frame_budgets(
-                spec, cfg, scn, frame_boundary - cfg.frame_ms
+                spec, cfg, scn, frame_boundary - cfg.frame_ms, engine=engine
             )
             if ccfg.enabled:
                 rem_gamma = np.maximum(frame_budget_g - backlog_g, 0.0)
@@ -721,10 +796,44 @@ def simulate(
             _apply_mobility_inplace(pending, spec.n_edge, move_prob, rng)
             bw_est = 0.5 * (bw_cur + bw_prev)  # E[B_{t+1}] = (B_t + B_{t-1})/2
             n_real = len(pending)
+            link = None
+            link_scale = link_lat = None
+            if engine is not None:
+                # the wall-clock frame the decision belongs to indexes the
+                # impairment streams (early-close decisions share it)
+                fi = int(round(frame_boundary / cfg.frame_ms)) - 1
+                link_scale, link_lat = engine.link_frame(fi)
+                up_now = engine.server_up(fi)
+                frames_down += int((up_now < 1.0).any())
+                cov = np.array([r.cover for r in pending], np.intp)
+                link = (link_scale[cov], link_lat[cov])
+                carry = dataclasses.replace(
+                    carry,
+                    link_bw=jnp.asarray(link_scale, jnp.float32),
+                    server_up=jnp.asarray(up_now),
+                )
             inst = _build_frame_instance(
                 pending, spec, cfg, decision_time, bw_est, max_cs,
-                gamma=rem_gamma, eta=rem_eta,
+                gamma=rem_gamma, eta=rem_eta, link=link,
             )
+            if acfg.enabled and acfg.shed:
+                # deadline shedding against the pre-frame (backlog-only)
+                # inflation estimate — full budgets, like the fleet scan
+                phi_pc, phi_pe = predicted_inflation(
+                    jnp.asarray(backlog_g, jnp.float32),
+                    jnp.asarray(backlog_e, jnp.float32),
+                    jnp.asarray(frame_budget_g, jnp.float32),
+                    jnp.asarray(frame_budget_e, jnp.float32),
+                    ccfg,
+                )
+                tq_arr = jnp.asarray(
+                    [decision_time - r.arrival_ms for r in pending], jnp.float32
+                )
+                keep = admission_keep(inst, tq_arr, phi_pc, phi_pe)
+                n_shed += n_real - int(np.asarray(keep).sum())
+                inst = dataclasses.replace(
+                    inst, avail=inst.avail & keep[:, None, None]
+                )
             # fixed-shape hot path: pad to a bucket so jitted schedulers
             # compile once per bucket; padded rows are infeasible -> dropped.
             # Non-padding policies (the ILP oracle) see the raw frame.
@@ -740,6 +849,20 @@ def simulate(
                 assign = scheduler(frame_inst)
             jv = np.asarray(assign.j)[:n_real]
             lv = np.asarray(assign.l)[:n_real]
+            if acfg.enabled:
+                # queue cap: refuse assignments to servers whose carried
+                # backlog exceeds the cap (full frame budgets, like the
+                # fleet scan); with the default inf cap nothing changes
+                cov = np.array([r.cover for r in pending], np.intp)
+                with np.errstate(invalid="ignore"):
+                    over_c = backlog_g >= acfg.queue_cap_mult * frame_budget_g
+                    over_e = backlog_e >= acfg.queue_cap_mult * frame_budget_e
+                jc = np.maximum(jv, 0)
+                refuse = (jv >= 0) & (
+                    over_c[jc] | ((jv != cov) & over_e[cov])
+                )
+                n_refused += int(refuse.sum())
+                jv = np.where(refuse, -1, jv)
 
             # pass 1 — capacity commit (shared frame budget + backlog growth)
             for idx, r in enumerate(pending):
@@ -782,11 +905,18 @@ def simulate(
                     comm = 0.0
                 else:
                     bw_real = spec.bandwidth_true * rng.lognormal(0.0, cfg.channel_sigma)
-                    comm = r.size_bytes / bw_real + (
+                    extra = 0.0
+                    if engine is not None:  # the realized channel is impaired too
+                        # plain-float arithmetic keeps the downstream
+                        # accumulator dtypes identical to the unimpaired path
+                        bw_real = bw_real * float(link_scale[r.cover])
+                        extra = float(link_lat[r.cover])
+                    comm = r.size_bytes / bw_real + extra + (
                         spec.cloud_extra_delay if is_cloud[j] else 0.0
                     )
-                    # the estimator observes the *channel* (uninflated transfer)
-                    observed_bw.append(r.size_bytes / max(comm - (spec.cloud_extra_delay if is_cloud[j] else 0.0), 1e-6))
+                    # the estimator observes the *channel* (uninflated
+                    # transfer, net of the link's known extra latency)
+                    observed_bw.append(r.size_bytes / max(comm - extra - (spec.cloud_extra_delay if is_cloud[j] else 0.0), 1e-6))
                 if ccfg.enabled:
                     proc = proc * phi_c[j]
                     comm = comm * phi_e[r.cover]
@@ -834,6 +964,14 @@ def simulate(
             "max_inflation": infl_max,
         }
 
+    resilience_stats = None
+    if engine is not None or acfg.enabled:
+        resilience_stats = {
+            "n_shed": float(n_shed),
+            "n_refused": float(n_refused),
+            "frames_with_down_server": float(frames_down),
+        }
+
     n_total = source.n_total
     return SimResult(
         n_requests=n_total,
@@ -848,6 +986,7 @@ def simulate(
         mean_queue_ms=q_sum / max(n_served, 1),
         bandwidth_estimates=bw_log,
         congestion_stats=congestion_stats,
+        resilience_stats=resilience_stats,
     )
 
 
@@ -1019,13 +1158,27 @@ def _bound_policy(pol: Policy, n_edge: int, n_servers: int):
 
 
 @functools.lru_cache(maxsize=128)
-def _fleet_runner(fn, stateful: bool, needs_key: bool, ccfg: CongestionConfig):
+def _fleet_runner(
+    fn, stateful: bool, needs_key: bool, ccfg: CongestionConfig,
+    acfg: AdmissionConfig, impaired: bool,
+):
     """The fleet's jitted vmap-over-reps-of-scan-over-frames runner, cached
-    by (schedule fn, policy mode, congestion config).  jax's own jit cache
-    then holds one executable per (group shape, device)."""
+    by (schedule fn, policy mode, congestion/admission config, impairment
+    flag).  jax's own jit cache then holds one executable per (group shape,
+    device).
+
+    Scan inputs per frame: the padded instance, the PRNG key, the queueing
+    delays, and the resilience engine's per-frame link/up vectors (all-ones
+    dummies when ``impaired`` is False — never read then, so XLA drops
+    them).  Admission control runs inside the step: deadline shedding masks
+    ``avail`` *before* the policy (against the pre-frame backlog-only
+    inflation estimate), the queue cap refuses assignments *after* it and
+    before the committed work enters the backlog."""
 
     def step(carry, x):
-        inst, key = x
+        inst, key, tq, link_bw, up = x
+        if impaired:  # policy-visible network state rides the carry
+            carry = dataclasses.replace(carry, link_bw=link_bw, server_up=up)
         if ccfg.enabled:
             run_inst = dataclasses.replace(
                 inst,
@@ -1034,12 +1187,27 @@ def _fleet_runner(fn, stateful: bool, needs_key: bool, ccfg: CongestionConfig):
             )
         else:
             run_inst = inst
+        if acfg.enabled and acfg.shed:
+            phi_pc, phi_pe = predicted_inflation(
+                carry.backlog_gamma, carry.backlog_eta, inst.gamma, inst.eta, ccfg
+            )
+            keep = admission_keep(inst, tq, phi_pc, phi_pe)
+            run_inst = dataclasses.replace(
+                run_inst, avail=run_inst.avail & keep[:, None, None]
+            )
         if stateful:
             a, carry = fn(run_inst, carry)
         elif needs_key:
             a = fn(run_inst, key)
         else:
             a = fn(run_inst)
+        if acfg.enabled:
+            a = Assignment(
+                apply_queue_cap(
+                    a.j, inst, carry.backlog_gamma, carry.backlog_eta, acfg
+                ),
+                a.l,
+            )
         if ccfg.enabled:
             w, c = committed_loads(inst, a.j, a.l)
             pc = compute_inflation(carry.backlog_gamma + w, inst.gamma, ccfg)
@@ -1055,8 +1223,8 @@ def _fleet_runner(fn, stateful: bool, needs_key: bool, ccfg: CongestionConfig):
             pe = jnp.ones_like(inst.eta)
         return carry, (a.j, a.l, pc, pe)
 
-    def per_rep(c0, inst_seq, key_seq):
-        return jax.lax.scan(step, c0, (inst_seq, key_seq))
+    def per_rep(c0, inst_seq, key_seq, tq_seq, link_seq, up_seq):
+        return jax.lax.scan(step, c0, (inst_seq, key_seq, tq_seq, link_seq, up_seq))
 
     return jax.jit(jax.vmap(per_rep))
 
@@ -1180,6 +1348,7 @@ def simulate_fleet(
     pol, scheduler = _apply_backend(pol, scheduler, backend)
     scn = get_scenario(scenario)
     ccfg = cfg.congestion
+    acfg = cfg.admission
     T = max(1, int(np.ceil(cfg.horizon_ms / cfg.frame_ms)))
     K = spec.proc_ms.shape[1]
     M = spec.n_servers
@@ -1220,11 +1389,19 @@ def simulate_fleet(
         n_max = max(src.max_bucket for src in sources)
     n_pad = _pad_bucket(n_max)
     gen_s = time.perf_counter() - t_gen0  # trace generation + padding pre-pass
+    # the resilience engine is replication-independent (same network
+    # weather for every rep) and frame-indexed, so its traces tile across
+    # the rep axis and extend prefix-stable window by window — what keeps
+    # windowed/prefetched/sharded runs bitwise identical to serial
+    engine = (
+        ResilienceEngine(cfg.impairments, spec.n_edge, M)
+        if cfg.impairments.enabled else None
+    )
 
     if host_side:
         return _simulate_fleet_host(
             spec, cfg, scn, pol, sources, n_rep=n_rep, T=T, n_pad=n_pad, seed=seed,
-            gen_s=gen_s,
+            gen_s=gen_s, engine=engine,
         )
 
     if pol is not None:
@@ -1235,7 +1412,7 @@ def simulate_fleet(
         fn = gus_schedule if scheduler is None else scheduler
         needs_key = False
         stateful = False
-    run = _fleet_runner(fn, stateful, needs_key, ccfg)
+    run = _fleet_runner(fn, stateful, needs_key, ccfg, acfg, engine is not None)
 
     if needs_key:
         keys_all = np.asarray(jax.random.split(
@@ -1328,17 +1505,38 @@ def simulate_fleet(
         # per-frame budgets are replication-independent: one _frame_budgets
         # call per frame index, reused across the R replications
         budgets_by_k = [
-            _frame_budgets(spec, cfg, scn, (t0 + k) * cfg.frame_ms) for k in range(Tc)
+            _frame_budgets(spec, cfg, scn, (t0 + k) * cfg.frame_ms, engine=engine)
+            for k in range(Tc)
         ]
+        R_pad = n_rep + pad_r
+        if engine is not None:
+            links_by_k = [engine.link_frame(t0 + k) for k in range(Tc)]
+            links_arg = links_by_k * n_rep
+            link_rt = np.broadcast_to(
+                np.stack([l[0] for l in links_by_k]).astype(np.float32),
+                (R_pad, Tc, M),
+            )
+            up_rt = np.broadcast_to(
+                np.stack([engine.server_up(t0 + k) for k in range(Tc)]),
+                (R_pad, Tc, M),
+            )
+        else:  # dummy xs keep the scan signature uniform (never read)
+            links_arg = None
+            link_rt = up_rt = np.broadcast_to(
+                np.ones((1, 1, M), np.float32), (R_pad, Tc, M)
+            )
         batch = _build_frame_batch(
-            frames, spec, cfg, frame_starts, budgets_by_k * n_rep, n_pad
+            frames, spec, cfg, frame_starts, budgets_by_k * n_rep, n_pad,
+            links=links_arg,
         )  # leading axis: n_rep * Tc frames
         batch_rt = jax.tree.map(
             lambda x: x.reshape((n_rep, Tc) + x.shape[1:]), batch
         )
+        tq_rt = tq_flat.reshape(n_rep, Tc, n_pad)
         if pad_r:
             batch_rt = _pad_reps(batch_rt, pad_r)
-        return t0, t1, Tc, batch, batch_rt, n_real, tq_flat
+            tq_rt = _pad_reps(tq_rt, pad_r)
+        return t0, t1, Tc, batch, batch_rt, n_real, tq_flat, tq_rt, link_rt, up_rt
 
     window_starts = list(range(0, T, W))
     prod_thread = None
@@ -1384,7 +1582,8 @@ def simulate_fleet(
     try:
         for wi_t0 in window_starts:
             t_gen = time.perf_counter()
-            t0, t1, Tc, batch, batch_rt, n_real, tq_flat = next_window(wi_t0)
+            (t0, t1, Tc, batch, batch_rt, n_real, tq_flat,
+             tq_rt, link_rt, up_rt) = next_window(wi_t0)
             gen_s += time.perf_counter() - t_gen
             keys_rt = keys_all[:, t0:t1]
 
@@ -1395,6 +1594,9 @@ def simulate_fleet(
                     carries[g],
                     to_device(jax.tree.map(lambda x: x[sl], batch_rt), dev),
                     to_device(keys_rt[sl], dev),
+                    to_device(tq_rt[sl], dev),
+                    to_device(np.ascontiguousarray(link_rt[sl]), dev),
+                    to_device(np.ascontiguousarray(up_rt[sl]), dev),
                 )
                 # materialize here (XLA releases the GIL while computing, so
                 # worker threads overlap groups across devices); the carry stays
@@ -1491,13 +1693,16 @@ def _simulate_fleet_host(
     n_pad: int,
     seed: int,
     gen_s: float = 0.0,
+    engine: Optional[ResilienceEngine] = None,
 ) -> FleetResult:
     """Host-side fleet path for non-vmappable / non-padding policies (the
     ILP / LP-bound oracles): schedule each *unpadded* frame in a Python
     loop — threading the per-replication carry frame by frame — then re-pad
     the assignments with drops so the masked metrics tail is shared with
-    the vmapped policies."""
+    the vmapped policies.  Impairments and admission control mirror the
+    scan step exactly (same helpers, same order)."""
     ccfg = cfg.congestion
+    acfg = cfg.admission
     M = spec.n_servers
     fleet_frames: List[List[Request]] = []
     for src in sources:
@@ -1507,10 +1712,19 @@ def _simulate_fleet_host(
     tq_flat = np.zeros((len(fleet_frames), n_pad), np.float32)
     for i, bucket in enumerate(fleet_frames):
         frame_start = (i % T) * cfg.frame_ms
-        gamma, eta = _frame_budgets(spec, cfg, scn, frame_start)
+        gamma, eta = _frame_budgets(spec, cfg, scn, frame_start, engine=engine)
+        link = None
+        if engine is not None and len(bucket):
+            sc, la = engine.link_frame(i % T)
+            cov = (
+                bucket.cover.astype(np.intp)
+                if isinstance(bucket, RequestColumns)
+                else np.array([r.cover for r in bucket], np.intp)
+            )
+            link = (sc[cov], la[cov])
         raw_insts.append(_build_frame_instance(
             bucket, spec, cfg, frame_start + cfg.frame_ms,
-            spec.bandwidth_true, cfg.max_cs, gamma=gamma, eta=eta,
+            spec.bandwidth_true, cfg.max_cs, gamma=gamma, eta=eta, link=link,
         ))
         if bucket:
             if isinstance(bucket, RequestColumns):
@@ -1540,6 +1754,12 @@ def _simulate_fleet_host(
         for tf in range(T):
             i = rep * T + tf
             inst, n = raw_insts[i], n_real[i]
+            if engine is not None:
+                carry = dataclasses.replace(
+                    carry,
+                    link_bw=jnp.asarray(engine.link_frame(tf)[0], jnp.float32),
+                    server_up=jnp.asarray(engine.server_up(tf)),
+                )
             if ccfg.enabled:
                 run_inst = dataclasses.replace(
                     inst,
@@ -1548,12 +1768,30 @@ def _simulate_fleet_host(
                 )
             else:
                 run_inst = inst
+            if acfg.enabled and acfg.shed and n:
+                phi_pc, phi_pe = predicted_inflation(
+                    carry.backlog_gamma, carry.backlog_eta,
+                    inst.gamma, inst.eta, ccfg,
+                )
+                keep = admission_keep(
+                    inst, jnp.asarray(tq_flat[i, :n]), phi_pc, phi_pe
+                )
+                run_inst = dataclasses.replace(
+                    run_inst, avail=run_inst.avail & keep[:, None, None]
+                )
             if pol.stateful:
                 a, carry = fn(run_inst, carry)
             elif keys is not None:
                 a = fn(run_inst, keys[i])
             else:
                 a = fn(run_inst)
+            if acfg.enabled and n:
+                a = Assignment(
+                    apply_queue_cap(
+                        a.j, inst, carry.backlog_gamma, carry.backlog_eta, acfg
+                    ),
+                    a.l,
+                )
             jv[i, :n] = np.asarray(a.j)
             lv[i, :n] = np.asarray(a.l)
             if ccfg.enabled:

@@ -23,6 +23,13 @@ The stream pops arrivals in global time order (the heap invariant: every
 pushed next-arrival is later than the pop that produced it), so ``rid``s
 are assigned in arrival order exactly like the materialized path.
 
+The resilience layer's link/outage state is invariant the same way for a
+different reason: :class:`repro.core.impairments.LinkTrace` is indexed by
+*frame number* and memoized (the value at frame ``t`` depends only on the
+profile, the seed, and ``t``), so how arrivals are pulled — streaming or
+materialized, windowed or one-shot — cannot change which network weather
+a frame sees.
+
 RNG modes
 ---------
 

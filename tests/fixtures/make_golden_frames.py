@@ -7,21 +7,31 @@ three GUS implementations (NumPy / XLA / Pallas) to these stored outputs, so
 any behaviour change in utility computation, feasibility, tie-breaking or
 the greedy loop shows up as a fixture diff instead of a silent drift.
 
-Three regimes are pinned:
+Five regimes are pinned:
 
 * ``paper-default``                  — the Sec. IV workload, light load;
 * ``flash-crowd``                    — bursty overload (big, busy frames);
 * ``sustained-overload-congested``   — the congestion model's
   backlog-reduced budgets (the frame's gamma is strictly below the
-  cluster's per-frame budget).
+  cluster's per-frame budget);
+* ``outage-masked``                  — a frame captured inside the
+  ``outage`` scenario's window, where a down server's budget is masked to
+  exactly zero;
+* ``impairment-reduced``             — a frame whose completion times carry
+  the resilience engine's link impairments (reduced bandwidth / extra
+  latency); the unimpaired twin's ``ctime`` is stored alongside so the
+  parity test can prove the frame really is impaired.
 
 Regenerate (and commit the result) only when the scheduling semantics are
-*meant* to change:
+*meant* to change — and regenerate *only the fixture you mean to change*
+(``--only NAME``): npz archives are not byte-stable across rebuilds, so a
+blanket rerun dirties fixtures whose semantics did not move:
 
-    PYTHONPATH=src python tests/fixtures/make_golden_frames.py
+    PYTHONPATH=src python tests/fixtures/make_golden_frames.py --only outage-masked
 """
 from __future__ import annotations
 
+import argparse
 from pathlib import Path
 
 import jax
@@ -29,6 +39,9 @@ import numpy as np
 
 from repro.core import (
     CongestionConfig,
+    ImpairmentConfig,
+    IntermittentLink,
+    SatelliteLink,
     SimConfig,
     demo_cluster_spec,
     gus_schedule,
@@ -41,11 +54,36 @@ OUT_DIR = Path(__file__).parent
 LEAVES = ("cover", "A", "C", "w_a", "w_c", "acc", "ctime", "v", "u",
           "avail", "gamma", "eta", "max_as", "max_cs")
 
-#: name -> (scenario, congestion, arrival rate/s, horizon s)
+#: the impairment stream the ``impairment-reduced`` fixture runs under
+IMPAIRED = ImpairmentConfig(
+    enabled=True,
+    link_profiles=(IntermittentLink(), SatelliteLink()),
+    seed=3,
+)
+
+#: name -> dict(scenario, congestion, rate (req/s), horizon_s, impairments,
+#: pick) — ``pick`` selects the captured frame to pin (see the pick rules)
 REGIMES = {
-    "paper-default": ("paper-default", False, 3.0, 9.0),
-    "flash-crowd": ("flash-crowd", False, 3.0, 9.0),
-    "sustained-overload-congested": ("sustained-overload", True, 6.0, 12.0),
+    "paper-default": dict(
+        scenario="paper-default", congestion=False, rate=3.0, horizon_s=9.0,
+        impairments=None, pick="busiest",
+    ),
+    "flash-crowd": dict(
+        scenario="flash-crowd", congestion=False, rate=3.0, horizon_s=9.0,
+        impairments=None, pick="busiest",
+    ),
+    "sustained-overload-congested": dict(
+        scenario="sustained-overload", congestion=True, rate=6.0, horizon_s=12.0,
+        impairments=None, pick="backlog-reduced",
+    ),
+    "outage-masked": dict(
+        scenario="outage", congestion=False, rate=4.0, horizon_s=12.0,
+        impairments=None, pick="outage-masked",
+    ),
+    "impairment-reduced": dict(
+        scenario="paper-default", congestion=False, rate=4.0, horizon_s=12.0,
+        impairments=IMPAIRED, pick="impairment-reduced",
+    ),
 }
 
 
@@ -58,11 +96,18 @@ class _Capture:
         return gus_schedule(inst)
 
 
-def _pick_frame(frames, spec, congestion):
-    """The most interesting captured frame: for the congested regime, the
-    last one whose budget is strictly backlog-reduced; otherwise the busiest
-    (most feasible rows) so the greedy loop actually contends for capacity."""
-    if congestion:
+def _pick_frame(frames, spec, pick, twin_frames=None):
+    """Select the captured frame the fixture pins.
+
+    * ``busiest``            — most feasible rows (greedy loop contends);
+    * ``backlog-reduced``    — last frame whose budget is strictly below the
+      cluster's per-frame budget (the congestion regime);
+    * ``outage-masked``      — busiest frame with a zero-budget server;
+    * ``impairment-reduced`` — first frame whose ``ctime`` differs from the
+      amplitude-0 twin run's same-index frame (identical pending set, so
+      the diff is purely the link impairment); returns ``(frame, twin)``.
+    """
+    if pick == "backlog-reduced":
         reduced = [
             f for f in frames
             if (np.asarray(f.gamma) < spec.gamma_frame - 1e-6).any()
@@ -70,23 +115,72 @@ def _pick_frame(frames, spec, congestion):
         if not reduced:
             raise SystemExit("no backlog-reduced frame captured; raise the rate")
         return reduced[-1]
+    if pick == "outage-masked":
+        masked = [f for f in frames if (np.asarray(f.gamma) == 0.0).any()]
+        if not masked:
+            raise SystemExit("no outage-masked frame captured; raise the rate")
+        return max(masked, key=lambda f: int(np.asarray(f.avail).any((1, 2)).sum()))
+    if pick == "impairment-reduced":
+        for f, g in zip(frames, twin_frames):
+            if f.ctime.shape != g.ctime.shape:
+                break  # pending sets diverged; earlier frames were identical
+            same_inputs = (
+                np.array_equal(f.cover, g.cover)
+                and np.array_equal(f.A, g.A)
+                and np.array_equal(f.C, g.C)
+            )
+            if same_inputs and not np.array_equal(f.ctime, g.ctime):
+                assert (f.ctime >= g.ctime - 1e-6).all(), \
+                    "impairments must only slow transfers down"
+                return f, g
+        raise SystemExit("no impairment-affected frame found; raise the horizon")
     return max(frames, key=lambda f: int(np.asarray(f.avail).any((1, 2)).sum()))
 
 
-def main():
+def _run(spec, regime, impairments):
+    cap = _Capture()
+    cfg = SimConfig(
+        horizon_ms=regime["horizon_s"] * 1000.0,
+        arrival_rate_per_s=regime["rate"],
+        delay_req_ms=6000.0,
+        acc_req_mean=50.0,
+        acc_req_std=10.0,
+        congestion=CongestionConfig(enabled=regime["congestion"]),
+        impairments=impairments or ImpairmentConfig(),
+    )
+    simulate(spec, cfg, scheduler=cap, scenario=regime["scenario"], seed=0)
+    return cap.frames
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--only", action="append", choices=sorted(REGIMES),
+                    help="regenerate a single fixture (repeatable); npz "
+                         "archives are not byte-stable, so prefer this over "
+                         "a blanket rerun")
+    args = ap.parse_args(argv)
+    names = args.only or list(REGIMES)
+
     spec = demo_cluster_spec()
-    for name, (scenario, congestion, rate, horizon_s) in REGIMES.items():
-        cap = _Capture()
-        cfg = SimConfig(
-            horizon_ms=horizon_s * 1000.0,
-            arrival_rate_per_s=rate,
-            delay_req_ms=6000.0,
-            acc_req_mean=50.0,
-            acc_req_std=10.0,
-            congestion=CongestionConfig(enabled=congestion),
-        )
-        simulate(spec, cfg, scheduler=cap, scenario=scenario, seed=0)
-        frame = _pick_frame(cap.frames, spec, congestion)
+    for name in names:
+        regime = REGIMES[name]
+        frames = _run(spec, regime, regime["impairments"])
+        extra = {}
+        if regime["pick"] == "impairment-reduced":
+            # amplitude-0 twin: same engine, exact-identity values — frames
+            # before the first divergence are bit-identical
+            twin = _run(
+                spec, regime,
+                ImpairmentConfig(
+                    enabled=True, amplitude=0.0,
+                    link_profiles=regime["impairments"].link_profiles,
+                    seed=regime["impairments"].seed,
+                ),
+            )
+            frame, twin_frame = _pick_frame(frames, spec, regime["pick"], twin)
+            extra["ctime_unimpaired"] = np.asarray(twin_frame.ctime)
+        else:
+            frame = _pick_frame(frames, spec, regime["pick"])
         ref = gus_schedule_np(frame)
         n_real = int(np.asarray(frame.avail).any((1, 2)).sum())
         path = OUT_DIR / f"gus_golden_{name}.npz"
@@ -96,13 +190,15 @@ def main():
             exp_j=np.asarray(ref.j),
             exp_l=np.asarray(ref.l),
             n_real=np.int64(n_real),
-            congestion=np.bool_(congestion),
+            congestion=np.bool_(regime["congestion"]),
+            impaired=np.bool_(regime["impairments"] is not None),
             gamma_frame=spec.gamma_frame,
-            scenario=np.str_(scenario),
+            scenario=np.str_(regime["scenario"]),
+            **extra,
         )
         served = int((np.asarray(ref.j) >= 0).sum())
         print(f"{path.name}: N_pad={frame.A.shape[0]} n_real={n_real} "
-              f"served={served} congestion={congestion}")
+              f"served={served} pick={regime['pick']}")
 
 
 if __name__ == "__main__":

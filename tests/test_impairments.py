@@ -1,0 +1,525 @@
+"""Resilience-layer unit tests: link-quality trace generators, outage
+streams, the deterministic fault-injection engine, and the admission-control
+primitives (deadline shedding + queue caps).  Integration with the
+simulators lives in ``tests/test_resilience.py``."""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    AdmissionConfig,
+    BurstyLossLink,
+    ComposedLink,
+    CongestionConfig,
+    GeneratorConfig,
+    HandoffLink,
+    IdealLink,
+    ImpairmentConfig,
+    IntermittentLink,
+    LinkTrace,
+    OutageTrace,
+    ResilienceEngine,
+    SatelliteLink,
+    admission_keep,
+    apply_queue_cap,
+    generate_instance,
+    gus_schedule,
+    predicted_inflation,
+)
+from repro.core.impairments import MIN_BW_SCALE  # noqa: E402
+
+try:  # optional dev dep: see requirements-dev.txt
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+ALL_PROFILES = (
+    IdealLink(),
+    IntermittentLink(),
+    BurstyLossLink(),
+    HandoffLink(),
+    SatelliteLink(),
+    ComposedLink(parts=(IntermittentLink(), SatelliteLink())),
+)
+
+TINY = GeneratorConfig(n_requests=8, n_edge=3, n_cloud=1, n_services=3, n_variants=2)
+CC = CongestionConfig(enabled=True)
+
+
+def _trace_arrays(profile, seed=0, n=200):
+    return LinkTrace(profile, seed=seed).values(0, n)
+
+
+# ---------------------------------------------------------------------------
+# Link profiles
+# ---------------------------------------------------------------------------
+
+
+def test_ideal_link_is_identity():
+    bw, lat = _trace_arrays(IdealLink())
+    np.testing.assert_array_equal(bw, 1.0)
+    np.testing.assert_array_equal(lat, 0.0)
+
+
+def test_intermittent_link_two_states():
+    p = IntermittentLink()
+    bw, lat = _trace_arrays(p, seed=1)
+    up = bw == 1.0
+    np.testing.assert_array_equal(lat[up], 0.0)
+    np.testing.assert_array_equal(bw[~up], p.down_bw)
+    np.testing.assert_array_equal(lat[~up], p.down_lat)
+    assert (~up).any() and up.any()  # both states visited in 200 frames
+
+
+def test_bursty_link_two_states():
+    p = BurstyLossLink()
+    bw, lat = _trace_arrays(p, seed=1)
+    bad = bw < 1.0
+    np.testing.assert_array_equal(bw[bad], p.bad_bw)
+    np.testing.assert_array_equal(lat[bad], p.bad_lat)
+    assert bad.any() and (~bad).any()
+
+
+def _gap_runs(bw, gap_value):
+    """(start, length) of each maximal run of gap frames."""
+    runs, start = [], None
+    for i, v in enumerate(bw):
+        if v == gap_value and start is None:
+            start = i
+        elif v != gap_value and start is not None:
+            runs.append((start, i - start))
+            start = None
+    if start is not None:
+        runs.append((start, len(bw) - start))
+    return runs
+
+
+@pytest.mark.parametrize("gap_frames", [1, 2, 3])
+def test_handoff_gaps_are_well_formed(gap_frames):
+    p = HandoffLink(period_frames=6, period_jitter=2, gap_frames=gap_frames)
+    bw, lat = _trace_arrays(p, seed=2, n=400)
+    runs = _gap_runs(bw, p.gap_bw)
+    assert runs, "no handoff gap in 400 frames"
+    # every interior gap is exactly gap_frames long (the last may be clipped)
+    for _, length in runs[:-1]:
+        assert length == gap_frames
+    # connected stretches between gaps stay within the jittered period
+    for (s0, l0), (s1, _) in zip(runs, runs[1:]):
+        connected = s1 - (s0 + l0)
+        assert p.period_frames - p.period_jitter <= connected <= p.period_frames + p.period_jitter
+    np.testing.assert_array_equal(lat[bw == p.gap_bw], p.gap_lat)
+    np.testing.assert_array_equal(lat[bw == 1.0], 0.0)
+
+
+def test_satellite_link_always_impaired():
+    p = SatelliteLink()
+    bw, lat = _trace_arrays(p, seed=3)
+    np.testing.assert_array_equal(bw, p.bw)
+    assert (lat >= 0.0).all()
+    assert lat.std() > 0.0  # jitter actually moves
+    assert abs(lat.mean() - p.lat) < 5 * p.lat_jitter
+
+
+def test_composed_link_multiplies_bw_and_adds_latency():
+    # two jitter-free satellite parts: fully deterministic composition
+    part = SatelliteLink(bw=0.8, lat=550.0, lat_jitter=0.0)
+    bw, lat = _trace_arrays(ComposedLink(parts=(part, part)), seed=0, n=10)
+    np.testing.assert_allclose(bw, 0.8 * 0.8)
+    np.testing.assert_allclose(lat, 550.0 + 550.0)
+
+
+def test_composed_link_empty_is_identity():
+    bw, lat = _trace_arrays(ComposedLink(parts=()), seed=0, n=10)
+    np.testing.assert_array_equal(bw, 1.0)
+    np.testing.assert_array_equal(lat, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# LinkTrace: determinism, bounds, prefix stability
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("profile", ALL_PROFILES, ids=lambda p: type(p).__name__)
+def test_trace_values_bounded(profile):
+    bw, lat = _trace_arrays(profile, seed=7)
+    assert np.isfinite(bw).all() and np.isfinite(lat).all()
+    assert (bw >= MIN_BW_SCALE).all() and (bw <= 1.0).all()
+    assert (lat >= 0.0).all()
+
+
+@pytest.mark.parametrize("profile", ALL_PROFILES, ids=lambda p: type(p).__name__)
+def test_trace_chunked_equals_oneshot(profile):
+    """The pull pattern never changes the sequence — the property that keeps
+    windowed / prefetched fleet runs bitwise identical to the serial one."""
+    bw_ref, lat_ref = LinkTrace(profile, seed=11).values(0, 120)
+    chunked = LinkTrace(profile, seed=11)
+    bw_parts, lat_parts = [], []
+    for t0, t1 in ((0, 7), (7, 40), (40, 41), (41, 120)):
+        b, t = chunked.values(t0, t1)
+        bw_parts.append(b)
+        lat_parts.append(t)
+    np.testing.assert_array_equal(np.concatenate(bw_parts), bw_ref)
+    np.testing.assert_array_equal(np.concatenate(lat_parts), lat_ref)
+    # scalar pulls agree too, including re-reads of already-drawn frames
+    scalar = LinkTrace(profile, seed=11)
+    assert scalar.value(100) == (bw_ref[100], lat_ref[100])
+    assert scalar.value(5) == (bw_ref[5], lat_ref[5])
+
+
+def test_trace_seed_determinism():
+    a = LinkTrace(IntermittentLink(), seed=5).values(0, 100)
+    b = LinkTrace(IntermittentLink(), seed=5).values(0, 100)
+    c = LinkTrace(IntermittentLink(), seed=6).values(0, 100)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+    assert not np.array_equal(a[0], c[0])
+
+
+def test_trace_empty_range():
+    bw, lat = LinkTrace(IntermittentLink(), seed=0).values(5, 5)
+    assert bw.size == 0 and lat.size == 0
+
+
+# ---------------------------------------------------------------------------
+# OutageTrace
+# ---------------------------------------------------------------------------
+
+
+def test_outage_trace_deterministic_and_prefix_stable():
+    a = OutageTrace(5.0, 2.0, seed=9)
+    b = OutageTrace(5.0, 2.0, seed=9)
+    seq_a = [a.up(t) for t in range(100)]
+    # out-of-order queries on b must agree with a's in-order draws
+    assert b.up(99) == seq_a[99]
+    assert b.up(3) == seq_a[3]
+    assert [b.up(t) for t in range(100)] == seq_a
+
+
+def test_outage_trace_mtbf_one_fails_immediately():
+    # p_fail = 1: down at frame 0; p_repair = 1: straight back up — the
+    # chain alternates deterministically
+    tr = OutageTrace(1.0, 1.0, seed=0)
+    assert [tr.up(t) for t in range(6)] == [False, True, False, True, False, True]
+
+
+def test_outage_trace_huge_mtbf_stays_up():
+    tr = OutageTrace(1e12, 3.0, seed=0)
+    assert all(tr.up(t) for t in range(200))
+
+
+def test_outage_trace_visits_both_states():
+    tr = OutageTrace(4.0, 2.0, seed=1)
+    ups = [tr.up(t) for t in range(200)]
+    assert any(ups) and not all(ups)
+
+
+# ---------------------------------------------------------------------------
+# ResilienceEngine
+# ---------------------------------------------------------------------------
+
+
+def _engine(**kw):
+    defaults = dict(enabled=True, link_profiles=(IntermittentLink(),), seed=2)
+    defaults.update(kw)
+    return ResilienceEngine(ImpairmentConfig(**defaults), n_edge=3, n_servers=5)
+
+
+def test_engine_cloud_entries_stay_identity():
+    eng = _engine()
+    for t in range(50):
+        scale, lat = eng.link_frame(t)
+        assert scale.shape == (5,) and lat.shape == (5,)
+        np.testing.assert_array_equal(scale[3:], 1.0)  # cloud tier untouched
+        np.testing.assert_array_equal(lat[3:], 0.0)
+
+
+def test_engine_amplitude_zero_is_exact_identity():
+    eng = _engine(amplitude=0.0)
+    for t in range(20):
+        scale, lat = eng.link_frame(t)
+        np.testing.assert_array_equal(scale, 1.0)
+        np.testing.assert_array_equal(lat, 0.0)
+
+
+def test_engine_amplitude_blends_linearly():
+    full = _engine(amplitude=1.0)
+    half = _engine(amplitude=0.5)
+    s1, l1 = full.link_frame(7)
+    sh, lh = half.link_frame(7)
+    np.testing.assert_allclose(sh, np.clip(1.0 + 0.5 * (s1 - 1.0), MIN_BW_SCALE, None))
+    np.testing.assert_allclose(lh, 0.5 * l1)
+
+
+def test_engine_profiles_cycle_across_edges():
+    profiles = (IntermittentLink(), SatelliteLink())
+    eng = ResilienceEngine(
+        ImpairmentConfig(enabled=True, link_profiles=profiles, seed=0),
+        n_edge=3, n_servers=4,
+    )
+    assert [type(tr.profile) for tr in eng._traces] == [
+        IntermittentLink, SatelliteLink, IntermittentLink
+    ]
+
+
+def test_engine_per_edge_seeds_differ():
+    eng = _engine()
+    a = np.array([eng.link_frame(t)[0][0] for t in range(100)])
+    b = np.array([eng.link_frame(t)[0][1] for t in range(100)])
+    assert not np.array_equal(a, b)  # same profile, distinct per-edge streams
+
+
+def test_engine_capacity_scale_none_without_outages():
+    eng = _engine()
+    assert eng.capacity_scale(0) is None
+    np.testing.assert_array_equal(eng.server_up(0), 1.0)
+
+
+def test_engine_outage_masks_only_configured_servers():
+    eng = _engine(outage_mtbf_frames=1.0, outage_mttr_frames=1e12,
+                  outage_servers=(1, 3))
+    up = eng.server_up(0)  # mtbf 1 -> down at frame 0; mttr huge -> stays down
+    np.testing.assert_array_equal(up, [1.0, 0.0, 1.0, 0.0, 1.0])
+    cap = eng.capacity_scale(0)
+    np.testing.assert_array_equal(cap, up.astype(np.float64))
+
+
+def test_engine_out_of_range_outage_servers_ignored():
+    eng = _engine(outage_mtbf_frames=1.0, outage_servers=(7, -1))
+    assert eng._outages == {}
+    assert eng.capacity_scale(0) is None
+
+
+def test_engine_deterministic_across_instances():
+    a, b = _engine(), _engine()
+    for t in (0, 3, 17):
+        np.testing.assert_array_equal(a.link_frame(t)[0], b.link_frame(t)[0])
+        np.testing.assert_array_equal(a.link_frame(t)[1], b.link_frame(t)[1])
+
+
+# ---------------------------------------------------------------------------
+# Admission-control primitives
+# ---------------------------------------------------------------------------
+
+
+def test_predicted_inflation_disabled_is_ones():
+    g = jnp.asarray([100.0, 50.0])
+    phi_c, phi_e = predicted_inflation(
+        jnp.asarray([500.0, 0.0]), jnp.asarray([0.0, 900.0]), g, g,
+        CongestionConfig(enabled=False),
+    )
+    np.testing.assert_array_equal(np.asarray(phi_c), 1.0)
+    np.testing.assert_array_equal(np.asarray(phi_e), 1.0)
+
+
+def test_predicted_inflation_is_lower_bound_of_realized():
+    """phi(backlog) <= phi(backlog + committed): the monotonicity that makes
+    shedding provably safe."""
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.uniform(50.0, 150.0, 6), jnp.float32)
+    backlog = jnp.asarray(rng.uniform(0.0, 400.0, 6), jnp.float32)
+    committed = jnp.asarray(rng.uniform(0.0, 300.0, 6), jnp.float32)
+    pred, _ = predicted_inflation(backlog, backlog, g, g, CC)
+    from repro.core import compute_inflation
+    real = compute_inflation(backlog + committed, g, CC)
+    assert (np.asarray(pred) <= np.asarray(real) + 1e-6).all()
+
+
+def test_admission_keep_matches_feasibility_when_uninflated():
+    inst = generate_instance(0, TINY)
+    ones = jnp.ones(TINY.n_edge + TINY.n_cloud)
+    tq = jnp.zeros(TINY.n_requests)
+    keep = admission_keep(inst, tq, ones, ones)
+    expect = np.asarray(
+        (inst.avail
+         & (inst.acc >= inst.A[:, None, None])
+         & (inst.ctime <= inst.C[:, None, None])).any((-1, -2))
+    )
+    np.testing.assert_array_equal(np.asarray(keep), expect)
+
+
+def test_admission_keep_is_monotone_in_inflation():
+    """A request kept under higher inflation is kept under lower inflation —
+    so shedding on the pre-frame (lower-bound) estimate never drops anything
+    the realized (higher) inflation would have allowed through."""
+    M = TINY.n_edge + TINY.n_cloud
+    rng = np.random.default_rng(1)
+    for seed in range(5):
+        inst = generate_instance(seed, TINY)
+        tq = jnp.zeros(TINY.n_requests)
+        lo = jnp.asarray(1.0 + rng.uniform(0.0, 2.0, M), jnp.float32)
+        hi = lo * jnp.asarray(1.0 + rng.uniform(0.0, 2.0, M), jnp.float32)
+        keep_lo = np.asarray(admission_keep(inst, tq, lo, lo))
+        keep_hi = np.asarray(admission_keep(inst, tq, hi, hi))
+        assert (keep_lo | ~keep_hi).all()  # keep_hi implies keep_lo
+
+
+def test_admission_keep_sheds_only_hopeless_requests():
+    """Under uniform inflation, a request GUS actually satisfies is never
+    shed by the pre-frame estimate with inflation at/below realized."""
+    inst = generate_instance(3, TINY)
+    a = gus_schedule(inst)
+    served = np.asarray(a.j) >= 0
+    ones = jnp.ones(TINY.n_edge + TINY.n_cloud)
+    keep = np.asarray(admission_keep(inst, jnp.zeros(TINY.n_requests), ones, ones))
+    assert (keep | ~served).all()  # served implies kept
+
+
+def test_queue_cap_inert_at_inf():
+    inst = generate_instance(0, TINY)
+    a = gus_schedule(inst)
+    backlog = jnp.asarray([1e9, 0.0, 5.0, 0.0], jnp.float32)
+    out = apply_queue_cap(a.j, inst, backlog, backlog, AdmissionConfig(enabled=True))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(a.j))
+
+
+def test_queue_cap_inert_at_inf_even_for_dead_servers():
+    # inf * 0 = nan, and comparisons with nan are False -> no refusal
+    inst = generate_instance(0, TINY)
+    inst = dataclasses.replace(inst, gamma=jnp.zeros_like(inst.gamma))
+    a_j = jnp.zeros(TINY.n_requests, jnp.int32)  # everything on server 0
+    out = apply_queue_cap(
+        a_j, inst, jnp.zeros_like(inst.gamma), jnp.zeros_like(inst.eta),
+        AdmissionConfig(enabled=True),
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(a_j))
+
+
+def test_queue_cap_refuses_over_backlog_server():
+    inst = generate_instance(0, TINY)
+    a = gus_schedule(inst)
+    jv = np.asarray(a.j)
+    target = int(jv[jv >= 0][0])
+    backlog_g = np.zeros(TINY.n_edge + TINY.n_cloud, np.float32)
+    backlog_g[target] = 10.0 * float(np.asarray(inst.gamma)[target])
+    out = np.asarray(apply_queue_cap(
+        a.j, inst, jnp.asarray(backlog_g), jnp.zeros_like(inst.eta),
+        AdmissionConfig(enabled=True, queue_cap_mult=2.0),
+    ))
+    assert (out[jv == target] == -1).all()          # over-cap server refused
+    mask = (jv != target)
+    np.testing.assert_array_equal(out[mask], jv[mask])  # everyone else kept
+
+
+def test_queue_cap_comm_side_spares_local_requests():
+    """Comm-side cap binds the covering edge of *offloaded* requests only —
+    a local assignment on the same edge sails through."""
+    inst = generate_instance(2, TINY)
+    cover = np.asarray(inst.cover)
+    edge = int(cover[0])
+    n = TINY.n_requests
+    jv = np.where(cover == edge, edge, cover).astype(np.int32)  # all local
+    backlog_e = np.zeros(TINY.n_edge + TINY.n_cloud, np.float32)
+    backlog_e[edge] = 10.0 * float(np.asarray(inst.eta)[edge])
+    acfg = AdmissionConfig(enabled=True, queue_cap_mult=1.0)
+    out_local = np.asarray(apply_queue_cap(
+        jnp.asarray(jv), inst, jnp.zeros_like(inst.gamma),
+        jnp.asarray(backlog_e), acfg,
+    ))
+    np.testing.assert_array_equal(out_local, jv)  # local: comm cap irrelevant
+    # the same requests offloaded to a cloud server get refused
+    cloud = TINY.n_edge
+    jv_off = np.full(n, cloud, np.int32)
+    out_off = np.asarray(apply_queue_cap(
+        jnp.asarray(jv_off), inst, jnp.zeros_like(inst.gamma),
+        jnp.asarray(backlog_e), acfg,
+    ))
+    assert (out_off[cover == edge] == -1).all()
+    np.testing.assert_array_equal(out_off[cover != edge], jv_off[cover != edge])
+
+
+def test_queue_cap_finite_refuses_dead_server():
+    # backlog 0 >= cap * budget 0 -> a zero-budget (outage) server is
+    # refused by any finite cap
+    inst = generate_instance(0, TINY)
+    inst = dataclasses.replace(inst, gamma=inst.gamma.at[0].set(0.0))
+    jv = jnp.zeros(TINY.n_requests, jnp.int32)
+    out = np.asarray(apply_queue_cap(
+        jv, inst, jnp.zeros_like(inst.gamma), jnp.zeros_like(inst.eta),
+        AdmissionConfig(enabled=True, queue_cap_mult=3.0),
+    ))
+    np.testing.assert_array_equal(out, -1)
+
+
+def test_queue_cap_leaves_dropped_rows_alone():
+    inst = generate_instance(0, TINY)
+    jv = jnp.full(TINY.n_requests, -1, jnp.int32)
+    big = jnp.full_like(inst.gamma, 1e9)
+    out = apply_queue_cap(jv, inst, big, big,
+                          AdmissionConfig(enabled=True, queue_cap_mult=0.5))
+    np.testing.assert_array_equal(np.asarray(out), -1)
+
+
+def test_admission_config_defaults_are_inert():
+    acfg = AdmissionConfig()
+    assert not acfg.enabled and not acfg.shed
+    assert math.isinf(acfg.queue_cap_mult)
+    assert not ImpairmentConfig().enabled
+    assert not ImpairmentConfig().has_outages
+    # outages need both a positive MTBF and a non-empty server set
+    assert not ImpairmentConfig(outage_mtbf_frames=5.0).has_outages
+    assert not ImpairmentConfig(outage_servers=(0,)).has_outages
+    assert ImpairmentConfig(outage_mtbf_frames=5.0, outage_servers=(0,)).has_outages
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis widens the space when installed)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    PROFILE_STRATEGY = st.sampled_from(ALL_PROFILES)
+
+    @settings(max_examples=30, deadline=None)
+    @given(profile=PROFILE_STRATEGY, seed=st.integers(0, 10_000))
+    def test_property_trace_values_bounded(profile, seed):
+        bw, lat = LinkTrace(profile, seed=seed).values(0, 60)
+        assert np.isfinite(bw).all() and np.isfinite(lat).all()
+        assert (bw >= MIN_BW_SCALE).all() and (bw <= 1.0).all()
+        assert (lat >= 0.0).all()
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        profile=PROFILE_STRATEGY,
+        seed=st.integers(0, 10_000),
+        cuts=st.lists(st.integers(1, 79), min_size=0, max_size=6),
+    )
+    def test_property_chunked_equals_oneshot(profile, seed, cuts):
+        ref_bw, ref_lat = LinkTrace(profile, seed=seed).values(0, 80)
+        tr = LinkTrace(profile, seed=seed)
+        bounds = [0] + sorted(set(cuts)) + [80]
+        bw = np.concatenate([tr.values(a, b)[0] for a, b in zip(bounds, bounds[1:])])
+        lat = np.concatenate([tr.values(a, b)[1] for a, b in zip(bounds, bounds[1:])])
+        np.testing.assert_array_equal(bw, ref_bw)
+        np.testing.assert_array_equal(lat, ref_lat)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 10_000),
+        period=st.integers(2, 12),
+        jitter=st.integers(0, 3),
+        gap=st.integers(1, 4),
+    )
+    def test_property_handoff_transitions_well_formed(seed, period, jitter, gap):
+        jitter = min(jitter, period - 1)
+        p = HandoffLink(period_frames=period, period_jitter=jitter, gap_frames=gap)
+        bw, _ = LinkTrace(p, seed=seed).values(0, 300)
+        runs = _gap_runs(bw, p.gap_bw) if p.gap_bw != 1.0 else []
+        for _, length in runs[:-1]:
+            assert length == gap
+        for (s0, l0), (s1, _) in zip(runs, runs[1:]):
+            assert period - jitter <= s1 - (s0 + l0) <= period + jitter
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10_000), mtbf=st.floats(1.0, 50.0),
+           mttr=st.floats(1.0, 50.0))
+    def test_property_outage_prefix_stable(seed, mtbf, mttr):
+        a = OutageTrace(mtbf, mttr, seed=seed)
+        b = OutageTrace(mtbf, mttr, seed=seed)
+        _ = b.up(59)  # draw everything in one go
+        assert [a.up(t) for t in range(60)] == [b.up(t) for t in range(60)]

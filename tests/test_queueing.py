@@ -304,7 +304,7 @@ def test_init_policy_carry_shapes():
     assert float(c.bw_cur) == 42.0
     # it is a pytree (scan-carry requirement)
     leaves = jax.tree_util.tree_leaves(c)
-    assert len(leaves) == 6
+    assert len(leaves) == 8
 
 
 # ---------------------------------------------------------------------------

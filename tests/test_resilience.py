@@ -1,0 +1,288 @@
+"""Resilience-layer integration tests against the virtual testbed.
+
+Three contracts are pinned here:
+
+* **inertness** — with impairments / admission disabled (or enabled at
+  identity settings) results are *bitwise identical* to a run that never
+  heard of the resilience layer;
+* **parity** — with impairments, outages and admission control all active,
+  the windowed / prefetched / streaming / vectorized-rng / sharded fleet
+  paths still agree bitwise with the materialized single-device run;
+* **behaviour** — impairments hurt, outages are accounted, backlog
+  conservation closes across outages and drains on recovery, shedding
+  never drops a satisfiable request, and protection strictly helps an
+  overcommitting policy on the composite overload regime while leaving
+  capacity-honoring GUS untouched.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core import (  # noqa: E402
+    AdmissionConfig,
+    CongestionConfig,
+    ImpairmentConfig,
+    IntermittentLink,
+    SatelliteLink,
+    SimConfig,
+    demo_cluster_spec,
+    simulate,
+    simulate_fleet,
+)
+from repro.core.scenarios import (  # noqa: E402
+    FlashCrowdOutageScenario,
+    OutageScenario,
+    get_scenario,
+)
+
+SPEC = demo_cluster_spec()
+
+IMPAIRED = ImpairmentConfig(
+    enabled=True, link_profiles=(IntermittentLink(), SatelliteLink()), seed=3,
+)
+OUTAGES = ImpairmentConfig(
+    enabled=True, outage_mtbf_frames=6.0, outage_mttr_frames=3.0,
+    outage_servers=(1,), seed=3,
+)
+FULL = ImpairmentConfig(
+    enabled=True, link_profiles=(IntermittentLink(),), seed=3,
+    outage_mtbf_frames=6.0, outage_mttr_frames=3.0, outage_servers=(1,),
+)
+PROTECTED = AdmissionConfig(enabled=True, queue_cap_mult=1.0, shed=True)
+
+#: the tuned composite overload regime (see benchmarks/paper_figures.py):
+#: flash crowd + server outage in the same window, inflation in the range
+#: where admission control actually changes outcomes
+COMPOSITE = FlashCrowdOutageScenario(
+    burst_mult=3.0, burst_start_frac=0.2, burst_end_frac=0.4,
+    outage_start_frac=0.2, outage_end_frac=0.4,
+)
+
+
+def cfg(rate=2.0, horizon_ms=12_000.0, **kw):
+    return SimConfig(
+        horizon_ms=horizon_ms,
+        arrival_rate_per_s=rate,
+        delay_req_ms=kw.pop("delay_req_ms", 6000.0),
+        acc_req_mean=50.0,
+        acc_req_std=10.0,
+        **kw,
+    )
+
+
+def _serial(c, policy="gus", scenario="paper-default", **kw):
+    return simulate(SPEC, c, policy=policy, scenario=scenario, seed=0, **kw)
+
+
+def _fleet(c, policy="gus", scenario="paper-default", n_rep=2, **kw):
+    return simulate_fleet(SPEC, c, policy=policy, scenario=scenario,
+                          n_rep=n_rep, seed=0, **kw)
+
+
+def _assert_fleet_equal(a, b):
+    np.testing.assert_array_equal(a.satisfied_per_rep, b.satisfied_per_rep)
+    np.testing.assert_array_equal(a.mean_us_per_rep, b.mean_us_per_rep)
+    assert a.n_served == b.n_served and a.n_requests == b.n_requests
+
+
+# ---------------------------------------------------------------------------
+# inertness: disabled / identity-settings runs are bitwise clean
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_resilience_is_bitwise_inert_serial():
+    base = _serial(cfg())
+    off = _serial(cfg(impairments=ImpairmentConfig(), admission=AdmissionConfig()))
+    assert base.as_dict() == off.as_dict()
+    assert off.resilience_stats is None
+
+
+def test_disabled_resilience_is_bitwise_inert_fleet():
+    _assert_fleet_equal(_fleet(cfg()), _fleet(cfg(
+        impairments=ImpairmentConfig(), admission=AdmissionConfig())))
+
+
+def test_amplitude_zero_is_bitwise_inert_serial():
+    """Enabled engine at amplitude 0: every frame draws the trace, blends to
+    exact identity values, and the run stays bit-identical."""
+    zero = ImpairmentConfig(enabled=True, amplitude=0.0,
+                            link_profiles=IMPAIRED.link_profiles, seed=3)
+    base = _serial(cfg())
+    amp0 = _serial(cfg(impairments=zero))
+    assert base.as_dict() == amp0.as_dict()
+    assert amp0.resilience_stats is not None  # engine ran, accounting exists
+
+
+def test_amplitude_zero_is_bitwise_inert_fleet():
+    zero = ImpairmentConfig(enabled=True, amplitude=0.0,
+                            link_profiles=IMPAIRED.link_profiles, seed=3)
+    _assert_fleet_equal(_fleet(cfg()), _fleet(cfg(impairments=zero)))
+
+
+def test_admission_defaults_are_bitwise_inert():
+    # enabled, but inf queue cap + no shedding == identity
+    base = _serial(cfg())
+    on = _serial(cfg(admission=AdmissionConfig(enabled=True)))
+    assert base.as_dict() == on.as_dict()
+    assert on.resilience_stats == {
+        "n_shed": 0.0, "n_refused": 0.0, "frames_with_down_server": 0.0,
+    }
+
+
+def test_shed_without_congestion_is_noop_for_gus():
+    """With congestion off the predicted inflation is 1, so shedding removes
+    exactly the hard-infeasible requests — the ones GUS drops anyway."""
+    base = _serial(cfg(rate=6.0))
+    shed = _serial(cfg(rate=6.0, admission=AdmissionConfig(enabled=True, shed=True)))
+    assert base.as_dict() == shed.as_dict()
+
+
+def test_gus_adaptive_equals_gus_when_all_quiet():
+    # with no impairments the carry's server_up/link_bw stay at ones and the
+    # EMA shading is zero -> gus-adaptive must reproduce gus bit-for-bit
+    a = _serial(cfg(), policy="gus")
+    b = _serial(cfg(), policy="gus-adaptive")
+    assert a.as_dict() == b.as_dict()
+    _assert_fleet_equal(_fleet(cfg(), policy="gus"),
+                        _fleet(cfg(), policy="gus-adaptive"))
+
+
+# ---------------------------------------------------------------------------
+# behaviour: impairments bite, outages are accounted, shedding is safe
+# ---------------------------------------------------------------------------
+
+
+def test_impairments_reduce_satisfaction_and_are_deterministic():
+    # a tight deadline puts the transfer leg on the critical path, so the
+    # degraded link actually costs satisfied requests
+    tight = dict(horizon_ms=24_000.0, delay_req_ms=1500.0)
+    base = _serial(cfg(**tight))
+    a = _serial(cfg(**tight, impairments=IMPAIRED))
+    b = _serial(cfg(**tight, impairments=IMPAIRED))
+    assert a.as_dict() == b.as_dict()
+    assert a.satisfied_pct < base.satisfied_pct
+    assert a.n_requests == base.n_requests  # impairments never change arrivals
+
+
+def test_outage_stream_is_accounted():
+    r = _serial(cfg(horizon_ms=24_000.0, impairments=OUTAGES))
+    assert r.resilience_stats["frames_with_down_server"] > 0
+    base = _serial(cfg(horizon_ms=24_000.0))
+    assert r.satisfied_pct <= base.satisfied_pct
+
+
+def test_fleet_impairment_weather_is_rep_prefix_stable():
+    """The link/outage streams are seeded independently of the replication
+    index — every rep sees the same network weather — so growing the fleet
+    leaves the existing replications' results bitwise unchanged."""
+    c = cfg(horizon_ms=9_000.0, impairments=FULL)
+    f1 = _fleet(c, n_rep=1)
+    f3 = _fleet(c, n_rep=3)
+    assert f1.satisfied_per_rep[0] == f3.satisfied_per_rep[0]
+    assert f1.mean_us_per_rep[0] == f3.mean_us_per_rep[0]
+
+
+def test_backlog_conservation_closes_across_outages():
+    c = cfg(rate=4.0, horizon_ms=18_000.0,
+            congestion=CongestionConfig(enabled=True), impairments=FULL)
+    s = _serial(c, scenario=COMPOSITE).congestion_stats
+    for kind in ("gamma", "eta"):
+        enq = s[f"work_enqueued_{kind}"]
+        drained = s[f"work_drained_{kind}"]
+        carried = s[f"final_backlog_{kind}"]
+        np.testing.assert_allclose(drained + carried, enq, rtol=1e-6)
+
+
+def test_backlog_drains_after_recovery():
+    """Same absolute outage window, longer tail: the carried backlog built
+    during the outage drains once capacity comes back."""
+    # outage occupies [3 s, 9 s) in both runs; only the recovery tail grows
+    sc_short = OutageScenario(outage_start_frac=0.25, outage_end_frac=0.75)
+    sc_long = OutageScenario(outage_start_frac=0.125, outage_end_frac=0.375)
+    cc = CongestionConfig(enabled=True)
+    short = _serial(cfg(rate=4.0, horizon_ms=12_000.0, congestion=cc),
+                    scenario=sc_short).congestion_stats
+    long = _serial(cfg(rate=4.0, horizon_ms=24_000.0, congestion=cc),
+                   scenario=sc_long).congestion_stats
+    assert long["final_backlog_gamma"] <= short["final_backlog_gamma"]
+
+
+def test_protection_rescues_overcommitting_policy_on_composite():
+    c_none = cfg(rate=4.0, horizon_ms=18_000.0,
+                 congestion=CongestionConfig(enabled=True), impairments=FULL)
+    c_prot = cfg(rate=4.0, horizon_ms=18_000.0,
+                 congestion=CongestionConfig(enabled=True), impairments=FULL,
+                 admission=PROTECTED)
+    plain = _fleet(c_none, policy="happy_computation", scenario=COMPOSITE)
+    prot = _fleet(c_prot, policy="happy_computation", scenario=COMPOSITE)
+    assert prot.satisfied_pct > plain.satisfied_pct
+
+
+def test_protection_leaves_gus_untouched_on_composite():
+    """GUS honors per-frame capacity, so its backlog never crosses the cap
+    and its pre-frame inflation estimate never sheds a request it would
+    have served: protection is exactly inert."""
+    c_none = cfg(rate=4.0, horizon_ms=18_000.0,
+                 congestion=CongestionConfig(enabled=True), impairments=FULL)
+    c_prot = cfg(rate=4.0, horizon_ms=18_000.0,
+                 congestion=CongestionConfig(enabled=True), impairments=FULL,
+                 admission=PROTECTED)
+    _assert_fleet_equal(_fleet(c_none, scenario=COMPOSITE),
+                        _fleet(c_prot, scenario=COMPOSITE))
+
+
+def test_flash_crowd_outage_scenario_registered():
+    sc = get_scenario("flash-crowd-outage")
+    assert isinstance(sc, FlashCrowdOutageScenario)
+    c = cfg(horizon_ms=10_000.0)
+    inside = sc.capacity_scale(0.5 * c.horizon_ms, c, SPEC.n_edge, SPEC.n_servers)
+    outside = sc.capacity_scale(0.9 * c.horizon_ms, c, SPEC.n_edge, SPEC.n_servers)
+    assert inside is not None and inside[sc.down_servers[0]] == 0.0
+    assert outside is None or np.all(np.asarray(outside) == 1.0)
+
+
+# ---------------------------------------------------------------------------
+# parity: every fleet execution path agrees under active impairments
+# ---------------------------------------------------------------------------
+
+ACTIVE = dict(rate=3.0, horizon_ms=12_000.0,
+              congestion=CongestionConfig(enabled=True), impairments=FULL,
+              admission=PROTECTED)
+
+
+@pytest.mark.parametrize("policy", ["gus", "gus-adaptive"])
+def test_windowed_fleet_parity_under_impairments(policy):
+    c = cfg(**ACTIVE)
+    full = _fleet(c, policy=policy, n_rep=2, scenario=COMPOSITE)
+    win = _fleet(c, policy=policy, n_rep=2, scenario=COMPOSITE, window=4)
+    _assert_fleet_equal(full, win)
+
+
+def test_prefetched_fleet_parity_under_impairments():
+    c = cfg(**ACTIVE)
+    p0 = _fleet(c, n_rep=2, scenario=COMPOSITE, window=4, prefetch=0)
+    p2 = _fleet(c, n_rep=2, scenario=COMPOSITE, window=4, prefetch=2)
+    _assert_fleet_equal(p0, p2)
+
+
+def test_streaming_fleet_parity_under_impairments():
+    c = cfg(**ACTIVE)
+    w4 = _fleet(c, n_rep=2, scenario=COMPOSITE, streaming=True, window=4)
+    w9 = _fleet(c, n_rep=2, scenario=COMPOSITE, streaming=True, window=9)
+    _assert_fleet_equal(w4, w9)
+
+
+def test_vectorized_rng_fleet_parity_under_impairments():
+    c = cfg(**ACTIVE)
+    full = _fleet(c, n_rep=2, scenario=COMPOSITE, rng_mode="vectorized")
+    win = _fleet(c, n_rep=2, scenario=COMPOSITE, rng_mode="vectorized", window=4)
+    _assert_fleet_equal(full, win)
+
+
+@pytest.mark.skipif(jax.device_count() < 2, reason="needs >= 2 devices")
+def test_sharded_fleet_parity_under_impairments():
+    c = cfg(**ACTIVE)
+    one = _fleet(c, n_rep=4, scenario=COMPOSITE, devices=1, rep_group=2)
+    two = _fleet(c, n_rep=4, scenario=COMPOSITE, devices=2, rep_group=2)
+    _assert_fleet_equal(one, two)
