@@ -59,6 +59,7 @@ if _SRC.is_dir() and str(_SRC) not in sys.path:
 import jax
 
 from repro.core import SimConfig, demo_cluster_spec, simulate_fleet
+from repro.obs import profile_trace
 
 try:  # imported as benchmarks.fleet_scale (run.py)
     from .common import gate_rows_against_baseline
@@ -280,11 +281,16 @@ def main(argv=None):
                          "serial per-request pipeline")
     ap.add_argument("--update-baseline", metavar="PATH",
                     help="also write the report to PATH (refresh the baseline)")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler device trace of the sweep "
+                         "into DIR (fleet dispatch groups and scan windows "
+                         "are annotated)")
     args = ap.parse_args(argv)
 
     repeats = args.repeats if args.repeats is not None else (2 if args.tiny else 3)
-    report = run(tiny=args.tiny, out=args.out, device_counts=args.devices,
-                 repeats=repeats)
+    with profile_trace(args.profile):
+        report = run(tiny=args.tiny, out=args.out, device_counts=args.devices,
+                     repeats=repeats)
 
     if args.update_baseline:
         Path(args.update_baseline).parent.mkdir(parents=True, exist_ok=True)

@@ -10,6 +10,7 @@ benches.  ``PYTHONPATH=src python -m benchmarks.run [--fast]``.
   sched     — GUS scheduling throughput (jit/vmap systems number)
   fleet     — sharded Monte-Carlo fleet throughput (BENCH_fleet.json)
   scenarios — satisfied-% per scheduler per registered workload scenario
+  telemetry — disabled-path telemetry overhead gate (< 1%)
   roofline  — per-(arch x shape x mesh) roofline table from dry-run reports
 """
 from __future__ import annotations
@@ -24,7 +25,7 @@ def main(argv=None):
     ap.add_argument("--fast", action="store_true", help="fewer MC runs")
     ap.add_argument(
         "--only",
-        choices=["fig1num", "fig1test", "figures", "resilience", "render", "optimal", "sched", "fleet", "serving", "extensions", "scenarios", "roofline"],
+        choices=["fig1num", "fig1test", "figures", "resilience", "render", "optimal", "sched", "fleet", "serving", "extensions", "scenarios", "telemetry", "roofline"],
         default=None,
     )
     args = ap.parse_args(argv)
@@ -41,6 +42,7 @@ def main(argv=None):
         scenario_sweep,
         scheduler_throughput,
         serving_bench,
+        telemetry_overhead,
         extensions_bench,
     )
 
@@ -63,6 +65,10 @@ def main(argv=None):
         "extensions": lambda: extensions_bench.main(fast=args.fast),
         "scenarios": lambda: (
             scenario_sweep.main(seeds=(0,), n_rep=4) if args.fast else scenario_sweep.main()
+        ),
+        "telemetry": lambda: telemetry_overhead.main(
+            ["--tiny", "--assert-overhead", "0.01"] if args.fast
+            else ["--assert-overhead", "0.01"]
         ),
         "roofline": roofline_table.main,
     }

@@ -20,6 +20,9 @@ servers slow down, the regime where Happy-* collapse):
 from __future__ import annotations
 
 import argparse
+import contextlib
+import json
+import os
 
 from repro.core import (
     CongestionConfig,
@@ -32,6 +35,12 @@ from repro.core import (
     list_scenarios,
     simulate,
     simulate_fleet,
+)
+from repro.obs import (
+    AsyncJsonlWriter,
+    profile_trace,
+    recording,
+    validate_chrome_trace,
 )
 
 
@@ -73,6 +82,21 @@ def main(argv=None):
                          "Applies to the default/'gus' policy only")
     ap.add_argument("--congestion", action="store_true",
                     help="enable load-dependent service times (queueing model)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="collect the per-frame metric stream (utilization, "
+                         "backlog, QoS-class satisfaction, assignment tiers) "
+                         "and write it as JSONL under results/telemetry/")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="override the metric stream's JSONL path "
+                         "(default results/telemetry/<scenario>-<policy>"
+                         ".metrics.jsonl)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record host spans for the whole run and save a "
+                         "Chrome trace-event JSON (open in chrome://tracing "
+                         "or Perfetto)")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler device trace of the run "
+                         "into DIR (TensorBoard/Perfetto-loadable)")
     stream = ap.add_mutually_exclusive_group()
     stream.add_argument("--streaming", dest="streaming", action="store_true",
                         default=None,
@@ -134,33 +158,76 @@ def main(argv=None):
         mode.append("vectorized-rng")
     tag = f" [{', '.join(mode)}]" if mode else ""
     print(f"=== scenario {scn.name!r} / policy {args.policy!r}{tag} ===")
-    try:
-        r = simulate(spec, cfg, scenario=scn, seed=args.seed,
-                     streaming=args.streaming, rng_mode=args.rng_mode, **sim_kw)
-    except (KeyError, ValueError) as e:  # unknown policy / ILP frame too big
-        raise SystemExit(str(e.args[0]))
-    for k, v in r.as_dict().items():
-        print(f"  {k:20s} {float(v):10.3f}")
+    if args.metrics and args.policy == "gus-np":
+        raise SystemExit("--metrics needs a registered policy (not gus-np)")
+    metrics_kw = {"metrics": True} if args.metrics else {}
 
-    if args.fleet:
-        if args.policy == "gus-np":
-            raise SystemExit("gus-np is host-only; the fleet needs a registered policy")
+    fr = None
+    rec_ctx = recording() if args.trace else contextlib.nullcontext()
+    with profile_trace(args.profile), rec_ctx as rec:
         try:
-            # a --devices request the host cannot honor raises a clear
-            # ValueError (never a silent single-device fallback)
-            fleet_kw = dict(sim_kw)
-            if args.prefetch is not None:
-                fleet_kw["prefetch"] = args.prefetch
-            fr = simulate_fleet(spec, cfg, scenario=scn, n_rep=args.fleet,
-                                seed=args.seed, streaming=args.streaming,
-                                devices=args.devices, window=args.window,
-                                rng_mode=args.rng_mode, **fleet_kw)
-        except ValueError as e:  # bad --devices, ILP on an uncapped frame, ...
+            r = simulate(spec, cfg, scenario=scn, seed=args.seed,
+                         streaming=args.streaming, rng_mode=args.rng_mode,
+                         **sim_kw, **metrics_kw)
+        except (KeyError, ValueError) as e:  # unknown policy / ILP too big
             raise SystemExit(str(e.args[0]))
-        print(f"=== fleet: {args.fleet} replications on "
-              f"{fr.n_devices} device(s) ===")
-        for k, v in fr.as_dict().items():
+        for k, v in r.as_dict().items():
             print(f"  {k:20s} {float(v):10.3f}")
+        if args.metrics:
+            # export while the recorder is live: the writer thread's io
+            # spans land in the trace alongside the simulation's
+            out = args.metrics_out or os.path.join(
+                "results", "telemetry",
+                f"{scn.name}-{args.policy}.metrics.jsonl",
+            )
+            with AsyncJsonlWriter(out) as w:
+                n_rows = r.metrics.to_jsonl(None, writer=w)
+            print(f"=== metrics: {n_rows} rows -> {out} ===")
+            for k, v in r.metrics.aggregate().items():
+                print(f"  {k:20s} {v}")
+
+        if args.fleet:
+            if args.policy == "gus-np":
+                raise SystemExit(
+                    "gus-np is host-only; the fleet needs a registered policy"
+                )
+            try:
+                # a --devices request the host cannot honor raises a clear
+                # ValueError (never a silent single-device fallback)
+                fleet_kw = dict(sim_kw)
+                if args.prefetch is not None:
+                    fleet_kw["prefetch"] = args.prefetch
+                fr = simulate_fleet(spec, cfg, scenario=scn, n_rep=args.fleet,
+                                    seed=args.seed, streaming=args.streaming,
+                                    devices=args.devices, window=args.window,
+                                    rng_mode=args.rng_mode, **fleet_kw,
+                                    **metrics_kw)
+            except ValueError as e:  # bad --devices, ILP uncapped frame, ...
+                raise SystemExit(str(e.args[0]))
+            print(f"=== fleet: {args.fleet} replications on "
+                  f"{fr.n_devices} device(s) ===")
+            for k, v in fr.as_dict().items():
+                print(f"  {k:20s} {float(v):10.3f}")
+            if args.metrics:
+                out = os.path.join(
+                    "results", "telemetry",
+                    f"{scn.name}-{args.policy}.fleet.metrics.jsonl",
+                ) if args.metrics_out is None else (
+                    args.metrics_out + ".fleet"
+                )
+                with AsyncJsonlWriter(out) as w:
+                    n_rows = fr.metrics.to_jsonl(None, writer=w)
+                print(f"=== fleet metrics: {n_rows} rows -> {out} ===")
+
+    if args.trace:
+        rec.save(args.trace)
+        with open(args.trace) as f:
+            errs = validate_chrome_trace(json.load(f))
+        cats = sorted(rec.categories())
+        print(f"=== trace: {len(rec)} events, categories {cats}, "
+              f"{len(rec.thread_ids())} thread(s) -> {args.trace} "
+              f"({'valid' if not errs else errs}) ===")
+    return r, fr
 
 
 if __name__ == "__main__":

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.gus_pallas import gus_assign_pallas
+from repro.obs.profiler import annotate
 
 from .instance import FlatInstance
 from .satisfaction import hard_feasible, us_tensor
@@ -262,13 +263,15 @@ def gus_schedule(
     ``REPRO_GUS_BACKEND`` environment variable) — assignments are
     bit-identical across backends."""
     if resolve_gus_backend(backend) == "pallas":
-        return _gus_schedule_pallas(
-            inst, relax_compute=relax_compute, relax_comm=relax_comm,
-            interpret=_pallas_interpret(),
+        with annotate("gus/pallas_kernel"):
+            return _gus_schedule_pallas(
+                inst, relax_compute=relax_compute, relax_comm=relax_comm,
+                interpret=_pallas_interpret(),
+            )
+    with annotate("gus/xla"):
+        return _gus_schedule_xla(
+            inst, relax_compute=relax_compute, relax_comm=relax_comm
         )
-    return _gus_schedule_xla(
-        inst, relax_compute=relax_compute, relax_comm=relax_comm
-    )
 
 
 @partial(jax.jit, static_argnames=("relax_compute", "relax_comm"))
@@ -292,13 +295,15 @@ def gus_schedule_batch(
     XLA by default, or the natively-batched Pallas kernel (one grid program
     per frame) with ``backend="pallas"``."""
     if resolve_gus_backend(backend) == "pallas":
-        return _gus_schedule_batch_pallas(
-            batch, relax_compute=relax_compute, relax_comm=relax_comm,
-            interpret=_pallas_interpret(),
+        with annotate("gus/pallas_kernel_batch"):
+            return _gus_schedule_batch_pallas(
+                batch, relax_compute=relax_compute, relax_comm=relax_comm,
+                interpret=_pallas_interpret(),
+            )
+    with annotate("gus/xla_batch"):
+        return _gus_schedule_batch_xla(
+            batch, relax_compute=relax_compute, relax_comm=relax_comm
         )
-    return _gus_schedule_batch_xla(
-        batch, relax_compute=relax_compute, relax_comm=relax_comm
-    )
 
 
 @functools.lru_cache(maxsize=None)

@@ -43,7 +43,10 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.obs.metrics import QOS_ACC_EDGES, MetricsFrame
+
 from .instance import FlatInstance
+from .satisfaction import mean_us, satisfied_mask
 
 __all__ = [
     "CongestionConfig",
@@ -57,6 +60,8 @@ __all__ = [
     "ema_update",
     "effective_capacity",
     "congested_ctime",
+    "frame_utilization",
+    "frame_metrics",
 ]
 
 _EPS = 1e-9
@@ -256,4 +261,70 @@ def congested_ctime(inst: FlatInstance, tq, phi_c, phi_e) -> jnp.ndarray:
         inst.ctime
         + inst.v * (phi_c[..., None, :, None] - 1.0)
         + comm * (phi_e_cover[..., :, None, None] - 1.0)
+    )
+
+
+def frame_utilization(committed, budget) -> jnp.ndarray:
+    """Per-server committed-work / frame-budget ratio, 0 where the budget
+    is zero (a fully-down server under an outage mask).  Overcommitting
+    policies exceed 1 — that *is* the signal the calibration item needs."""
+    return jnp.where(budget > 0.0, committed / jnp.maximum(budget, _EPS), 0.0)
+
+
+def frame_metrics(
+    inst: FlatInstance,
+    assign_j,
+    assign_l,
+    tq,
+    phi_c,
+    phi_e,
+    n_real,
+    n_edge: int,
+    carry: PolicyCarry,
+    n_shed,
+    n_refused,
+    qos_edges: Tuple[float, ...] = QOS_ACC_EDGES,
+) -> MetricsFrame:
+    """One decision's :class:`~repro.obs.metrics.MetricsFrame`, pure jnp.
+
+    Runs unbatched inside ``simulate_fleet``'s scan step (the scan stacks
+    the frame axis, ``vmap`` the replication axis) on the *same* operands
+    the result metrics use — ``congested_ctime`` with the step's
+    inflation factors (bitwise ``inst.ctime`` when they are all ones), so
+    the stream's satisfaction counts match ``FleetResult`` exactly.
+    ``n_real`` masks the padded rows; ``carry`` supplies the post-step
+    backlogs (the series the Fig. 1(e)-(h) calibration fits against).
+    """
+    N = assign_j.shape[-1]
+    real = jnp.arange(N) < n_real
+    served = (assign_j >= 0) & real
+    minst = dataclasses.replace(
+        inst, ctime=congested_ctime(inst, tq, phi_c, phi_e)
+    )
+    sat = satisfied_mask(minst, assign_j, assign_l) & real
+    local = served & (assign_j == inst.cover)
+    cloud = served & (assign_j >= n_edge)
+    tier = jnp.stack(
+        [local.sum(), (served & ~local & ~cloud).sum(), cloud.sum()]
+    ).astype(jnp.int32)
+    edges = jnp.asarray(qos_edges, jnp.float32)
+    cls = jnp.sum(inst.A[..., :, None] >= edges, axis=-1)
+    nq = len(qos_edges) + 1
+    qos_count = jnp.zeros((nq,), jnp.int32).at[cls].add(real.astype(jnp.int32))
+    qos_sat = jnp.zeros((nq,), jnp.int32).at[cls].add(sat.astype(jnp.int32))
+    w, c = committed_loads(inst, assign_j, assign_l)
+    return MetricsFrame(
+        n_arrivals=jnp.asarray(n_real, jnp.int32),
+        n_served=served.sum().astype(jnp.int32),
+        n_satisfied=sat.sum().astype(jnp.int32),
+        n_shed=jnp.asarray(n_shed, jnp.int32),
+        n_refused=jnp.asarray(n_refused, jnp.int32),
+        tier_hist=tier,
+        qos_sat=qos_sat,
+        qos_count=qos_count,
+        util_gamma=frame_utilization(w, inst.gamma),
+        util_eta=frame_utilization(c, inst.eta),
+        backlog_gamma=carry.backlog_gamma,
+        backlog_eta=carry.backlog_eta,
+        us_sum=(mean_us(minst, assign_j, assign_l) * N).astype(jnp.float32),
     )

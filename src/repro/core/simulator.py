@@ -65,6 +65,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.metrics import QOS_ACC_EDGES, MetricsFrame, MetricsResult
+from repro.obs.profiler import annotate, step_annotation
+from repro.obs.trace import (
+    CAT_BUILD,
+    CAT_COMPILE,
+    CAT_DISPATCH,
+    CAT_GEN,
+    CAT_METRICS,
+    CAT_SCHED,
+    Stopwatch,
+    instant,
+    span,
+)
+
 from .gus import Assignment, gus_backend_fn, gus_schedule
 from .impairments import (
     AdmissionConfig,
@@ -85,6 +99,7 @@ from .queueing import (
     effective_capacity,
     ema_update,
     fleet_policy_carry,
+    frame_metrics,
     init_policy_carry,
     step_backlog,
 )
@@ -195,6 +210,14 @@ class SimResult:
     #: control are enabled): requests shed at admission, assignments
     #: refused by the queue cap, frames with a down server
     resilience_stats: Optional[Dict[str, float]] = None
+    #: wall-clock seconds per pipeline phase, from the span recorder
+    #: (``gen_s`` arrival generation / stream pulls, ``build_s`` frame
+    #: instance building, ``sched_s`` scheduler calls, ``realize_s``
+    #: realized-delay accounting, ``total_s`` end to end) — the single-run
+    #: counterpart of ``FleetResult.gen_s`` / ``dispatch_s``
+    timings: Optional[Dict[str, float]] = None
+    #: per-decision metric stream (``metrics=True`` only; None otherwise)
+    metrics: Optional[MetricsResult] = None
 
     @property
     def satisfied_pct(self) -> float:
@@ -615,8 +638,21 @@ def simulate(
     streaming: Optional[bool] = None,
     rng_mode: Optional[str] = None,
     backend: Optional[str] = None,
+    metrics: bool = False,
 ) -> SimResult:
     """Run the virtual testbed.
+
+    ``metrics=True`` additionally records one
+    :class:`~repro.obs.metrics.MetricsFrame` per scheduling decision
+    (per-server utilization/backlog, shed/refusal counts, per-QoS-class
+    satisfaction, assignment tiers) into ``SimResult.metrics`` — computed
+    from the *same* counters as the aggregate result, so the stream's
+    totals match the ``SimResult`` exactly.  Single-run rows report the
+    backlog *entering* each decision (the fleet's scan rows report the
+    carried backlog after the frame).  With ``metrics=False`` (default)
+    nothing extra runs and results are bit-identical to the
+    pre-telemetry simulator.  ``SimResult.timings`` always carries the
+    span-derived phase timings (generation / build / schedule / realize).
 
     ``backend`` picks the default GUS scheduler's implementation on the
     padded hot path (``"xla"`` jitted loop — the default — or ``"pallas"``
@@ -686,6 +722,9 @@ def simulate(
         if cfg.impairments.enabled else None
     )
 
+    sw = Stopwatch()
+    t_run0 = time.perf_counter()
+
     # --- arrivals (materialized trace, or bounded-memory stream) -------------
     use_stream = scn.streaming if streaming is None else streaming
     mode = _resolve_rng_mode(scn.rng_mode if rng_mode is None else rng_mode)
@@ -695,7 +734,8 @@ def simulate(
             limit=n_requests,
         )
     else:
-        reqs = scn.generate_arrivals(rng, spec.n_edge, K, cfg, rng_mode=mode)
+        with sw.span("sim/generate_trace", CAT_GEN):
+            reqs = scn.generate_arrivals(rng, spec.n_edge, K, cfg, rng_mode=mode)
         if n_requests is not None:
             reqs = reqs[:n_requests]
         source = _ArrivalSource(reqs=reqs)
@@ -716,6 +756,12 @@ def simulate(
     buffer: deque = deque()
     t = 0.0
     is_cloud = spec.is_cloud()
+
+    # per-decision metric rows (metrics=True only)
+    m_rows: List[MetricsFrame] = []
+    m_times: List[float] = []
+    m_qos_edges = np.asarray(QOS_ACC_EDGES, np.float64)
+    m_nq = len(QOS_ACC_EDGES) + 1
 
     # congestion state (numpy, float64 like the budgets)
     backlog_g = np.zeros(M)
@@ -751,7 +797,8 @@ def simulate(
         # admit arrivals in this frame; queue_cap per covering server
         qlen = {e: sum(1 for r in pending if r.cover == e) for e in range(spec.n_edge)}
         early_close = None
-        buffer.extend(source.pull(frame_end))
+        with sw.span("sim/arrival_pull", CAT_GEN):
+            buffer.extend(source.pull(frame_end))
         while buffer:
             r = buffer[0]
             if qlen.get(r.cover, 0) >= cfg.queue_cap:
@@ -812,10 +859,24 @@ def simulate(
                     link_bw=jnp.asarray(link_scale, jnp.float32),
                     server_up=jnp.asarray(up_now),
                 )
-            inst = _build_frame_instance(
-                pending, spec, cfg, decision_time, bw_est, max_cs,
-                gamma=rem_gamma, eta=rem_eta, link=link,
-            )
+            if metrics:
+                # deltas of the run counters across this decision become the
+                # MetricsFrame row; backlog is sampled *entering* the decision
+                m_shed0, m_ref0 = n_shed, n_refused
+                m_served0, m_sat0 = n_served, n_sat
+                m_local0, m_cloud0, m_eo0 = n_local, n_cloud, n_eo
+                m_us0 = us_sum
+                m_backlog_g = backlog_g.astype(np.float32)
+                m_backlog_e = backlog_e.astype(np.float32)
+                m_qos_cnt = np.zeros(m_nq, np.int32)
+                m_qos_sat = np.zeros(m_nq, np.int32)
+                m_w = np.zeros(M)
+                m_c = np.zeros(M)
+            with sw.span("sim/frame_build", CAT_BUILD):
+                inst = _build_frame_instance(
+                    pending, spec, cfg, decision_time, bw_est, max_cs,
+                    gamma=rem_gamma, eta=rem_eta, link=link,
+                )
             if acfg.enabled and acfg.shed:
                 # deadline shedding against the pre-frame (backlog-only)
                 # inflation estimate — full budgets, like the fleet scan
@@ -838,17 +899,22 @@ def simulate(
             # compile once per bucket; padded rows are infeasible -> dropped.
             # Non-padding policies (the ILP oracle) see the raw frame.
             frame_inst = pad_instance(inst, _pad_bucket(n_real)) if pad else inst
-            if stateful:
-                assign, carry = scheduler(frame_inst, carry)
-            elif needs_key:
-                # split order matches the legacy chain: (next, sub) = split(key)
-                nxt, sub = jax.random.split(carry.key)
-                carry = dataclasses.replace(carry, key=nxt)
-                assign = scheduler(frame_inst, sub)
-            else:
-                assign = scheduler(frame_inst)
-            jv = np.asarray(assign.j)[:n_real]
-            lv = np.asarray(assign.l)[:n_real]
+            with sw.span("sim/schedule", CAT_SCHED, n=n_real), \
+                    annotate("sim/schedule"):
+                if stateful:
+                    assign, carry = scheduler(frame_inst, carry)
+                elif needs_key:
+                    # split order matches the legacy chain:
+                    # (next, sub) = split(key)
+                    nxt, sub = jax.random.split(carry.key)
+                    carry = dataclasses.replace(carry, key=nxt)
+                    assign = scheduler(frame_inst, sub)
+                else:
+                    assign = scheduler(frame_inst)
+                # materialization syncs with the device, so the block times
+                # the actual scheduler compute, not just its dispatch
+                jv = np.asarray(assign.j)[:n_real]
+                lv = np.asarray(assign.l)[:n_real]
             if acfg.enabled:
                 # queue cap: refuse assignments to servers whose carried
                 # backlog exceeds the cap (full frame budgets, like the
@@ -864,82 +930,124 @@ def simulate(
                 n_refused += int(refuse.sum())
                 jv = np.where(refuse, -1, jv)
 
-            # pass 1 — capacity commit (shared frame budget + backlog growth)
-            for idx, r in enumerate(pending):
-                j, l = int(jv[idx]), int(lv[idx])
-                if j < 0:
-                    continue
-                local = j == r.cover
-                rem_gamma[j] -= spec.proc_ms[j, r.service, l]
-                committed_g[j] += spec.proc_ms[j, r.service, l]
-                if not local:
-                    rem_eta[r.cover] -= r.size_bytes / 1024.0
-                    committed_e[r.cover] += r.size_bytes / 1024.0
+            with sw.span("sim/realize", CAT_METRICS, n=n_real):
+                # pass 1 — capacity commit (shared frame budget + backlog
+                # growth)
+                for idx, r in enumerate(pending):
+                    j, l = int(jv[idx]), int(lv[idx])
+                    if j < 0:
+                        continue
+                    local = j == r.cover
+                    rem_gamma[j] -= spec.proc_ms[j, r.service, l]
+                    committed_g[j] += spec.proc_ms[j, r.service, l]
+                    if metrics:
+                        m_w[j] += spec.proc_ms[j, r.service, l]
+                    if not local:
+                        rem_eta[r.cover] -= r.size_bytes / 1024.0
+                        committed_e[r.cover] += r.size_bytes / 1024.0
+                        if metrics:
+                            m_c[r.cover] += r.size_bytes / 1024.0
 
-            # the whole decision batch shares one inflation factor, computed
-            # from the wall-clock frame's committed-so-far load (matches the
-            # fleet's frame-synchronous semantics when queue_cap never trips)
-            if ccfg.enabled:
-                phi_c = np.asarray(
-                    compute_inflation(backlog_g + committed_g, frame_budget_g, ccfg)
-                )
-                phi_e = np.asarray(
-                    comm_inflation(backlog_e + committed_e, frame_budget_e, ccfg)
-                )
-                infl_sum += float(phi_c.sum())
-                infl_max = max(infl_max, float(phi_c.max()), float(phi_e.max()))
-                infl_n += M
-
-            # pass 2 — realized delays and stats (RNG draw order unchanged)
-            observed_bw = []
-            for idx, r in enumerate(pending):
-                j, l = int(jv[idx]), int(lv[idx])
-                if j < 0:
-                    n_drop += 1
-                    continue
-                n_served += 1
-                local = j == r.cover
-                # realized delays
-                proc = spec.proc_ms[j, r.service, l] * rng.lognormal(0.0, cfg.proc_sigma)
-                if local:
-                    comm = 0.0
-                else:
-                    bw_real = spec.bandwidth_true * rng.lognormal(0.0, cfg.channel_sigma)
-                    extra = 0.0
-                    if engine is not None:  # the realized channel is impaired too
-                        # plain-float arithmetic keeps the downstream
-                        # accumulator dtypes identical to the unimpaired path
-                        bw_real = bw_real * float(link_scale[r.cover])
-                        extra = float(link_lat[r.cover])
-                    comm = r.size_bytes / bw_real + extra + (
-                        spec.cloud_extra_delay if is_cloud[j] else 0.0
-                    )
-                    # the estimator observes the *channel* (uninflated
-                    # transfer, net of the link's known extra latency)
-                    observed_bw.append(r.size_bytes / max(comm - extra - (spec.cloud_extra_delay if is_cloud[j] else 0.0), 1e-6))
+                # the whole decision batch shares one inflation factor,
+                # computed from the wall-clock frame's committed-so-far load
+                # (matches the fleet's frame-synchronous semantics when
+                # queue_cap never trips)
                 if ccfg.enabled:
-                    proc = proc * phi_c[j]
-                    comm = comm * phi_e[r.cover]
-                tq = decision_time - r.arrival_ms
-                ct = tq + proc + comm
-                acc = spec.acc[r.service, l]
-                sat = (ct <= r.C) and (acc >= r.A)
-                n_sat += int(sat)
-                n_local += int(local)
-                n_cloud += int((not local) and is_cloud[j])
-                n_eo += int((not local) and (not is_cloud[j]))
-                us_sum += cfg.w_a * (acc - r.A) / cfg.max_as + cfg.w_c * (r.C - ct) / max_cs
-                comp_sum += ct
-                q_sum += tq
-                if cfg.adapt_max_cs:
-                    max_cs = max(max_cs, ct)
-            pending = []
-            if observed_bw:
-                bw_prev, bw_cur = bw_cur, float(np.mean(observed_bw))
-                bw_log.append(0.5 * (bw_cur + bw_prev))
-                carry = dataclasses.replace(
-                    carry, bw_prev=jnp.float32(bw_prev), bw_cur=jnp.float32(bw_cur)
-                )
+                    phi_c = np.asarray(
+                        compute_inflation(backlog_g + committed_g, frame_budget_g, ccfg)
+                    )
+                    phi_e = np.asarray(
+                        comm_inflation(backlog_e + committed_e, frame_budget_e, ccfg)
+                    )
+                    infl_sum += float(phi_c.sum())
+                    infl_max = max(infl_max, float(phi_c.max()), float(phi_e.max()))
+                    infl_n += M
+
+                # pass 2 — realized delays and stats (RNG draw order
+                # unchanged)
+                observed_bw = []
+                for idx, r in enumerate(pending):
+                    j, l = int(jv[idx]), int(lv[idx])
+                    if metrics:
+                        m_cls = int(np.searchsorted(m_qos_edges, r.A, side="right"))
+                        m_qos_cnt[m_cls] += 1
+                    if j < 0:
+                        n_drop += 1
+                        continue
+                    n_served += 1
+                    local = j == r.cover
+                    # realized delays
+                    proc = spec.proc_ms[j, r.service, l] * rng.lognormal(0.0, cfg.proc_sigma)
+                    if local:
+                        comm = 0.0
+                    else:
+                        bw_real = spec.bandwidth_true * rng.lognormal(0.0, cfg.channel_sigma)
+                        extra = 0.0
+                        if engine is not None:  # the realized channel is impaired too
+                            # plain-float arithmetic keeps the downstream
+                            # accumulator dtypes identical to the unimpaired path
+                            bw_real = bw_real * float(link_scale[r.cover])
+                            extra = float(link_lat[r.cover])
+                        comm = r.size_bytes / bw_real + extra + (
+                            spec.cloud_extra_delay if is_cloud[j] else 0.0
+                        )
+                        # the estimator observes the *channel* (uninflated
+                        # transfer, net of the link's known extra latency)
+                        observed_bw.append(r.size_bytes / max(comm - extra - (spec.cloud_extra_delay if is_cloud[j] else 0.0), 1e-6))
+                    if ccfg.enabled:
+                        proc = proc * phi_c[j]
+                        comm = comm * phi_e[r.cover]
+                    tq = decision_time - r.arrival_ms
+                    ct = tq + proc + comm
+                    acc = spec.acc[r.service, l]
+                    sat = (ct <= r.C) and (acc >= r.A)
+                    if metrics and sat:
+                        m_qos_sat[m_cls] += 1
+                    n_sat += int(sat)
+                    n_local += int(local)
+                    n_cloud += int((not local) and is_cloud[j])
+                    n_eo += int((not local) and (not is_cloud[j]))
+                    us_sum += cfg.w_a * (acc - r.A) / cfg.max_as + cfg.w_c * (r.C - ct) / max_cs
+                    comp_sum += ct
+                    q_sum += tq
+                    if cfg.adapt_max_cs:
+                        max_cs = max(max_cs, ct)
+                pending = []
+                if observed_bw:
+                    bw_prev, bw_cur = bw_cur, float(np.mean(observed_bw))
+                    bw_log.append(0.5 * (bw_cur + bw_prev))
+                    carry = dataclasses.replace(
+                        carry, bw_prev=jnp.float32(bw_prev), bw_cur=jnp.float32(bw_cur)
+                    )
+            if metrics:
+                with np.errstate(invalid="ignore"):
+                    m_ug = np.where(
+                        frame_budget_g > 0.0,
+                        m_w / np.maximum(frame_budget_g, 1e-9), 0.0,
+                    )
+                    m_ue = np.where(
+                        frame_budget_e > 0.0,
+                        m_c / np.maximum(frame_budget_e, 1e-9), 0.0,
+                    )
+                m_rows.append(MetricsFrame(
+                    n_arrivals=np.int32(n_real),
+                    n_served=np.int32(n_served - m_served0),
+                    n_satisfied=np.int32(n_sat - m_sat0),
+                    n_shed=np.int32(n_shed - m_shed0),
+                    n_refused=np.int32(n_refused - m_ref0),
+                    tier_hist=np.array(
+                        [n_local - m_local0, n_eo - m_eo0, n_cloud - m_cloud0],
+                        np.int32,
+                    ),
+                    qos_sat=m_qos_sat,
+                    qos_count=m_qos_cnt,
+                    util_gamma=m_ug.astype(np.float32),
+                    util_eta=m_ue.astype(np.float32),
+                    backlog_gamma=m_backlog_g,
+                    backlog_eta=m_backlog_e,
+                    us_sum=np.float32(us_sum - m_us0),
+                ))
+                m_times.append(decision_time)
 
         t = decision_time if early_close is not None else frame_end
         if source.exhausted and not buffer and not pending:
@@ -973,6 +1081,18 @@ def simulate(
         }
 
     n_total = source.n_total
+    timings = {
+        "gen_s": sw.total("sim/generate_trace", "sim/arrival_pull"),
+        "build_s": sw.total("sim/frame_build"),
+        "sched_s": sw.total("sim/schedule"),
+        "realize_s": sw.total("sim/realize"),
+        "total_s": time.perf_counter() - t_run0,
+    }
+    mres = None
+    if metrics:
+        mres = MetricsResult.from_rows(
+            m_rows, m_times, spec.n_edge, cfg.frame_ms
+        )
     return SimResult(
         n_requests=n_total,
         n_served=n_served,
@@ -987,6 +1107,8 @@ def simulate(
         bandwidth_estimates=bw_log,
         congestion_stats=congestion_stats,
         resilience_stats=resilience_stats,
+        timings=timings,
+        metrics=mres,
     )
 
 
@@ -1027,6 +1149,12 @@ class FleetResult:
     gen_s: float = 0.0
     #: producer-queue depth the run used (0 = serial single-thread build)
     prefetch: int = 0
+    #: per-span wall-clock totals from the run's :class:`~repro.obs.trace.
+    #: Stopwatch` — ``gen_s``/``dispatch_s`` above are derived from these
+    #: same spans, so the two views can never disagree
+    timings: Optional[Dict[str, float]] = None
+    #: per-(rep, frame) metric stream (``metrics=True`` only; None otherwise)
+    metrics: Optional[MetricsResult] = None
 
     @property
     def satisfied_pct(self) -> float:
@@ -1149,23 +1277,33 @@ class _RepFrameSource:
 
 
 @functools.lru_cache(maxsize=None)
+def _bound_policy_impl(pol: Policy, n_edge: int, n_servers: int):
+    return pol.bind(n_edge, n_servers)
+
+
 def _bound_policy(pol: Policy, n_edge: int, n_servers: int):
     """``pol.bind`` with a stable identity across ``simulate_fleet`` calls —
     the bound function keys the compiled-runner cache below, so repeated
     fleet calls (benchmark sweeps!) reuse the compiled program instead of
-    re-tracing and re-compiling every time."""
-    return pol.bind(n_edge, n_servers)
+    re-tracing and re-compiling every time.  A cache miss drops an instant
+    event on an active trace: binds front-run a jit compile, so the marks
+    line up with the slow first window."""
+    before = _bound_policy_impl.cache_info().misses
+    fn = _bound_policy_impl(pol, n_edge, n_servers)
+    if _bound_policy_impl.cache_info().misses > before:
+        instant("compile/bind_policy", CAT_COMPILE, policy=pol.name)
+    return fn
 
 
 @functools.lru_cache(maxsize=128)
-def _fleet_runner(
+def _fleet_runner_impl(
     fn, stateful: bool, needs_key: bool, ccfg: CongestionConfig,
-    acfg: AdmissionConfig, impaired: bool,
+    acfg: AdmissionConfig, impaired: bool, metrics: bool, n_edge: int,
 ):
     """The fleet's jitted vmap-over-reps-of-scan-over-frames runner, cached
     by (schedule fn, policy mode, congestion/admission config, impairment
-    flag).  jax's own jit cache then holds one executable per (group shape,
-    device).
+    flag, metrics flag).  jax's own jit cache then holds one executable per
+    (group shape, device).
 
     Scan inputs per frame: the padded instance, the PRNG key, the queueing
     delays, and the resilience engine's per-frame link/up vectors (all-ones
@@ -1173,10 +1311,21 @@ def _fleet_runner(
     them).  Admission control runs inside the step: deadline shedding masks
     ``avail`` *before* the policy (against the pre-frame backlog-only
     inflation estimate), the queue cap refuses assignments *after* it and
-    before the committed work enters the backlog."""
+    before the committed work enters the backlog.
+
+    ``metrics=True`` threads the per-frame real-request count as one more
+    scan input and emits a :class:`~repro.obs.metrics.MetricsFrame` as one
+    more scan output, stacked on device across the window.  With
+    ``metrics=False`` the step's traced program is exactly the pre-metrics
+    one — same inputs, same outputs, same jaxpr — which is what the
+    bitwise-parity tests pin (fusion changes can flip greedy argmax
+    near-ties, see ``docs/architecture.md`` section 6)."""
 
     def step(carry, x):
-        inst, key, tq, link_bw, up = x
+        if metrics:
+            inst, key, tq, link_bw, up, n_real_t = x
+        else:
+            inst, key, tq, link_bw, up = x
         if impaired:  # policy-visible network state rides the carry
             carry = dataclasses.replace(carry, link_bw=link_bw, server_up=up)
         if ccfg.enabled:
@@ -1187,6 +1336,7 @@ def _fleet_runner(
             )
         else:
             run_inst = inst
+        keep = None
         if acfg.enabled and acfg.shed:
             phi_pc, phi_pe = predicted_inflation(
                 carry.backlog_gamma, carry.backlog_eta, inst.gamma, inst.eta, ccfg
@@ -1201,13 +1351,15 @@ def _fleet_runner(
             a = fn(run_inst, key)
         else:
             a = fn(run_inst)
+        n_refused = None
         if acfg.enabled:
-            a = Assignment(
-                apply_queue_cap(
-                    a.j, inst, carry.backlog_gamma, carry.backlog_eta, acfg
-                ),
-                a.l,
+            j_cap = apply_queue_cap(
+                a.j, inst, carry.backlog_gamma, carry.backlog_eta, acfg
             )
+            if metrics:
+                real = jnp.arange(a.j.shape[0]) < n_real_t
+                n_refused = jnp.sum(real & (a.j >= 0) & (j_cap < 0))
+            a = Assignment(j_cap, a.l)
         if ccfg.enabled:
             w, c = committed_loads(inst, a.j, a.l)
             pc = compute_inflation(carry.backlog_gamma + w, inst.gamma, ccfg)
@@ -1221,12 +1373,48 @@ def _fleet_runner(
         else:
             pc = jnp.ones_like(inst.gamma)
             pe = jnp.ones_like(inst.eta)
-        return carry, (a.j, a.l, pc, pe)
+        if not metrics:
+            return carry, (a.j, a.l, pc, pe)
+        real = jnp.arange(a.j.shape[0]) < n_real_t
+        n_shed = (
+            jnp.sum(real & ~keep) if keep is not None else jnp.int32(0)
+        )
+        mf = frame_metrics(
+            inst, a.j, a.l, tq, pc, pe, n_real_t, n_edge, carry,
+            n_shed, n_refused if n_refused is not None else jnp.int32(0),
+        )
+        return carry, (a.j, a.l, pc, pe, mf)
 
-    def per_rep(c0, inst_seq, key_seq, tq_seq, link_seq, up_seq):
-        return jax.lax.scan(step, c0, (inst_seq, key_seq, tq_seq, link_seq, up_seq))
+    if metrics:
+        def per_rep(c0, inst_seq, key_seq, tq_seq, link_seq, up_seq, nreal_seq):
+            return jax.lax.scan(
+                step, c0,
+                (inst_seq, key_seq, tq_seq, link_seq, up_seq, nreal_seq),
+            )
+    else:
+        def per_rep(c0, inst_seq, key_seq, tq_seq, link_seq, up_seq):
+            return jax.lax.scan(
+                step, c0, (inst_seq, key_seq, tq_seq, link_seq, up_seq)
+            )
 
     return jax.jit(jax.vmap(per_rep))
+
+
+def _fleet_runner(
+    fn, stateful: bool, needs_key: bool, ccfg: CongestionConfig,
+    acfg: AdmissionConfig, impaired: bool,
+    metrics: bool = False, n_edge: int = 0,
+):
+    """Cached-runner lookup that marks cache misses on an active trace —
+    each miss front-runs a fresh trace + XLA compile of the fleet program,
+    which is exactly the cliff a profile reader wants flagged."""
+    before = _fleet_runner_impl.cache_info().misses
+    run = _fleet_runner_impl(
+        fn, stateful, needs_key, ccfg, acfg, impaired, metrics, n_edge
+    )
+    if _fleet_runner_impl.cache_info().misses > before:
+        instant("compile/fleet_runner", CAT_COMPILE, metrics=metrics)
+    return run
 
 
 def _pad_reps(tree, pad_r: int):
@@ -1256,8 +1444,18 @@ def simulate_fleet(
     rng_mode: Optional[str] = None,
     prefetch: int = 1,
     backend: Optional[str] = None,
+    metrics: bool = False,
 ) -> FleetResult:
     """Monte-Carlo fleet: R independent replications, one device program.
+
+    ``metrics=True`` adds a per-frame :class:`~repro.obs.metrics.MetricsFrame`
+    output to the scan — stacked on device across each window, drained with
+    the window's other outputs (no per-frame host sync) — and returns the
+    stream as ``FleetResult.metrics``.  Rows report the *post-frame* carried
+    backlog (the scan carry); :func:`simulate` rows report the backlog
+    entering each decision.  With ``metrics=False`` (default) the traced
+    program and every result field are bit-identical to a build without the
+    telemetry layer.
 
     Every (replication, frame) pair becomes one fixed-shape padded
     ``FlatInstance``; the fleet is laid out as an ``(R, T)`` grid and
@@ -1371,24 +1569,30 @@ def simulate_fleet(
     mode = _resolve_rng_mode(scn.rng_mode if rng_mode is None else rng_mode)
     prefetch = max(0, int(prefetch))
 
-    t_gen0 = time.perf_counter()
-    sources = [
-        _RepFrameSource(
-            scn, seed + rep, spec.n_edge, K, cfg, T, use_stream, lazy, rng_mode=mode
-        )
-        for rep in range(n_rep)
-    ]
-    if lazy:
-        # count-only pre-pass: the global max bucket, in bounded memory —
-        # one padding bucket for every window, identical to materialized
-        n_max = max(
-            max_frame_arrivals(scn, seed + rep, spec.n_edge, K, cfg, T, rng_mode=mode)
+    sw = Stopwatch()
+    t_run0 = time.perf_counter()
+    with sw.span("fleet/generate_traces", CAT_GEN, n_rep=n_rep):
+        sources = [
+            _RepFrameSource(
+                scn, seed + rep, spec.n_edge, K, cfg, T, use_stream, lazy,
+                rng_mode=mode,
+            )
             for rep in range(n_rep)
-        )
-    else:
-        n_max = max(src.max_bucket for src in sources)
-    n_pad = _pad_bucket(n_max)
-    gen_s = time.perf_counter() - t_gen0  # trace generation + padding pre-pass
+        ]
+        if lazy:
+            # count-only pre-pass: the global max bucket, in bounded memory —
+            # one padding bucket for every window, identical to materialized
+            n_max = max(
+                max_frame_arrivals(
+                    scn, seed + rep, spec.n_edge, K, cfg, T, rng_mode=mode
+                )
+                for rep in range(n_rep)
+            )
+        else:
+            n_max = max(src.max_bucket for src in sources)
+        n_pad = _pad_bucket(n_max)
+    # trace generation + padding pre-pass; per-window blocking adds to this
+    gen_s = sw.total("fleet/generate_traces")
     # the resilience engine is replication-independent (same network
     # weather for every rep) and frame-indexed, so its traces tile across
     # the rep axis and extend prefix-stable window by window — what keeps
@@ -1401,7 +1605,7 @@ def simulate_fleet(
     if host_side:
         return _simulate_fleet_host(
             spec, cfg, scn, pol, sources, n_rep=n_rep, T=T, n_pad=n_pad, seed=seed,
-            gen_s=gen_s, engine=engine,
+            gen_s=gen_s, engine=engine, metrics=metrics, sw=sw, t_run0=t_run0,
         )
 
     if pol is not None:
@@ -1412,7 +1616,10 @@ def simulate_fleet(
         fn = gus_schedule if scheduler is None else scheduler
         needs_key = False
         stateful = False
-    run = _fleet_runner(fn, stateful, needs_key, ccfg, acfg, engine is not None)
+    run = _fleet_runner(
+        fn, stateful, needs_key, ccfg, acfg, engine is not None,
+        metrics, spec.n_edge,
+    )
 
     if needs_key:
         keys_all = np.asarray(jax.random.split(
@@ -1465,7 +1672,6 @@ def simulate_fleet(
 
     # per-(rep, frame) stores; the final reductions below see the same
     # values in the same order no matter how the frames were windowed
-    dispatch_s = 0.0
     sat_frames = np.zeros((n_rep, T), np.int64)
     served_frames = np.zeros((n_rep, T), np.int64)
     us_frames = np.zeros((n_rep, T), np.float32)
@@ -1485,58 +1691,64 @@ def simulate_fleet(
         n_real = np.zeros((n_rep, Tc), np.int32)
         tq_flat = np.zeros((n_rep * Tc, n_pad), np.float32)
         i = 0
-        for rep, src in enumerate(sources):
-            for k, bucket in enumerate(src.take(t1)):
-                frame_start = (t0 + k) * cfg.frame_ms
-                frames.append(bucket)
-                frame_starts.append(frame_start)
-                nb = len(bucket)
-                n_real[rep, k] = nb
-                if nb:
-                    if isinstance(bucket, RequestColumns):
-                        tq_flat[i, :nb] = (
-                            frame_start + cfg.frame_ms - bucket.arrival_ms
-                        )
-                    else:
-                        tq_flat[i, :nb] = [
-                            frame_start + cfg.frame_ms - r.arrival_ms for r in bucket
-                        ]
-                i += 1
-        # per-frame budgets are replication-independent: one _frame_budgets
-        # call per frame index, reused across the R replications
-        budgets_by_k = [
-            _frame_budgets(spec, cfg, scn, (t0 + k) * cfg.frame_ms, engine=engine)
-            for k in range(Tc)
-        ]
-        R_pad = n_rep + pad_r
-        if engine is not None:
-            links_by_k = [engine.link_frame(t0 + k) for k in range(Tc)]
-            links_arg = links_by_k * n_rep
-            link_rt = np.broadcast_to(
-                np.stack([l[0] for l in links_by_k]).astype(np.float32),
-                (R_pad, Tc, M),
+        with sw.span("fleet/arrivals", CAT_GEN, t0=t0):
+            for rep, src in enumerate(sources):
+                for k, bucket in enumerate(src.take(t1)):
+                    frame_start = (t0 + k) * cfg.frame_ms
+                    frames.append(bucket)
+                    frame_starts.append(frame_start)
+                    nb = len(bucket)
+                    n_real[rep, k] = nb
+                    if nb:
+                        if isinstance(bucket, RequestColumns):
+                            tq_flat[i, :nb] = (
+                                frame_start + cfg.frame_ms - bucket.arrival_ms
+                            )
+                        else:
+                            tq_flat[i, :nb] = [
+                                frame_start + cfg.frame_ms - r.arrival_ms
+                                for r in bucket
+                            ]
+                    i += 1
+        with sw.span("fleet/grid_build", CAT_BUILD, t0=t0):
+            # per-frame budgets are replication-independent: one
+            # _frame_budgets call per frame index, reused across the R reps
+            budgets_by_k = [
+                _frame_budgets(spec, cfg, scn, (t0 + k) * cfg.frame_ms, engine=engine)
+                for k in range(Tc)
+            ]
+            R_pad = n_rep + pad_r
+            if engine is not None:
+                links_by_k = [engine.link_frame(t0 + k) for k in range(Tc)]
+                links_arg = links_by_k * n_rep
+                link_rt = np.broadcast_to(
+                    np.stack([l[0] for l in links_by_k]).astype(np.float32),
+                    (R_pad, Tc, M),
+                )
+                up_rt = np.broadcast_to(
+                    np.stack([engine.server_up(t0 + k) for k in range(Tc)]),
+                    (R_pad, Tc, M),
+                )
+            else:  # dummy xs keep the scan signature uniform (never read)
+                links_arg = None
+                link_rt = up_rt = np.broadcast_to(
+                    np.ones((1, 1, M), np.float32), (R_pad, Tc, M)
+                )
+            batch = _build_frame_batch(
+                frames, spec, cfg, frame_starts, budgets_by_k * n_rep, n_pad,
+                links=links_arg,
+            )  # leading axis: n_rep * Tc frames
+            batch_rt = jax.tree.map(
+                lambda x: x.reshape((n_rep, Tc) + x.shape[1:]), batch
             )
-            up_rt = np.broadcast_to(
-                np.stack([engine.server_up(t0 + k) for k in range(Tc)]),
-                (R_pad, Tc, M),
-            )
-        else:  # dummy xs keep the scan signature uniform (never read)
-            links_arg = None
-            link_rt = up_rt = np.broadcast_to(
-                np.ones((1, 1, M), np.float32), (R_pad, Tc, M)
-            )
-        batch = _build_frame_batch(
-            frames, spec, cfg, frame_starts, budgets_by_k * n_rep, n_pad,
-            links=links_arg,
-        )  # leading axis: n_rep * Tc frames
-        batch_rt = jax.tree.map(
-            lambda x: x.reshape((n_rep, Tc) + x.shape[1:]), batch
-        )
-        tq_rt = tq_flat.reshape(n_rep, Tc, n_pad)
-        if pad_r:
-            batch_rt = _pad_reps(batch_rt, pad_r)
-            tq_rt = _pad_reps(tq_rt, pad_r)
-        return t0, t1, Tc, batch, batch_rt, n_real, tq_flat, tq_rt, link_rt, up_rt
+            tq_rt = tq_flat.reshape(n_rep, Tc, n_pad)
+            nreal_rt = n_real
+            if pad_r:
+                batch_rt = _pad_reps(batch_rt, pad_r)
+                tq_rt = _pad_reps(tq_rt, pad_r)
+                nreal_rt = _pad_reps(nreal_rt, pad_r)
+        return (t0, t1, Tc, batch, batch_rt, n_real, tq_flat, tq_rt,
+                link_rt, up_rt, nreal_rt)
 
     window_starts = list(range(0, T, W))
     prod_thread = None
@@ -1579,66 +1791,91 @@ def simulate_fleet(
             raise item
         return item
 
+    m_acc: Optional[Dict[str, np.ndarray]] = None
     try:
-        for wi_t0 in window_starts:
-            t_gen = time.perf_counter()
-            (t0, t1, Tc, batch, batch_rt, n_real, tq_flat,
-             tq_rt, link_rt, up_rt) = next_window(wi_t0)
-            gen_s += time.perf_counter() - t_gen
+        for wi, wi_t0 in enumerate(window_starts):
+            with sw.span("fleet/window_wait", CAT_GEN, window=wi):
+                (t0, t1, Tc, batch, batch_rt, n_real, tq_flat,
+                 tq_rt, link_rt, up_rt, nreal_rt) = next_window(wi_t0)
             keys_rt = keys_all[:, t0:t1]
 
             def run_group(g):
                 sl = slice(g * G, (g + 1) * G)
                 dev = group_devices[g % n_dev]
-                c, out = run(
+                argv = [
                     carries[g],
                     to_device(jax.tree.map(lambda x: x[sl], batch_rt), dev),
                     to_device(keys_rt[sl], dev),
                     to_device(tq_rt[sl], dev),
                     to_device(np.ascontiguousarray(link_rt[sl]), dev),
                     to_device(np.ascontiguousarray(up_rt[sl]), dev),
-                )
-                # materialize here (XLA releases the GIL while computing, so
-                # worker threads overlap groups across devices); the carry stays
-                # device-resident for the next window
-                return c, tuple(np.asarray(o) for o in out)
+                ]
+                if metrics:
+                    argv.append(to_device(nreal_rt[sl], dev))
+                with annotate(f"fleet/group{g}"):
+                    c, out = run(*argv)
+                    # materialize here (XLA releases the GIL while computing,
+                    # so worker threads overlap groups across devices); the
+                    # carry stays device-resident for the next window
+                    return c, jax.tree.map(np.asarray, out)
 
-            t_disp = time.perf_counter()
-            if executor is None:
-                results = [run_group(g) for g in range(n_groups)]
-            else:
-                results = list(executor.map(run_group, range(n_groups)))
-            dispatch_s += time.perf_counter() - t_disp
+            with sw.span(
+                "fleet/dispatch", CAT_DISPATCH, window=wi, n_groups=n_groups
+            ), step_annotation("fleet/window", wi):
+                if executor is None:
+                    results = [run_group(g) for g in range(n_groups)]
+                else:
+                    results = list(executor.map(run_group, range(n_groups)))
             for g, (c, _) in enumerate(results):
                 carries[g] = c
-            jv, lv, pc, pe = (
-                np.concatenate([r[1][part] for r in results])[:n_rep]
-                for part in range(4)
-            )
-            assign = Assignment(
-                jnp.asarray(jv.reshape(n_rep * Tc, n_pad)),
-                jnp.asarray(lv.reshape(n_rep * Tc, n_pad)),
-            )
-            if ccfg.enabled:
-                phi_c = jnp.asarray(pc.reshape(n_rep * Tc, M))
-                phi_e = jnp.asarray(pe.reshape(n_rep * Tc, M))
-                mbatch = dataclasses.replace(
-                    batch,
-                    ctime=congested_ctime(batch, jnp.asarray(tq_flat), phi_c, phi_e),
+            with sw.span("fleet/window_metrics", CAT_METRICS, window=wi):
+                jv, lv, pc, pe = (
+                    np.concatenate([r[1][part] for r in results])[:n_rep]
+                    for part in range(4)
                 )
-                phi_frames[:, t0:t1] = pc
-            else:
-                mbatch = batch
+                assign = Assignment(
+                    jnp.asarray(jv.reshape(n_rep * Tc, n_pad)),
+                    jnp.asarray(lv.reshape(n_rep * Tc, n_pad)),
+                )
+                if ccfg.enabled:
+                    phi_c = jnp.asarray(pc.reshape(n_rep * Tc, M))
+                    phi_e = jnp.asarray(pe.reshape(n_rep * Tc, M))
+                    mbatch = dataclasses.replace(
+                        batch,
+                        ctime=congested_ctime(
+                            batch, jnp.asarray(tq_flat), phi_c, phi_e
+                        ),
+                    )
+                    phi_frames[:, t0:t1] = pc
+                else:
+                    mbatch = batch
 
-            sat = np.asarray(satisfied_mask(mbatch, assign.j, assign.l))
-            us = np.asarray(mean_us(mbatch, assign.j, assign.l))
-            real = np.arange(n_pad)[None, :] < n_real.reshape(-1)[:, None]
-            served = (np.asarray(assign.j) >= 0) & real
-            sat = sat & real
-            sat_frames[:, t0:t1] = sat.sum(-1).reshape(n_rep, Tc)
-            served_frames[:, t0:t1] = served.sum(-1).reshape(n_rep, Tc)
-            us_frames[:, t0:t1] = us.reshape(n_rep, Tc)
-            n_real_frames[:, t0:t1] = n_real
+                sat = np.asarray(satisfied_mask(mbatch, assign.j, assign.l))
+                us = np.asarray(mean_us(mbatch, assign.j, assign.l))
+                real = np.arange(n_pad)[None, :] < n_real.reshape(-1)[:, None]
+                served = (np.asarray(assign.j) >= 0) & real
+                sat = sat & real
+                sat_frames[:, t0:t1] = sat.sum(-1).reshape(n_rep, Tc)
+                served_frames[:, t0:t1] = served.sum(-1).reshape(n_rep, Tc)
+                us_frames[:, t0:t1] = us.reshape(n_rep, Tc)
+                n_real_frames[:, t0:t1] = n_real
+                if metrics:
+                    # scan-stacked MetricsFrame leaves arrive as
+                    # (G, Tc, ...) per group — stitch the rep axis back
+                    mfw = jax.tree.map(
+                        lambda *xs: np.concatenate(xs)[:n_rep],
+                        *[r[1][4] for r in results],
+                    )
+                    if m_acc is None:
+                        m_acc = {
+                            f: np.zeros(
+                                (n_rep, T) + getattr(mfw, f).shape[2:],
+                                getattr(mfw, f).dtype,
+                            )
+                            for f in MetricsFrame._fields
+                        }
+                    for f in MetricsFrame._fields:
+                        m_acc[f][:, t0:t1] = getattr(mfw, f)
 
     finally:
         if prod_thread is not None:
@@ -1664,6 +1901,17 @@ def simulate_fleet(
     # per-rep sum (exact: n_pad is a power of two) and renormalize by the
     # rep's true request count
     us_sum_per_rep = (us_frames * n_pad).sum(1)
+    gen_s += sw.total("fleet/window_wait")
+    timings = sw.as_dict()
+    timings["total_s"] = time.perf_counter() - t_run0
+    mres = None
+    if metrics and m_acc is not None:
+        mres = MetricsResult.from_stacked(
+            MetricsFrame(**m_acc),
+            t_ms=(np.arange(T) + 1.0) * cfg.frame_ms,
+            n_edge=spec.n_edge,
+            frame_ms=cfg.frame_ms,
+        )
     return FleetResult(
         n_rep=n_rep,
         n_frames=T,
@@ -1675,9 +1923,11 @@ def simulate_fleet(
         mean_compute_inflation=float(np.mean(phi_frames)) if ccfg.enabled else 1.0,
         n_devices=n_dev,
         window=W,
-        dispatch_s=dispatch_s,
+        dispatch_s=sw.total("fleet/dispatch"),
         gen_s=gen_s,
         prefetch=prefetch if prod_thread is not None else 0,
+        timings=timings,
+        metrics=mres,
     )
 
 
@@ -1694,6 +1944,9 @@ def _simulate_fleet_host(
     seed: int,
     gen_s: float = 0.0,
     engine: Optional[ResilienceEngine] = None,
+    metrics: bool = False,
+    sw: Optional[Stopwatch] = None,
+    t_run0: Optional[float] = None,
 ) -> FleetResult:
     """Host-side fleet path for non-vmappable / non-padding policies (the
     ILP / LP-bound oracles): schedule each *unpadded* frame in a Python
@@ -1704,38 +1957,44 @@ def _simulate_fleet_host(
     ccfg = cfg.congestion
     acfg = cfg.admission
     M = spec.n_servers
+    if sw is None:
+        sw = Stopwatch()
+    if t_run0 is None:
+        t_run0 = time.perf_counter()
     fleet_frames: List[List[Request]] = []
-    for src in sources:
-        fleet_frames.extend(src.take(T))
+    with sw.span("fleet/arrivals", CAT_GEN):
+        for src in sources:
+            fleet_frames.extend(src.take(T))
     raw_insts = []
     n_real = np.array([len(b) for b in fleet_frames], np.int32)
     tq_flat = np.zeros((len(fleet_frames), n_pad), np.float32)
-    for i, bucket in enumerate(fleet_frames):
-        frame_start = (i % T) * cfg.frame_ms
-        gamma, eta = _frame_budgets(spec, cfg, scn, frame_start, engine=engine)
-        link = None
-        if engine is not None and len(bucket):
-            sc, la = engine.link_frame(i % T)
-            cov = (
-                bucket.cover.astype(np.intp)
-                if isinstance(bucket, RequestColumns)
-                else np.array([r.cover for r in bucket], np.intp)
-            )
-            link = (sc[cov], la[cov])
-        raw_insts.append(_build_frame_instance(
-            bucket, spec, cfg, frame_start + cfg.frame_ms,
-            spec.bandwidth_true, cfg.max_cs, gamma=gamma, eta=eta, link=link,
-        ))
-        if bucket:
-            if isinstance(bucket, RequestColumns):
-                tq_flat[i, : len(bucket)] = (
-                    frame_start + cfg.frame_ms - bucket.arrival_ms
+    with sw.span("fleet/grid_build", CAT_BUILD):
+        for i, bucket in enumerate(fleet_frames):
+            frame_start = (i % T) * cfg.frame_ms
+            gamma, eta = _frame_budgets(spec, cfg, scn, frame_start, engine=engine)
+            link = None
+            if engine is not None and len(bucket):
+                sc, la = engine.link_frame(i % T)
+                cov = (
+                    bucket.cover.astype(np.intp)
+                    if isinstance(bucket, RequestColumns)
+                    else np.array([r.cover for r in bucket], np.intp)
                 )
-            else:
-                tq_flat[i, : len(bucket)] = [
-                    frame_start + cfg.frame_ms - r.arrival_ms for r in bucket
-                ]
-    batch = stack_instances([pad_instance(r, n_pad) for r in raw_insts])
+                link = (sc[cov], la[cov])
+            raw_insts.append(_build_frame_instance(
+                bucket, spec, cfg, frame_start + cfg.frame_ms,
+                spec.bandwidth_true, cfg.max_cs, gamma=gamma, eta=eta, link=link,
+            ))
+            if bucket:
+                if isinstance(bucket, RequestColumns):
+                    tq_flat[i, : len(bucket)] = (
+                        frame_start + cfg.frame_ms - bucket.arrival_ms
+                    )
+                else:
+                    tq_flat[i, : len(bucket)] = [
+                        frame_start + cfg.frame_ms - r.arrival_ms for r in bucket
+                    ]
+        batch = stack_instances([pad_instance(r, n_pad) for r in raw_insts])
 
     fn = pol.bind(spec.n_edge, spec.n_servers)
     keys = (
@@ -1747,68 +2006,93 @@ def _simulate_fleet_host(
     phi_c = np.ones((len(raw_insts), M), np.float32)
     phi_e = np.ones((len(raw_insts), M), np.float32)
     final_backlog = np.zeros((n_rep, M), np.float32)
-    for rep in range(n_rep):
-        carry = init_policy_carry(
-            M, seed=seed + rep, bandwidth_init=spec.bandwidth_true
-        )
-        for tf in range(T):
-            i = rep * T + tf
-            inst, n = raw_insts[i], n_real[i]
-            if engine is not None:
-                carry = dataclasses.replace(
-                    carry,
-                    link_bw=jnp.asarray(engine.link_frame(tf)[0], jnp.float32),
-                    server_up=jnp.asarray(engine.server_up(tf)),
-                )
-            if ccfg.enabled:
-                run_inst = dataclasses.replace(
-                    inst,
-                    gamma=effective_capacity(inst.gamma, carry.backlog_gamma),
-                    eta=effective_capacity(inst.eta, carry.backlog_eta),
-                )
-            else:
-                run_inst = inst
-            if acfg.enabled and acfg.shed and n:
-                phi_pc, phi_pe = predicted_inflation(
-                    carry.backlog_gamma, carry.backlog_eta,
-                    inst.gamma, inst.eta, ccfg,
-                )
-                keep = admission_keep(
-                    inst, jnp.asarray(tq_flat[i, :n]), phi_pc, phi_pe
-                )
-                run_inst = dataclasses.replace(
-                    run_inst, avail=run_inst.avail & keep[:, None, None]
-                )
-            if pol.stateful:
-                a, carry = fn(run_inst, carry)
-            elif keys is not None:
-                a = fn(run_inst, keys[i])
-            else:
-                a = fn(run_inst)
-            if acfg.enabled and n:
-                a = Assignment(
-                    apply_queue_cap(
+    if metrics:
+        m_shed = np.zeros(len(raw_insts), np.int32)
+        m_refused = np.zeros(len(raw_insts), np.int32)
+        m_w = np.zeros((len(raw_insts), M), np.float32)
+        m_c = np.zeros((len(raw_insts), M), np.float32)
+        m_bg = np.zeros((len(raw_insts), M), np.float32)
+        m_be = np.zeros((len(raw_insts), M), np.float32)
+    with sw.span("fleet/schedule_host", CAT_SCHED, n_rep=n_rep):
+        for rep in range(n_rep):
+            carry = init_policy_carry(
+                M, seed=seed + rep, bandwidth_init=spec.bandwidth_true
+            )
+            for tf in range(T):
+                i = rep * T + tf
+                inst, n = raw_insts[i], n_real[i]
+                if engine is not None:
+                    carry = dataclasses.replace(
+                        carry,
+                        link_bw=jnp.asarray(engine.link_frame(tf)[0], jnp.float32),
+                        server_up=jnp.asarray(engine.server_up(tf)),
+                    )
+                if ccfg.enabled:
+                    run_inst = dataclasses.replace(
+                        inst,
+                        gamma=effective_capacity(inst.gamma, carry.backlog_gamma),
+                        eta=effective_capacity(inst.eta, carry.backlog_eta),
+                    )
+                else:
+                    run_inst = inst
+                if acfg.enabled and acfg.shed and n:
+                    phi_pc, phi_pe = predicted_inflation(
+                        carry.backlog_gamma, carry.backlog_eta,
+                        inst.gamma, inst.eta, ccfg,
+                    )
+                    keep = admission_keep(
+                        inst, jnp.asarray(tq_flat[i, :n]), phi_pc, phi_pe
+                    )
+                    run_inst = dataclasses.replace(
+                        run_inst, avail=run_inst.avail & keep[:, None, None]
+                    )
+                    if metrics:
+                        m_shed[i] = int(n) - int(np.asarray(keep).sum())
+                if pol.stateful:
+                    a, carry = fn(run_inst, carry)
+                elif keys is not None:
+                    a = fn(run_inst, keys[i])
+                else:
+                    a = fn(run_inst)
+                if acfg.enabled and n:
+                    j_cap = apply_queue_cap(
                         a.j, inst, carry.backlog_gamma, carry.backlog_eta, acfg
-                    ),
-                    a.l,
-                )
-            jv[i, :n] = np.asarray(a.j)
-            lv[i, :n] = np.asarray(a.l)
-            if ccfg.enabled:
-                w, c = committed_loads(inst, jnp.asarray(a.j), jnp.asarray(a.l))
-                phi_c[i] = np.asarray(
-                    compute_inflation(carry.backlog_gamma + w, inst.gamma, ccfg)
-                )
-                phi_e[i] = np.asarray(
-                    comm_inflation(carry.backlog_eta + c, inst.eta, ccfg)
-                )
-                carry = dataclasses.replace(
-                    carry,
-                    backlog_gamma=step_backlog(carry.backlog_gamma, w, inst.gamma, ccfg),
-                    backlog_eta=step_backlog(carry.backlog_eta, c, inst.eta, ccfg),
-                    ema_util=ema_update(carry.ema_util, w, inst.gamma, ccfg),
-                )
-        final_backlog[rep] = np.asarray(carry.backlog_gamma)
+                    )
+                    if metrics:
+                        m_refused[i] = int(np.sum(
+                            (np.asarray(a.j) >= 0) & (np.asarray(j_cap) < 0)
+                        ))
+                    a = Assignment(j_cap, a.l)
+                jv[i, :n] = np.asarray(a.j)
+                lv[i, :n] = np.asarray(a.l)
+                if ccfg.enabled or metrics:
+                    w, c = committed_loads(
+                        inst, jnp.asarray(a.j), jnp.asarray(a.l)
+                    )
+                    if metrics:
+                        m_w[i] = np.asarray(w, np.float32)
+                        m_c[i] = np.asarray(c, np.float32)
+                if ccfg.enabled:
+                    phi_c[i] = np.asarray(
+                        compute_inflation(carry.backlog_gamma + w, inst.gamma, ccfg)
+                    )
+                    phi_e[i] = np.asarray(
+                        comm_inflation(carry.backlog_eta + c, inst.eta, ccfg)
+                    )
+                    carry = dataclasses.replace(
+                        carry,
+                        backlog_gamma=step_backlog(
+                            carry.backlog_gamma, w, inst.gamma, ccfg
+                        ),
+                        backlog_eta=step_backlog(
+                            carry.backlog_eta, c, inst.eta, ccfg
+                        ),
+                        ema_util=ema_update(carry.ema_util, w, inst.gamma, ccfg),
+                    )
+                if metrics:  # post-frame carried backlog, like the scan rows
+                    m_bg[i] = np.asarray(carry.backlog_gamma, np.float32)
+                    m_be[i] = np.asarray(carry.backlog_eta, np.float32)
+            final_backlog[rep] = np.asarray(carry.backlog_gamma)
     assign = Assignment(jv, lv)
 
     if ccfg.enabled:
@@ -1827,6 +2111,57 @@ def _simulate_fleet_host(
     served = (np.asarray(assign.j) >= 0) & real
     sat = sat & real
 
+    mres = None
+    if metrics:
+        # vectorized post-pass over the padded grid — same definitions as
+        # the scan's frame_metrics rows (served/sat masked to real rows,
+        # utilization against the full frame budgets)
+        with sw.span("fleet/window_metrics", CAT_METRICS):
+            jb = np.asarray(assign.j)
+            local = served & (jb == np.asarray(batch.cover))
+            cloudm = served & (jb >= spec.n_edge)
+            eo = served & ~local & ~cloudm
+            tier = np.stack(
+                [local.sum(-1), eo.sum(-1), cloudm.sum(-1)], -1
+            ).astype(np.int32)
+            edges = np.asarray(QOS_ACC_EDGES, np.float32)
+            cls = (np.asarray(batch.A)[..., None] >= edges).sum(-1)
+            nq = len(QOS_ACC_EDGES) + 1
+            oh = cls[..., None] == np.arange(nq)
+            qos_cnt = (oh & real[..., None]).sum(1).astype(np.int32)
+            qos_sat = (oh & sat[..., None]).sum(1).astype(np.int32)
+            gam = np.asarray(batch.gamma, np.float64)
+            eta_b = np.asarray(batch.eta, np.float64)
+            with np.errstate(invalid="ignore"):
+                ug = np.where(gam > 0.0, m_w / np.maximum(gam, 1e-9), 0.0)
+                ue = np.where(eta_b > 0.0, m_c / np.maximum(eta_b, 1e-9), 0.0)
+
+            def rt(x):
+                return x.reshape((n_rep, T) + x.shape[1:])
+
+            mres = MetricsResult.from_stacked(
+                MetricsFrame(
+                    n_arrivals=rt(n_real.astype(np.int32)),
+                    n_served=rt(served.sum(-1).astype(np.int32)),
+                    n_satisfied=rt(sat.sum(-1).astype(np.int32)),
+                    n_shed=rt(m_shed),
+                    n_refused=rt(m_refused),
+                    tier_hist=rt(tier),
+                    qos_sat=rt(qos_sat),
+                    qos_count=rt(qos_cnt),
+                    util_gamma=rt(ug.astype(np.float32)),
+                    util_eta=rt(ue.astype(np.float32)),
+                    backlog_gamma=rt(m_bg),
+                    backlog_eta=rt(m_be),
+                    us_sum=rt((us * n_pad).astype(np.float32)),
+                ),
+                t_ms=(np.arange(T) + 1.0) * cfg.frame_ms,
+                n_edge=spec.n_edge,
+                frame_ms=cfg.frame_ms,
+            )
+
+    timings = sw.as_dict()
+    timings["total_s"] = time.perf_counter() - t_run0
     reqs_per_rep = n_real.reshape(n_rep, T).sum(1)
     sat_per_rep = sat.reshape(n_rep, T, n_pad).sum((1, 2))
     us_sum_per_rep = (us * n_pad).reshape(n_rep, T).sum(1)
@@ -1842,6 +2177,8 @@ def _simulate_fleet_host(
         n_devices=1,
         window=T,
         gen_s=gen_s,
+        timings=timings,
+        metrics=mres,
     )
 
 

@@ -1,0 +1,73 @@
+"""``jax.profiler`` hooks — device-side profiling of the fleet pipeline.
+
+:func:`profile_trace` wraps a run in ``jax.profiler.trace`` (TensorBoard
+/ Perfetto-loadable device profile); inside it, :func:`annotate` marks
+host-dispatched regions (per-group fleet dispatch, the Pallas-vs-XLA
+scheduler call) with ``jax.profiler.TraceAnnotation`` and
+:func:`step_annotation` marks scan windows with ``StepTraceAnnotation``.
+
+When no profile is active — the default — both helpers return one shared
+``nullcontext`` instance, so instrumented call sites cost a function
+call and a flag check.  A host platform without profiler support (or a
+jax build that cannot start one) degrades to a warning, never an error:
+profiling is observability, not a dependency.
+"""
+from __future__ import annotations
+
+import warnings
+from contextlib import contextmanager, nullcontext
+
+import jax
+
+__all__ = ["profile_trace", "annotate", "step_annotation", "profiling_active"]
+
+_ACTIVE = False
+_NOOP = nullcontext()
+
+
+def profiling_active() -> bool:
+    return _ACTIVE
+
+
+@contextmanager
+def profile_trace(log_dir):
+    """Capture a ``jax.profiler`` trace of the block into ``log_dir``.
+
+    ``log_dir`` of ``None``/empty yields without starting anything, so
+    callers can thread an optional ``--profile DIR`` flag straight
+    through.
+    """
+    global _ACTIVE
+    if not log_dir:
+        yield
+        return
+    try:
+        jax.profiler.start_trace(str(log_dir))
+    except Exception as e:  # no profiler backend on this host
+        warnings.warn(f"jax profiler unavailable ({e}); running unprofiled")
+        yield
+        return
+    _ACTIVE = True
+    try:
+        yield
+    finally:
+        _ACTIVE = False
+        try:
+            jax.profiler.stop_trace()
+        except Exception as e:
+            warnings.warn(f"jax profiler stop failed ({e})")
+
+
+def annotate(name: str, **kwargs):
+    """``TraceAnnotation(name)`` under an active profile, else a no-op."""
+    if not _ACTIVE:
+        return _NOOP
+    return jax.profiler.TraceAnnotation(name, **kwargs)
+
+
+def step_annotation(name: str, step: int):
+    """``StepTraceAnnotation`` (profiler step marker) under an active
+    profile, else a no-op — one per fleet scan window."""
+    if not _ACTIVE:
+        return _NOOP
+    return jax.profiler.StepTraceAnnotation(name, step_num=step)
