@@ -2,8 +2,9 @@
 replications, across replication counts, device meshes, and host-pipeline
 modes.
 
-Four sweeps over ``simulate_fleet`` on a paper-sized cluster (10 servers,
-10 model variants), all with the jitted GUS policy:
+Five sweeps over ``simulate_fleet`` on a paper-sized cluster (10 servers,
+10 model variants), all with the jitted GUS policy (engine axes are passed
+as one ``EngineOptions`` value — the per-call keywords are deprecated):
 
   replication_sweep  wall-clock and requests/s vs n_rep on one device
   device_sweep       fixed n_rep sharded over 1..D devices (strong scaling)
@@ -12,6 +13,10 @@ Four sweeps over ``simulate_fleet`` on a paper-sized cluster (10 servers,
                      the serial PR-4 loop (prefetch=0, per-request RNG) vs
                      the overlapped producer + vectorized columnar arrivals
                      (prefetch>0, rng_mode="vectorized", windowed)
+  users_sweep        (``--users-sweep``) users-per-frame axis 10^3 -> 10^5 on
+                     the ``mega-city`` scenario under the hierarchical
+                     class-aggregate scheduler; asserts sub-quadratic
+                     wall-time scaling in num_users
 
 Each row reports the end-to-end wall time, the *dispatch* time
 (``FleetResult.dispatch_s`` — the phase inside the jitted fleet programs,
@@ -46,6 +51,7 @@ Run:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import sys
@@ -58,7 +64,13 @@ if _SRC.is_dir() and str(_SRC) not in sys.path:
 
 import jax
 
-from repro.core import SimConfig, demo_cluster_spec, simulate_fleet
+from repro.core import (
+    EngineOptions,
+    SimConfig,
+    demo_cluster_spec,
+    get_scenario,
+    simulate_fleet,
+)
 from repro.obs import profile_trace
 
 try:  # imported as benchmarks.fleet_scale (run.py)
@@ -85,17 +97,26 @@ def bench_cfg(tiny: bool) -> SimConfig:
     )
 
 
-def _measure(spec, cfg, *, n_rep: int, devices: int, repeats: int, **fleet_kw) -> dict:
+def _measure(
+    spec, cfg, *, n_rep: int, devices: int, repeats: int,
+    scenario="paper-default", policy=POLICY, **opt_kw,
+) -> dict:
     """Best-of-``repeats`` timing of one fleet configuration (plus one
     untimed warmup so compilation never lands in a timed run).  Extra
-    keywords (prefetch, rng_mode, window) flow through to simulate_fleet."""
-    simulate_fleet(spec, cfg, policy=POLICY, n_rep=n_rep, seed=0, devices=devices, **fleet_kw)
+    keywords (prefetch, rng_mode, window, scheduler) become
+    ``EngineOptions`` fields."""
+    opts = EngineOptions(devices=devices, **opt_kw)
+    simulate_fleet(
+        spec, cfg, policy=policy, scenario=scenario, n_rep=n_rep, seed=0,
+        options=opts,
+    )
     best_wall = best_disp = best_gen = float("inf")
     fr = None
     for _ in range(repeats):
         t0 = time.perf_counter()
         fr = simulate_fleet(
-            spec, cfg, policy=POLICY, n_rep=n_rep, seed=0, devices=devices, **fleet_kw
+            spec, cfg, policy=policy, scenario=scenario, n_rep=n_rep, seed=0,
+            options=opts,
         )
         wall = time.perf_counter() - t0
         best_wall = min(best_wall, wall)
@@ -115,11 +136,72 @@ def _measure(spec, cfg, *, n_rep: int, devices: int, repeats: int, **fleet_kw) -
         "frames_per_s": round(frames / best_wall, 1),
         "dispatch_frames_per_s": round(frames / max(best_disp, 1e-9), 1),
         "per_device_frames_per_s": round(frames / best_wall / devices, 1),
-        **{k: v for k, v in fleet_kw.items() if v is not None},
+        **{k: v for k, v in opt_kw.items() if v is not None},
     }
 
 
-def run(*, tiny: bool, out: str, device_counts, repeats: int) -> dict:
+def run_users_sweep(*, tiny: bool, repeats: int) -> list:
+    """Users-per-frame scaling axis on the ``mega-city`` scenario under the
+    hierarchical class-aggregate scheduler (``scheduler="hierarchical"``,
+    windowed).  Each point rescales ``rate_per_edge_per_s`` so the nominal
+    arrivals per frame hit the target (users = rate * n_edge * frame_s);
+    asserts the measured wall time grows *sub-quadratically* in the request
+    count between consecutive points — the whole point of scheduling class
+    aggregates instead of 10^5 individual users."""
+    n_edge = 20
+    spec = demo_cluster_spec(n_edge=n_edge, n_cloud=1, n_services=5, n_variants=10)
+    cfg = SimConfig(horizon_ms=9_000.0)
+    frame_s = cfg.frame_ms / 1000.0
+    base = get_scenario("mega-city")
+    targets = [1_000, 10_000] if tiny else [1_000, 10_000, 100_000]
+    opts = EngineOptions(scheduler="hierarchical", window=1)
+    rows = []
+    for users in targets:
+        scn = dataclasses.replace(
+            base, rate_per_edge_per_s=users / (n_edge * frame_s)
+        )
+        best_wall = float("inf")
+        fr = None
+        for _ in range(max(1, repeats)):
+            t0 = time.perf_counter()
+            fr = simulate_fleet(
+                spec, cfg, policy="gus", scenario=scn, n_rep=1, seed=0,
+                options=opts,
+            )
+            best_wall = min(best_wall, time.perf_counter() - t0)
+        row = {
+            "users_per_frame": users,
+            "n_requests": fr.n_requests,
+            "n_frames": fr.n_frames,
+            "wall_s": round(best_wall, 4),
+            "reqs_per_s": round(fr.n_requests / best_wall, 1),
+            "satisfied_pct": round(float(fr.satisfied_per_rep.mean()), 3),
+        }
+        rows.append(row)
+        print(f"users_sweep,users={users},n_requests={fr.n_requests},"
+              f"{row['wall_s']}s,{row['reqs_per_s']} req/s", flush=True)
+    import math as _math
+
+    for lo, hi in zip(rows, rows[1:]):
+        ratio_n = hi["n_requests"] / max(lo["n_requests"], 1)
+        ratio_t = hi["wall_s"] / max(lo["wall_s"], 1e-9)
+        exponent = _math.log(ratio_t) / _math.log(ratio_n)
+        if ratio_t >= ratio_n**2:
+            raise SystemExit(
+                f"users_sweep gate: wall time grew {ratio_t:.1f}x for a "
+                f"{ratio_n:.1f}x request-count step "
+                f"({lo['users_per_frame']} -> {hi['users_per_frame']} "
+                f"users/frame) — scaling exponent {exponent:.2f} is not "
+                f"sub-quadratic"
+            )
+        print(f"users_sweep gate: {lo['users_per_frame']} -> "
+              f"{hi['users_per_frame']} users/frame scales with exponent "
+              f"{exponent:.2f} (< 2 required)", flush=True)
+    return rows
+
+
+def run(*, tiny: bool, out: str, device_counts, repeats: int,
+        users_sweep: bool = False) -> dict:
     spec = bench_spec()
     cfg = bench_cfg(tiny)
     # the device sweeps always run the full-size horizon: per-group compute
@@ -229,6 +311,8 @@ def run(*, tiny: bool, out: str, device_counts, repeats: int) -> dict:
         "overlap_sweep": overlap_sweep,
         "overlap_summary": overlap_summary,
     }
+    if users_sweep:
+        report["users_sweep"] = run_users_sweep(tiny=tiny, repeats=repeats)
     out_dir = Path(out)
     out_dir.mkdir(parents=True, exist_ok=True)
     path = out_dir / "BENCH_fleet.json"
@@ -253,6 +337,17 @@ def compare_against_baseline(report: dict, baseline_path: str, tolerance: float)
         unit=" req/s",
         gate_name="perf gate",
     )
+    if "users_sweep" in report and baseline.get("users_sweep"):
+        gate_rows_against_baseline(
+            report["users_sweep"],
+            baseline["users_sweep"],
+            key_fn=lambda r: r["users_per_frame"],
+            metric="reqs_per_s",
+            tolerance=tolerance,
+            baseline_path=baseline_path,
+            unit=" req/s",
+            gate_name="users-sweep perf gate",
+        )
 
 
 def main(argv=None):
@@ -264,6 +359,11 @@ def main(argv=None):
                          "of two up to jax.local_device_count())")
     ap.add_argument("--repeats", type=int, default=None,
                     help="timed repeats per row, best kept (default 3; 2 tiny)")
+    ap.add_argument("--users-sweep", action="store_true",
+                    help="also sweep users-per-frame 10^3 -> 10^5 (10^4 in "
+                         "--tiny) on the mega-city scenario under the "
+                         "hierarchical scheduler, asserting sub-quadratic "
+                         "wall-time scaling")
     ap.add_argument("--compare", metavar="BASELINE_JSON",
                     help="perf-regression gate against a checked-in baseline")
     ap.add_argument("--tolerance", type=float, default=0.30,
@@ -290,7 +390,7 @@ def main(argv=None):
     repeats = args.repeats if args.repeats is not None else (2 if args.tiny else 3)
     with profile_trace(args.profile):
         report = run(tiny=args.tiny, out=args.out, device_counts=args.devices,
-                     repeats=repeats)
+                     repeats=repeats, users_sweep=args.users_sweep)
 
     if args.update_baseline:
         Path(args.update_baseline).parent.mkdir(parents=True, exist_ok=True)

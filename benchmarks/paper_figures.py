@@ -57,6 +57,7 @@ import numpy as np
 from repro.core import (
     AdmissionConfig,
     CongestionConfig,
+    EngineOptions,
     GeneratorConfig,
     HandoffLink,
     ImpairmentConfig,
@@ -66,6 +67,7 @@ from repro.core import (
     demo_cluster_spec,
     generate_instance,
     get_policy,
+    get_scenario,
     lagrangian_bound,
     list_policies,
     list_scenarios,
@@ -123,10 +125,11 @@ def _base_cfg(tiny: bool, **overrides) -> SimConfig:
 
 def _fleet_sweep(fig, x_label, values, make_cfg, spec, *, n_rep, policies, rng_mode=None):
     rows = []
+    opts = EngineOptions(rng_mode=rng_mode)
     for x in values:
         cfg = make_cfg(x)
         for pol in policies:
-            fr = simulate_fleet(spec, cfg, policy=pol, n_rep=n_rep, seed=0, rng_mode=rng_mode)
+            fr = simulate_fleet(spec, cfg, policy=pol, n_rep=n_rep, seed=0, options=opts)
             rows.append({
                 "x": x,
                 "policy": pol,
@@ -209,7 +212,11 @@ def fig_scenarios(tiny: bool) -> Dict:
     seeds = (0,) if tiny else (0, 1)
     cfg = _base_cfg(tiny, horizon_ms=12_000.0 if tiny else 30_000.0)
     rows = []
-    for scn in list_scenarios():
+    # city-scale scenarios (dense_sweep=False, e.g. mega-city) are sized for
+    # the hierarchical fleet path; per-request simulation of every policy on
+    # them would dominate the whole figure run.  Their coverage lives in the
+    # mega-city smoke and the fleet_scale --users-sweep gate.
+    for scn in [s for s in list_scenarios() if get_scenario(s).dense_sweep]:
         for pol in list_policies():
             rs = [simulate(spec, cfg, policy=pol, scenario=scn, seed=s) for s in seeds]
             sat = float(np.mean([r.satisfied_pct for r in rs]))
@@ -257,7 +264,7 @@ def fig_congestion(tiny: bool, replications=None, rng_mode=None) -> Dict:
         for pol in _fleet_policies():
             fr = simulate_fleet(
                 spec, cfg, policy=pol, scenario=scn, n_rep=n_rep, seed=0,
-                rng_mode=rng_mode,
+                options=EngineOptions(rng_mode=rng_mode),
             )
             rows.append({
                 "x": rate,
@@ -357,7 +364,7 @@ def fig_resilience(tiny: bool, replications=None, rng_mode=None) -> Dict:
             for pol in policies:
                 fr = simulate_fleet(
                     spec, cfg, policy=pol, scenario=scn, n_rep=n_rep, seed=0,
-                    rng_mode=rng_mode,
+                    options=EngineOptions(rng_mode=rng_mode),
                 )
                 rows.append({
                     "regime": regime,

@@ -19,6 +19,7 @@ import numpy as np
 from repro.core import (
     SimConfig,
     demo_cluster_spec,
+    get_scenario,
     list_scenarios,
     simulate,
     simulate_fleet,
@@ -38,7 +39,10 @@ def main(seeds=(0, 1, 2), n_rep=16, rate=2.0):
     )
     print("sweep,scenario,policy,n_requests,satisfied_pct,dropped_pct,mean_us")
     results = {}
-    for name in list_scenarios():
+    # dense_sweep=False scenarios (mega-city) are hierarchical-fleet-scale
+    # workloads; covered by the mega-city smoke and fleet_scale --users-sweep.
+    names = [s for s in list_scenarios() if get_scenario(s).dense_sweep]
+    for name in names:
         for pol in SWEEP_POLICIES:
             rs = [
                 simulate(spec, cfg, policy=pol, scenario=name, seed=s).as_dict()
@@ -66,7 +70,7 @@ def main(seeds=(0, 1, 2), n_rep=16, rate=2.0):
 
     # GUS should never trail the best restricted heuristic by more than
     # noise, anywhere (Happy-* are relaxations — upper bounds, not baselines)
-    for name in list_scenarios():
+    for name in names:
         g = results[(name, "gus")]["satisfied_pct"]
         best_h = max(
             results[(name, p)]["satisfied_pct"]

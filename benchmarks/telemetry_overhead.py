@@ -30,7 +30,7 @@ _SRC = Path(__file__).resolve().parent.parent / "src"
 if _SRC.is_dir() and str(_SRC) not in sys.path:
     sys.path.insert(0, str(_SRC))
 
-from repro.core import simulate_fleet  # noqa: E402
+from repro.core import EngineOptions, simulate_fleet  # noqa: E402
 from repro.obs import CAT_SCHED, recording, span  # noqa: E402
 
 try:  # imported as benchmarks.telemetry_overhead (run.py)
@@ -70,9 +70,10 @@ def measure(*, tiny: bool, repeats: int) -> dict:
         traced_s = _best_wall(lambda: simulate_fleet(spec, cfg, **kw), 1)
     n_spans = sum(1 for e in rec.events() if e["ph"] == "X")
 
-    simulate_fleet(spec, cfg, metrics=True, **kw)  # metrics-variant warmup
+    m_opts = EngineOptions(metrics=True)
+    simulate_fleet(spec, cfg, options=m_opts, **kw)  # metrics-variant warmup
     metrics_s = _best_wall(
-        lambda: simulate_fleet(spec, cfg, metrics=True, **kw), repeats
+        lambda: simulate_fleet(spec, cfg, options=m_opts, **kw), repeats
     )
 
     per_span_s = _per_span_disabled_s()

@@ -21,11 +21,13 @@ from __future__ import annotations
 
 import argparse
 import contextlib
+import dataclasses
 import json
 import os
 
 from repro.core import (
     CongestionConfig,
+    EngineOptions,
     SimConfig,
     demo_cluster_spec,
     get_policy,
@@ -80,6 +82,13 @@ def main(argv=None):
                          "(default) or 'pallas' fused kernel (interpret mode "
                          "off-TPU; bit-identical assignments either way). "
                          "Applies to the default/'gus' policy only")
+    ap.add_argument("--scheduler", choices=["dense", "hierarchical"],
+                    default=None,
+                    help="scheduling granularity: 'dense' (default) ranks "
+                         "every request individually; 'hierarchical' buckets "
+                         "requests into QoS class aggregates first and "
+                         "schedules the aggregates (the 10^5-users-per-frame "
+                         "path; gus-family policies only)")
     ap.add_argument("--congestion", action="store_true",
                     help="enable load-dependent service times (queueing model)")
     ap.add_argument("--metrics", action="store_true",
@@ -142,16 +151,29 @@ def main(argv=None):
         {"scheduler": gus_schedule_np} if args.policy == "gus-np"
         else {"policy": args.policy}
     )
-    if args.backend is not None:
-        if args.policy == "gus-np":
+    if args.policy == "gus-np":
+        if args.backend is not None:
             raise SystemExit("--backend selects the jitted GUS implementation; "
                              "gus-np is the host-side NumPy oracle")
-        sim_kw["backend"] = args.backend
+        if args.scheduler == "hierarchical":
+            raise SystemExit("--scheduler hierarchical needs a registered "
+                             "gus-family policy (not gus-np)")
+    # every engine axis travels as one EngineOptions value; the per-call
+    # keywords (streaming=, rng_mode=, ...) are deprecated aliases
+    sim_opts = EngineOptions(
+        streaming=args.streaming,
+        rng_mode=args.rng_mode,
+        backend=args.backend,
+        scheduler=args.scheduler,
+        metrics=args.metrics,
+    )
     mode = []
     if args.congestion:
         mode.append("congestion")
     if args.backend == "pallas":
         mode.append("pallas-backend")
+    if args.scheduler == "hierarchical":
+        mode.append("hier-scheduler")
     if args.streaming or (args.streaming is None and scn.streaming):
         mode.append("streaming")
     if args.rng_mode == "vectorized" or (args.rng_mode is None and scn.rng_mode == "vectorized"):
@@ -160,15 +182,13 @@ def main(argv=None):
     print(f"=== scenario {scn.name!r} / policy {args.policy!r}{tag} ===")
     if args.metrics and args.policy == "gus-np":
         raise SystemExit("--metrics needs a registered policy (not gus-np)")
-    metrics_kw = {"metrics": True} if args.metrics else {}
 
     fr = None
     rec_ctx = recording() if args.trace else contextlib.nullcontext()
     with profile_trace(args.profile), rec_ctx as rec:
         try:
             r = simulate(spec, cfg, scenario=scn, seed=args.seed,
-                         streaming=args.streaming, rng_mode=args.rng_mode,
-                         **sim_kw, **metrics_kw)
+                         options=sim_opts, **sim_kw)
         except (KeyError, ValueError) as e:  # unknown policy / ILP too big
             raise SystemExit(str(e.args[0]))
         for k, v in r.as_dict().items():
@@ -194,14 +214,14 @@ def main(argv=None):
             try:
                 # a --devices request the host cannot honor raises a clear
                 # ValueError (never a silent single-device fallback)
-                fleet_kw = dict(sim_kw)
-                if args.prefetch is not None:
-                    fleet_kw["prefetch"] = args.prefetch
+                fleet_opts = dataclasses.replace(
+                    sim_opts, devices=args.devices, window=args.window,
+                    **({"prefetch": args.prefetch}
+                       if args.prefetch is not None else {}),
+                )
                 fr = simulate_fleet(spec, cfg, scenario=scn, n_rep=args.fleet,
-                                    seed=args.seed, streaming=args.streaming,
-                                    devices=args.devices, window=args.window,
-                                    rng_mode=args.rng_mode, **fleet_kw,
-                                    **metrics_kw)
+                                    seed=args.seed, options=fleet_opts,
+                                    **sim_kw)
             except ValueError as e:  # bad --devices, ILP uncapped frame, ...
                 raise SystemExit(str(e.args[0]))
             print(f"=== fleet: {args.fleet} replications on "

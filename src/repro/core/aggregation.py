@@ -1,0 +1,396 @@
+"""Hierarchical class-aggregate scheduling (the ``10^5+`` users-per-frame path).
+
+The paper's GUS walks every request over the dense ``N x M x L`` grid, which
+caps frames in the low thousands of requests.  But the QoS space is tiny:
+requests differ only in (covering edge, service, accuracy floor ``A``,
+deadline ``C``, payload size, queueing age ``Tq``), and with discrete QoS
+tiers most of those axes collapse.  This module buckets requests into
+**QoS classes** and schedules the class *aggregates* — a grid of
+``n_classes x M x L`` with per-class member counts — then maps class-level
+allocations back to individual requests.
+
+The scheduler is two-level:
+
+1. **Per-edge local pass** — embarrassingly parallel over covering edges:
+   requests are bucketed into classes, each class's utility / feasibility /
+   cost rows are built once from a representative member, and classes with
+   no feasible candidate anywhere are retired immediately.  Nothing in this
+   pass touches shared state.
+2. **Global cloud-contention pass** — the per-edge class tables are merged
+   in first-request-index order and a single sequential greedy allocates
+   *chunks* (class, server j, variant l, count) against the shared capacity
+   vectors, reconciling cross-edge contention for cloud compute, remote
+   edge compute, and each edge's uplink ``eta``.  This is the only
+   sequential step, and it runs over ``n_classes`` rows instead of ``N``.
+3. **De-aggregation** — chunks are mapped back to per-request assignments
+   by consuming each class's members in ascending request index, so the
+   result is deterministic and reproducible regardless of how requests were
+   grouped.
+
+Parity with dense GUS
+---------------------
+In ``exact=True`` mode the chunk allocator emulates the NumPy oracle's
+float32 sequential capacity subtraction member by member, re-checking only
+the chosen cell (capacity is monotone decreasing, so the feasible-argmax of
+a class of identical rows can only move when the chosen cell dies — at
+which point the full argmax is recomputed).  Consequences, pinned by
+``tests/test_aggregation.py``:
+
+* with lossless keys (``decimals=None``) every class groups bit-identical
+  rows; on frames where classes are index-contiguous (in particular on any
+  frame where all classes are singletons, i.e. every real scenario frame)
+  the assignment is **bit-identical** to :func:`repro.core.gus.gus_schedule_np`;
+* with quantized keys the representative row stands in for near-identical
+  members, trading exactness for aggregation — the satisfaction gap vs
+  dense GUS stays within the paper-scale tolerance asserted in tests.
+
+The fleet's ``scheduler="hierarchical"`` path (``simulator.py``) reuses
+:func:`aggregate_requests` / :func:`hier_assign` / :func:`deaggregate` but
+builds only the class-level tensors, never the dense ``N x M x L`` grid —
+that is what bounds memory at ``10^5+`` users per frame.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .gus import Assignment
+from .instance import FlatInstance
+from .satisfaction import hard_feasible, us_tensor
+
+__all__ = [
+    "AggregateClasses",
+    "QuantizationConfig",
+    "aggregate_instance",
+    "aggregate_requests",
+    "hier_assign",
+    "deaggregate",
+    "hier_schedule_np",
+    "make_gus_hier",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizationConfig:
+    """How request attributes are bucketed into QoS classes (fleet path).
+
+    ``acc_decimals`` / ``deadline_decimals`` round the accuracy floor and
+    deadline with :func:`numpy.round` (negative = coarser than integer), so
+    discrete QoS tiers collapse losslessly.  ``size_bins`` / ``tq_bins``
+    are equal-width bins over each frame's observed payload-size and
+    queueing-age ranges.
+    """
+
+    acc_decimals: int = 0
+    deadline_decimals: int = -2
+    size_bins: int = 8
+    tq_bins: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregateClasses:
+    """Class-aggregate view of one frame: grouping plus per-class rows.
+
+    ``members`` lists request indices grouped by class and ascending within
+    each class; class ``c`` owns ``members[offsets[c]:offsets[c + 1]]``.
+    ``us`` / ``feas`` / ``v`` / ``u`` are the representative rows on the
+    ``(n_classes, M, L)`` candidate grid.
+    """
+
+    count: np.ndarray      # (n_c,) int64 member counts
+    first_idx: np.ndarray  # (n_c,) int64 lowest member request index
+    members: np.ndarray    # (N,)  int64 request indices, class-grouped
+    offsets: np.ndarray    # (n_c + 1,) int64 slice bounds into ``members``
+    cover: np.ndarray      # (n_c,) int64 covering edge
+    us: np.ndarray         # (n_c, M, L) f32 utility of the representative
+    feas: np.ndarray       # (n_c, M, L) bool hard feasibility
+    v: np.ndarray          # (n_c, M, L) f32 compute cost
+    u: np.ndarray          # (n_c, M, L) f32 comm cost
+
+    @property
+    def n_classes(self) -> int:
+        return self.count.shape[0]
+
+
+def _group(inv: np.ndarray, n_classes: int):
+    """Grouping arrays from a class-id-per-request vector."""
+    n = inv.shape[0]
+    count = np.bincount(inv, minlength=n_classes).astype(np.int64)
+    first_idx = np.full(n_classes, n, np.int64)
+    np.minimum.at(first_idx, inv, np.arange(n, dtype=np.int64))
+    members = np.argsort(inv, kind="stable").astype(np.int64)
+    offsets = np.concatenate([[0], np.cumsum(count)]).astype(np.int64)
+    return count, first_idx, members, offsets
+
+
+def aggregate_instance(
+    inst: FlatInstance, decimals: Optional[int] = None
+) -> AggregateClasses:
+    """Bucket a dense :class:`FlatInstance`'s rows into QoS classes.
+
+    This is the per-edge local pass for the drop-in ``gus-hier`` policy: it
+    operates on an instance the engine has already built, so rows are
+    grouped directly by their candidate-grid content — two requests share a
+    class iff their scheduling problem is identical: same covering edge,
+    same QoS (``A``, ``C``, weights) and the same ``ctime``/``v``/``u``/
+    ``acc``/``avail`` rows.  ``decimals=None`` keys on exact values
+    (lossless classes); an integer rounds ``ctime`` and ``u`` first, merging
+    near-identical requests (e.g. same tier, payloads within a bin).
+
+    The representative of each class is its lowest-index member, whose
+    *unrounded* rows feed utility and feasibility.
+    """
+    A = np.asarray(inst.A)
+    N = A.shape[0]
+    ct = np.asarray(inst.ctime, dtype=np.float64)
+    uu = np.asarray(inst.u, dtype=np.float64)
+    if decimals is not None:
+        ct = np.round(ct, decimals)
+        uu = np.round(uu, decimals)
+    mat = np.concatenate(
+        [
+            np.asarray(inst.cover, dtype=np.float64)[:, None],
+            A.astype(np.float64)[:, None],
+            np.asarray(inst.C, dtype=np.float64)[:, None],
+            np.asarray(inst.w_a, dtype=np.float64)[:, None],
+            np.asarray(inst.w_c, dtype=np.float64)[:, None],
+            ct.reshape(N, -1),
+            uu.reshape(N, -1),
+            np.asarray(inst.v, dtype=np.float64).reshape(N, -1),
+            np.asarray(inst.acc, dtype=np.float64).reshape(N, -1),
+            np.asarray(inst.avail).astype(np.float64).reshape(N, -1),
+        ],
+        axis=1,
+    )
+    _, inv = np.unique(mat, axis=0, return_inverse=True)
+    inv = inv.reshape(-1)
+    count, first_idx, members, offsets = _group(inv, int(inv.max()) + 1 if N else 0)
+
+    # representative rows: utilities/feasibility via the same code the dense
+    # schedulers use, gathered at each class's first member (bit-identical
+    # to the corresponding rows of the full us/feas tensors).
+    rep = first_idx
+    us = np.asarray(us_tensor(inst))[rep]
+    feas = np.asarray(hard_feasible(inst))[rep]
+    return AggregateClasses(
+        count=count,
+        first_idx=first_idx,
+        members=members,
+        offsets=offsets,
+        cover=np.asarray(inst.cover)[rep].astype(np.int64),
+        us=us,
+        feas=feas,
+        v=np.asarray(inst.v)[rep],
+        u=np.asarray(inst.u)[rep],
+    )
+
+
+def aggregate_requests(
+    cover: np.ndarray,
+    service: np.ndarray,
+    A: np.ndarray,
+    C: np.ndarray,
+    size: np.ndarray,
+    tq: np.ndarray,
+    quant: Optional[QuantizationConfig] = None,
+):
+    """Bucket raw request columns into QoS classes (fleet path, no grid).
+
+    Classes key on (covering edge, service, rounded ``A``, rounded ``C``,
+    payload-size bin, queueing-age bin) per ``quant``.  Returns the
+    grouping arrays plus *count-weighted mean* representative columns —
+    ``(count, first_idx, members, offsets, rep)`` where ``rep`` is a dict
+    of per-class ``cover``/``service`` (exact) and ``A``/``C``/``size``/
+    ``tq`` (means).  The caller builds the ``(n_classes, M, L)`` candidate
+    grid from ``rep`` — dense per-request tensors are never materialized.
+    """
+    quant = quant or QuantizationConfig()
+    n = cover.shape[0]
+    if n == 0:
+        empty = np.zeros(0, np.int64)
+        rep = dict(
+            cover=empty,
+            service=empty,
+            A=np.zeros(0),
+            C=np.zeros(0),
+            size=np.zeros(0),
+            tq=np.zeros(0),
+        )
+        return empty, empty, empty, np.zeros(1, np.int64), rep
+
+    def _bin(x, bins):
+        lo, hi = float(np.min(x)), float(np.max(x))
+        if hi <= lo:
+            return np.zeros(n, np.int64)
+        edges = (x - lo) * (bins / (hi - lo))
+        return np.clip(edges.astype(np.int64), 0, bins - 1)
+
+    key = np.column_stack(
+        [
+            cover.astype(np.int64),
+            service.astype(np.int64),
+            np.round(A * 10.0 ** quant.acc_decimals).astype(np.int64),
+            np.round(C * 10.0 ** quant.deadline_decimals).astype(np.int64),
+            _bin(np.asarray(size, np.float64), quant.size_bins),
+            _bin(np.asarray(tq, np.float64), quant.tq_bins),
+        ]
+    )
+    _, inv = np.unique(key, axis=0, return_inverse=True)
+    inv = inv.reshape(-1)
+    n_c = int(inv.max()) + 1
+    count, first_idx, members, offsets = _group(inv, n_c)
+
+    fcount = count.astype(np.float64)
+
+    def _mean(x):
+        return np.bincount(inv, weights=np.asarray(x, np.float64), minlength=n_c) / fcount
+
+    rep = dict(
+        cover=cover.astype(np.int64)[first_idx],
+        service=service.astype(np.int64)[first_idx],
+        A=_mean(A),
+        C=_mean(C),
+        size=_mean(size),
+        tq=_mean(tq),
+    )
+    return count, first_idx, members, offsets, rep
+
+
+#: mirrors ``repro.core.gus.NEG`` — scores below this are "infeasible"
+_NEG = -1e30
+
+
+def hier_assign(
+    agg: AggregateClasses,
+    gamma: np.ndarray,
+    eta: np.ndarray,
+    *,
+    exact: bool = False,
+) -> np.ndarray:
+    """Global cloud-contention pass: chunked greedy over class aggregates.
+
+    Merges the per-edge class tables in first-request-index order (the same
+    order dense GUS visits their members) and allocates each class in
+    chunks: pick the feasible utility-argmax cell (first occurrence on the
+    flat ``j * L + l`` axis — GUS's tie-break), fit as many members as the
+    shared ``gamma``/``eta`` capacities allow, commit, and re-pick until
+    the class is exhausted or nothing fits.  Local cells charge only the
+    server's ``gamma``; offload cells also charge the covering edge's
+    ``eta`` — the cross-edge coupling this pass exists to reconcile.
+
+    ``exact=True`` consumes members one at a time with float32 capacity
+    subtraction, reproducing :func:`repro.core.gus.gus_schedule_np`'s
+    arithmetic bit for bit; ``exact=False`` sizes chunks analytically in
+    float64 (the fleet path — one division instead of ``count`` updates).
+
+    Returns an ``(n_chunks, 4)`` int64 array of ``(class, j, l, take)`` in
+    allocation order.
+    """
+    dtype = np.float32 if exact else np.float64
+    gamma = np.asarray(gamma, dtype).copy()
+    eta = np.asarray(eta, dtype).copy()
+    if agg.n_classes == 0:
+        return np.zeros((0, 4), np.int64)
+    M = gamma.shape[0]
+    L = agg.us.shape[-1]
+    server = np.arange(M)
+
+    # pass-1 screening: classes infeasible everywhere never enter the queue
+    alive = agg.feas.any(axis=(1, 2))
+    order = np.argsort(agg.first_idx, kind="stable")
+    order = order[alive[order]]
+
+    chunks = []
+    for c in order:
+        rem = int(agg.count[c])
+        s = int(agg.cover[c])
+        row_us = agg.us[c]
+        row_v = np.asarray(agg.v[c], dtype)
+        row_u = np.asarray(agg.u[c], dtype)
+        local = (server == s)[:, None]
+        feas = agg.feas[c]
+        while rem > 0:
+            ok = feas & (row_v <= gamma[:, None]) & (local | (row_u <= eta[s]))
+            if not ok.any():
+                break
+            flat = int(np.argmax(np.where(ok, row_us, _NEG)))
+            j, l = divmod(flat, L)
+            vv = row_v[j, l]
+            uv = row_u[j, l]
+            if exact:
+                take = 0
+                while take < rem:
+                    if vv > gamma[j] or (j != s and uv > eta[s]):
+                        break
+                    gamma[j] -= vv
+                    if j != s:
+                        eta[s] -= uv
+                    take += 1
+            else:
+                take = rem
+                if vv > 0:
+                    take = min(take, int(gamma[j] // vv))
+                if j != s and uv > 0:
+                    take = min(take, int(eta[s] // uv))
+                gamma[j] -= take * vv
+                if j != s:
+                    eta[s] -= take * uv
+            if take <= 0:
+                break  # float edge: argmax cell passed ``ok`` but fits zero
+            chunks.append((int(c), j, l, take))
+            rem -= take
+    if not chunks:
+        return np.zeros((0, 4), np.int64)
+    return np.asarray(chunks, np.int64)
+
+
+def deaggregate(agg: AggregateClasses, chunks: np.ndarray, n_requests: int):
+    """Map class-level chunks back to per-request ``(j, l)`` assignments.
+
+    Each chunk consumes its class's members in ascending request index —
+    the deterministic tie-break that makes hierarchical results reproducible
+    and, on lossless classes, identical to dense GUS.  Unallocated members
+    stay dropped (``-1``).
+    """
+    out_j = np.full(n_requests, -1, np.int32)
+    out_l = np.full(n_requests, -1, np.int32)
+    ptr = agg.offsets[:-1].copy()
+    for c, j, l, take in chunks:
+        sel = agg.members[ptr[c] : ptr[c] + take]
+        out_j[sel] = j
+        out_l[sel] = l
+        ptr[c] += take
+    return out_j, out_l
+
+
+def make_gus_hier(decimals: Optional[int] = None):
+    """A drop-in scheduler callable running GUS over class aggregates.
+
+    ``decimals=None`` (the registered ``gus-hier`` default) keys classes on
+    exact row content and allocates in exact mode — bit-parity with dense
+    GUS on every frame whose classes are index-contiguous, which includes
+    all frames with singleton classes.  Pass ``decimals`` to merge
+    near-identical requests (lossy, bounded satisfaction drift).
+    """
+
+    def schedule(inst: FlatInstance) -> Assignment:
+        n = int(np.asarray(inst.A).shape[0])
+        if n == 0:
+            z = jnp.zeros(0, jnp.int32)
+            return Assignment(z, z)
+        agg = aggregate_instance(inst, decimals=decimals)
+        chunks = hier_assign(
+            agg, np.asarray(inst.gamma), np.asarray(inst.eta), exact=True
+        )
+        out_j, out_l = deaggregate(agg, chunks, n)
+        return Assignment(jnp.asarray(out_j), jnp.asarray(out_l))
+
+    return schedule
+
+
+def hier_schedule_np(inst: FlatInstance) -> Assignment:
+    """Module-level exact-mode entry point (see :func:`make_gus_hier`)."""
+    return make_gus_hier()(inst)

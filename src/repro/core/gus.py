@@ -61,14 +61,13 @@ GUS_BACKENDS = ("xla", "pallas")
 
 
 def resolve_gus_backend(backend=None) -> str:
-    """Resolve a ``backend=`` argument: explicit value, else the
-    ``REPRO_GUS_BACKEND`` environment variable, else ``"xla"``."""
-    b = backend if backend is not None else os.environ.get("REPRO_GUS_BACKEND", "xla")
-    if b not in GUS_BACKENDS:
-        raise ValueError(
-            f"unknown GUS backend {b!r}; expected one of {', '.join(GUS_BACKENDS)}"
-        )
-    return b
+    """Resolve a ``backend=`` argument under the engine-wide precedence
+    order (explicit > ``REPRO_GUS_BACKEND`` > ``"xla"``), delegating to
+    :func:`repro.core.options.resolve_backend` — the single environment
+    lookup site for the backend axis."""
+    from .options import resolve_backend
+
+    return resolve_backend(backend)
 
 
 @jax.tree_util.register_dataclass

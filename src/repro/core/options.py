@@ -1,0 +1,244 @@
+"""Engine options — one consolidated, frozen configuration object.
+
+``simulate`` and ``simulate_fleet`` grew one keyword argument per feature
+axis (backend, rng_mode, streaming, window, prefetch, devices, rep_group,
+metrics ... 14 keywords at the fleet entry point) and every site resolved
+its own defaults — ``gus.py`` read ``REPRO_GUS_BACKEND`` ad hoc, the
+simulator read ``scenario.streaming`` / ``scenario.rng_mode`` inline.  This
+module replaces that sprawl with one frozen :class:`EngineOptions` value
+accepted as ``options=`` by both entry points, and one
+:func:`resolve_options` helper that enforces a single precedence order:
+
+    **explicit argument  >  environment variable  >  scenario default
+    >  built-in default**
+
+Environment variables recognized (read at resolve time):
+
+=====================  ========================  =========================
+field                  variable                  values
+=====================  ========================  =========================
+``backend``            ``REPRO_GUS_BACKEND``     ``xla`` | ``pallas``
+``rng_mode``           ``REPRO_RNG_MODE``        ``paper-default`` | ``vectorized``
+``scheduler``          ``REPRO_SCHEDULER``       ``dense`` | ``hierarchical``
+=====================  ========================  =========================
+
+``backend`` is special: its environment fallback is applied at GUS
+*dispatch* time (:func:`resolve_backend`, which
+:func:`repro.core.gus.resolve_gus_backend` delegates to) rather than baked
+into the resolved options.  That keeps the documented behaviour that
+``REPRO_GUS_BACKEND`` steers GUS-*cored* policies (``happy_*``) process-wide
+even though an explicit ``backend=`` only composes with the default
+scheduler / the ``"gus"`` policy.  The precedence order is identical either
+way; only the moment of the environment read differs.
+
+The legacy per-call keywords (``simulate_fleet(devices=..., window=...)``)
+remain as *deprecated aliases*: they build the same :class:`EngineOptions`,
+emit a :class:`DeprecationWarning`, and raise when combined with an
+explicit ``options=`` (two configuration styles in one call is always a
+conflict).  Old-style and ``options=`` calls resolve to the same object, so
+results are bit-identical between the two styles — pinned by
+``tests/test_options.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import warnings
+from typing import Mapping, Optional
+
+__all__ = [
+    "EngineOptions",
+    "SCHEDULERS",
+    "ENV_BACKEND",
+    "ENV_RNG_MODE",
+    "ENV_SCHEDULER",
+    "resolve_options",
+    "resolve_backend",
+]
+
+#: the two engine scheduling layouts: ``"dense"`` schedules every request
+#: row on the N x M x L grid (the paper's formulation); ``"hierarchical"``
+#: buckets requests into QoS classes and schedules class aggregates
+#: (:mod:`repro.core.aggregation`), the layout for 10^5+ users per frame.
+SCHEDULERS = ("dense", "hierarchical")
+
+ENV_BACKEND = "REPRO_GUS_BACKEND"
+ENV_RNG_MODE = "REPRO_RNG_MODE"
+ENV_SCHEDULER = "REPRO_SCHEDULER"
+
+#: registered GUS backends, mirrored here (not imported) so this module
+#: stays import-light; :mod:`repro.core.gus` asserts the two stay in sync.
+_BACKENDS = ("xla", "pallas")
+
+#: sentinel distinguishing "keyword not passed" from an explicit ``None``
+#: in the deprecated-alias signatures of ``simulate`` / ``simulate_fleet``.
+_UNSET = type("_Unset", (), {"__repr__": lambda self: "<unset>"})()
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineOptions:
+    """Execution options shared by ``simulate`` and ``simulate_fleet``.
+
+    Every field defaults to "unset" (``None``) where a scenario or
+    environment default exists; :func:`resolve_options` fills those in.
+    Fields that only apply to ``simulate_fleet`` (``window``, ``prefetch``,
+    ``devices``, ``rep_group``) are ignored by ``simulate``, so one options
+    value can drive both entry points.
+    """
+
+    #: GUS implementation on the padded hot path (``"xla"`` | ``"pallas"``);
+    #: ``None`` defers to ``REPRO_GUS_BACKEND`` at dispatch, else ``"xla"``.
+    backend: Optional[str] = None
+    #: arrival-RNG draw discipline (``"paper-default"`` | ``"vectorized"``);
+    #: ``None`` defers to ``REPRO_RNG_MODE``, then the scenario default.
+    rng_mode: Optional[str] = None
+    #: bounded-memory streaming arrivals; ``None`` defers to the scenario.
+    streaming: Optional[bool] = None
+    #: frames per fleet scan window (``None`` = fully materialized).
+    window: Optional[int] = None
+    #: producer-queue depth overlapping host builds with device compute.
+    prefetch: int = 1
+    #: device-mesh width for the fleet's replication axis (``None`` = all).
+    devices: Optional[int] = None
+    #: fixed replication-group width (``None`` = ``FLEET_REP_GROUP``).
+    rep_group: Optional[int] = None
+    #: record the per-decision metric stream.
+    metrics: bool = False
+    #: engine scheduling layout (:data:`SCHEDULERS`); ``None`` defers to
+    #: ``REPRO_SCHEDULER``, else ``"dense"``.
+    scheduler: Optional[str] = None
+
+
+def _env_choice(env: Mapping[str, str], var: str, allowed, what: str):
+    """Read and validate an environment override, or return ``None``."""
+    raw = env.get(var)
+    if raw is None or raw == "":
+        return None
+    if raw not in allowed:
+        raise ValueError(
+            f"environment variable {var}={raw!r} is not a valid {what}; "
+            f"expected one of {', '.join(allowed)}"
+        )
+    return raw
+
+
+def resolve_backend(backend: Optional[str] = None, env: Optional[Mapping[str, str]] = None) -> str:
+    """The GUS-dispatch backend under the standard precedence order:
+    explicit ``backend=`` > ``REPRO_GUS_BACKEND`` > ``"xla"``.
+
+    This is the single environment-lookup site for the backend axis —
+    :func:`repro.core.gus.resolve_gus_backend` delegates here, so the
+    per-call dispatch in ``gus_schedule`` and the options resolution below
+    can never disagree on precedence.
+    """
+    if env is None:
+        env = os.environ
+    if backend is not None:
+        b = backend
+    else:
+        b = _env_choice(env, ENV_BACKEND, _BACKENDS, "GUS backend") or "xla"
+    if b not in _BACKENDS:
+        raise ValueError(
+            f"unknown GUS backend {b!r}; expected one of {', '.join(_BACKENDS)}"
+        )
+    return b
+
+
+def resolve_options(
+    options: Optional[EngineOptions] = None,
+    scenario=None,
+    env: Optional[Mapping[str, str]] = None,
+) -> EngineOptions:
+    """Fill an :class:`EngineOptions`' unset fields along the precedence
+    order **explicit > environment > scenario default > built-in default**.
+
+    * ``rng_mode``  — explicit > ``REPRO_RNG_MODE`` > ``scenario.rng_mode``
+      (> ``"paper-default"`` with no scenario); validated.
+    * ``streaming`` — explicit > ``scenario.streaming`` (> ``False``).
+    * ``scheduler`` — explicit > ``REPRO_SCHEDULER`` > ``"dense"``; validated.
+    * ``backend``   — explicit only; the ``REPRO_GUS_BACKEND`` fallback is
+      applied at dispatch by :func:`resolve_backend` (see module docstring),
+      with identical precedence.
+    * ``prefetch`` is clamped to ``>= 0``; ``rep_group``/``devices``/
+      ``window`` are validated to be ``None`` or ``>= 1`` (the simulator
+      adds the context-dependent checks, e.g. against the visible device
+      count).
+
+    Returns a new frozen :class:`EngineOptions` with every deferring field
+    resolved; idempotent on an already-resolved value.
+    """
+    if env is None:
+        env = os.environ
+    opts = options if options is not None else EngineOptions()
+    if not isinstance(opts, EngineOptions):
+        raise TypeError(
+            f"options must be an EngineOptions, got {type(opts).__name__}"
+        )
+
+    if opts.backend is not None:
+        resolve_backend(opts.backend, env)  # validate early, resolve at dispatch
+
+    rng_mode = opts.rng_mode
+    if rng_mode is None:
+        rng_mode = _env_choice(
+            env, ENV_RNG_MODE, ("paper-default", "vectorized"), "rng_mode"
+        )
+    if rng_mode is None:
+        rng_mode = scenario.rng_mode if scenario is not None else "paper-default"
+    from .scenarios import _resolve_rng_mode
+
+    rng_mode = _resolve_rng_mode(rng_mode)
+
+    streaming = opts.streaming
+    if streaming is None:
+        streaming = bool(scenario.streaming) if scenario is not None else False
+
+    scheduler = opts.scheduler
+    if scheduler is None:
+        scheduler = _env_choice(env, ENV_SCHEDULER, SCHEDULERS, "scheduler") or "dense"
+    if scheduler not in SCHEDULERS:
+        raise ValueError(
+            f"unknown scheduler {scheduler!r}; expected one of {', '.join(SCHEDULERS)}"
+        )
+
+    for field in ("window", "devices", "rep_group"):
+        val = getattr(opts, field)
+        if val is not None and int(val) < 1:
+            raise ValueError(f"{field} must be >= 1 or None, got {val}")
+
+    return dataclasses.replace(
+        opts,
+        rng_mode=rng_mode,
+        streaming=bool(streaming),
+        scheduler=scheduler,
+        prefetch=max(0, int(opts.prefetch)),
+    )
+
+
+def fold_deprecated_kwargs(
+    options: Optional[EngineOptions], deprecated: dict, *, caller: str
+) -> EngineOptions:
+    """Merge the legacy per-call keywords into an :class:`EngineOptions`.
+
+    ``deprecated`` maps field names to the values the caller received, with
+    :data:`_UNSET` marking "not passed".  Any passed legacy keyword emits
+    one :class:`DeprecationWarning` naming the offenders; combining legacy
+    keywords with an explicit ``options=`` raises (the two styles cannot be
+    merged without guessing which side wins).
+    """
+    passed = {k: v for k, v in deprecated.items() if v is not _UNSET}
+    if options is not None:
+        if passed:
+            raise ValueError(
+                f"{caller}() got both options= and the deprecated keyword(s) "
+                f"{sorted(passed)}; move them into EngineOptions"
+            )
+        return options
+    if passed:
+        warnings.warn(
+            f"{caller}({', '.join(sorted(passed))}) — per-call engine keywords are "
+            f"deprecated; pass options=EngineOptions(...) instead",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+    return EngineOptions(**passed)

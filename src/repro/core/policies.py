@@ -202,6 +202,24 @@ register_policy(Policy(
     kind="greedy",
 ))
 
+def _make_gus_hier(n_edge: int, n_servers: int):
+    from .aggregation import make_gus_hier
+
+    return make_gus_hier()
+
+
+register_policy(Policy(
+    name="gus-hier",
+    description=(
+        "GUS over QoS-class aggregates: bucket requests into classes, "
+        "allocate class chunks, de-aggregate by request index"
+    ),
+    make=_make_gus_hier,
+    vmappable=False,
+    pad=False,
+    kind="greedy",
+))
+
 register_policy(Policy(
     name="gus-ordered",
     description="GUS processing requests by descending best-achievable US",

@@ -232,6 +232,12 @@ class Scenario:
     #: generator (~10x faster, different draw order — opt in).  Overridable
     #: per call via ``simulate(..., rng_mode=...)`` and friends.
     rng_mode: str = "paper-default"
+    #: whether the scenario is sized for the dense per-request sweeps in
+    #: ``benchmarks/`` (every-policy x every-scenario matrices).  City-scale
+    #: workloads built for the hierarchical fleet path set this False; they
+    #: are exercised by the mega-city smoke and ``fleet_scale --users-sweep``
+    #: instead.
+    dense_sweep: bool = True
 
     # -- arrival process ----------------------------------------------------
     def rate(self, edge: int, t_ms: float, cfg) -> float:
@@ -296,6 +302,34 @@ class Scenario:
         """(M,) multiplier in [0, 1] applied to each server's per-frame
         (gamma, eta) budgets, or ``None`` for "no scaling" (all ones)."""
         return None
+
+    def capacity_scale_batch(
+        self, frame_starts_ms: np.ndarray, cfg, n_edge: int, n_servers: int
+    ) -> Optional[np.ndarray]:
+        """Vectorized :meth:`capacity_scale` over a window of frame starts.
+
+        Returns ``(F, M)`` multipliers, or ``None`` when no frame in the
+        window is scaled.  Unscaled frames carry rows of exact ``1.0``; the
+        budgets are float64 and ``x * 1.0`` is the identity there, so a
+        batched window is bit-identical to per-frame scalar calls.
+
+        Like :meth:`rate_batch`, the default covers the two safe cases: a
+        scenario that never overrode :meth:`capacity_scale` has a constant
+        all-ones stream (return ``None`` without touching the frames), and
+        one that overrode the scalar hook but not this method falls back to
+        an elementwise loop — slower, but never silently wrong.
+        """
+        t = np.asarray(frame_starts_ms, np.float64)
+        if type(self).capacity_scale is Scenario.capacity_scale:
+            return None
+        out = None
+        for i in range(t.size):
+            s = self.capacity_scale(float(t[i]), cfg, n_edge, n_servers)
+            if s is not None:
+                if out is None:
+                    out = np.ones((t.size, n_servers), np.float64)
+                out[i] = s
+        return out
 
     # -- generator ----------------------------------------------------------
     def generate_arrivals(
@@ -773,6 +807,9 @@ class OutageScenario(Scenario):
                 scale[j] = 0.0
         return scale
 
+    def capacity_scale_batch(self, frame_starts_ms, cfg, n_edge, n_servers):
+        return _outage_scale_batch(self, frame_starts_ms, cfg, n_servers)
+
 
 @register_scenario
 @dataclasses.dataclass(frozen=True)
@@ -805,3 +842,102 @@ class FlashCrowdOutageScenario(FlashCrowdScenario):
             if 0 <= j < n_servers:
                 scale[j] = 0.0
         return scale
+
+    def capacity_scale_batch(self, frame_starts_ms, cfg, n_edge, n_servers):
+        return _outage_scale_batch(self, frame_starts_ms, cfg, n_servers)
+
+
+def _outage_scale_batch(scn, frame_starts_ms, cfg, n_servers):
+    """Shared vectorized outage-window mask for the two outage scenarios.
+
+    Bit-identity with the scalar hook: frames inside the window get the
+    same float32 ``0.0``/``1.0`` row the scalar hook builds, frames outside
+    get exact ``1.0`` (the f64 multiplicative identity).
+    """
+    t = np.asarray(frame_starts_ms, np.float64)
+    in_outage = (scn.outage_start_frac * cfg.horizon_ms <= t) & (
+        t < scn.outage_end_frac * cfg.horizon_ms
+    )
+    if not in_outage.any():
+        return None
+    out = np.ones((t.size, n_servers), np.float64)
+    down = [j for j in scn.down_servers if 0 <= j < n_servers]
+    if down:
+        out[np.ix_(in_outage, down)] = 0.0
+    return out
+
+
+@register_scenario
+@dataclasses.dataclass(frozen=True)
+class MegaCityScenario(Scenario):
+    """City-scale load: a diurnal swing *multiplied* by a mid-run flash
+    crowd on the hot edges, at rates sized for 10^5+ arrivals per frame on
+    a ~20-edge cluster (``rate_per_edge_per_s * frame_s * n_edge``).  QoS
+    requirements are drawn from *discrete* tiers (accuracy floor x deadline
+    multiplier), so the distinct-QoS space stays tiny no matter how many
+    users arrive — the workload the hierarchical class-aggregate scheduler
+    (:mod:`repro.core.aggregation`) is built for.  Streams and generates
+    columnar (``vectorized``) by default; a materialized per-Request trace
+    at this scale is exactly what the engine is trying not to build.
+    """
+
+    name: str = "mega-city"
+    description: str = "10^5+ users/frame: diurnal x flash crowd, discrete QoS tiers"
+    streaming: bool = True
+    rng_mode: str = "vectorized"
+    dense_sweep: bool = False
+    rate_per_edge_per_s: float = 2400.0
+    amplitude: float = 0.5
+    period_frac: float = 1.0
+    burst_mult: float = 3.0
+    burst_start_frac: float = 0.4
+    burst_end_frac: float = 0.6
+    hot_edge_stride: int = 2
+    acc_tiers: Tuple[float, ...] = (45.0, 55.0, 65.0)
+    deadline_mults: Tuple[float, ...] = (0.75, 1.0, 1.5)
+
+    def _hot(self, edge: int) -> bool:
+        return edge % self.hot_edge_stride == 0
+
+    def rate(self, edge, t_ms, cfg):
+        period = max(cfg.horizon_ms * self.period_frac, 1e-9)
+        r = self.rate_per_edge_per_s * (
+            1.0 + self.amplitude * math.sin(2.0 * math.pi * t_ms / period)
+        )
+        in_burst = (
+            self.burst_start_frac * cfg.horizon_ms
+            <= t_ms
+            < self.burst_end_frac * cfg.horizon_ms
+        )
+        return r * self.burst_mult if (self._hot(edge) and in_burst) else r
+
+    def rate_batch(self, edge, t_ms, cfg):
+        t = np.asarray(t_ms, np.float64)
+        period = max(cfg.horizon_ms * self.period_frac, 1e-9)
+        r = self.rate_per_edge_per_s * (
+            1.0 + self.amplitude * np.sin(2.0 * np.pi * t / period)
+        )
+        if not self._hot(edge):
+            return r
+        in_burst = (self.burst_start_frac * cfg.horizon_ms <= t) & (
+            t < self.burst_end_frac * cfg.horizon_ms
+        )
+        return np.where(in_burst, r * self.burst_mult, r)
+
+    def rate_bound(self, edge, cfg):
+        peak = self.rate_per_edge_per_s * (1.0 + self.amplitude)
+        return peak * (self.burst_mult if self._hot(edge) else 1.0)
+
+    def draw_qos(self, rng, cfg):
+        a = self.acc_tiers[int(rng.integers(0, len(self.acc_tiers)))]
+        m = self.deadline_mults[int(rng.integers(0, len(self.deadline_mults)))]
+        return float(a), float(cfg.delay_req_ms * m)
+
+    def draw_qos_batch(self, rng, cfg, n):
+        a = np.asarray(self.acc_tiers, np.float64)[
+            rng.integers(0, len(self.acc_tiers), n)
+        ]
+        c = cfg.delay_req_ms * np.asarray(self.deadline_mults, np.float64)[
+            rng.integers(0, len(self.deadline_mults), n)
+        ]
+        return a, c

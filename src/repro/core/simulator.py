@@ -89,6 +89,12 @@ from .impairments import (
     predicted_inflation,
 )
 from .instance import FlatInstance, pad_instance, stack_instances
+from .options import (
+    _UNSET,
+    EngineOptions,
+    fold_deprecated_kwargs,
+    resolve_options,
+)
 from .policies import Policy, get_policy
 from .queueing import (
     CongestionConfig,
@@ -103,7 +109,7 @@ from .queueing import (
     init_policy_carry,
     step_backlog,
 )
-from .satisfaction import mean_us, satisfied_mask
+from .satisfaction import hard_feasible, mean_us, satisfied_mask, us_tensor
 from .scenarios import (
     Request,
     RequestColumns,
@@ -125,6 +131,7 @@ __all__ = [
     "SimConfig",
     "SimResult",
     "FleetResult",
+    "EngineOptions",
     "simulate",
     "simulate_fleet",
     "demo_cluster_spec",
@@ -536,6 +543,37 @@ def _frame_budgets(
     return g.copy(), e.copy()
 
 
+def _frame_budgets_batch(
+    spec: ClusterSpec, cfg: SimConfig, scn: Scenario,
+    frame_starts_ms: np.ndarray,
+    engine: Optional[ResilienceEngine] = None,
+):
+    """Vectorized :func:`_frame_budgets` over a window of frame starts.
+
+    One ``capacity_scale_batch`` call replaces F scalar hook calls — the
+    host cost that dominated ``gen_s`` at mega-city frame counts.  Returns
+    ``(F, M)`` gamma and eta arrays, bit-identical to per-frame
+    :func:`_frame_budgets` calls: the batch hook fills unscaled frames with
+    exact ``1.0`` (the f64 multiplicative identity) and the same f64
+    multiply order is used either way.
+    """
+    t = np.asarray(frame_starts_ms, np.float64)
+    F = t.size
+    g = np.repeat(spec.gamma_frame.astype(np.float64)[None, :], F, axis=0)
+    e = np.repeat(spec.eta_frame.astype(np.float64)[None, :], F, axis=0)
+    scale = scn.capacity_scale_batch(t, cfg, spec.n_edge, spec.n_servers)
+    if scale is not None:
+        g = g * scale
+        e = e * scale
+    if engine is not None:
+        for i in range(F):
+            up = engine.capacity_scale(int(round(t[i] / cfg.frame_ms)))
+            if up is not None:
+                g[i] = g[i] * up
+                e[i] = e[i] * up
+    return g, e
+
+
 def _resolve_policy(
     scheduler, policy
 ) -> Optional[Policy]:
@@ -576,6 +614,31 @@ def _apply_backend(pol, scheduler, backend):
     if pol is None and scheduler is not None:
         raise ValueError("pass either scheduler= or backend=, not both")
     return None, gus_backend_fn(backend)
+
+
+def _fold_hier_scheduler(pol, scheduler, opts):
+    """Fold ``EngineOptions(scheduler="hierarchical")`` into the (pol,
+    scheduler) pair: the hierarchical layout *is* the ``gus-hier`` policy,
+    so it composes only with the default scheduler / ``"gus"`` /
+    ``"gus-hier"`` — any other policy, a raw callable, or an explicit
+    ``backend=`` (which picks a *dense* GUS implementation) is an error,
+    not a silent override."""
+    if pol is None and scheduler is not None:
+        raise ValueError(
+            "EngineOptions(scheduler='hierarchical') does not compose with "
+            "a raw scheduler callable; drop one of the two"
+        )
+    if opts.backend is not None:
+        raise ValueError(
+            f"backend={opts.backend!r} selects a dense GUS implementation; "
+            "it does not compose with EngineOptions(scheduler='hierarchical')"
+        )
+    if pol is not None and pol.name not in ("gus", "gus-hier"):
+        raise ValueError(
+            "EngineOptions(scheduler='hierarchical') maps to the 'gus-hier' "
+            f"policy; it does not compose with policy {pol.name!r}"
+        )
+    return get_policy("gus-hier"), None
 
 
 class _ArrivalSource:
@@ -635,12 +698,28 @@ def simulate(
     scenario: Union[str, Scenario] = "paper-default",
     seed: int = 0,
     n_requests: Optional[int] = None,
-    streaming: Optional[bool] = None,
-    rng_mode: Optional[str] = None,
-    backend: Optional[str] = None,
-    metrics: bool = False,
+    options: Optional[EngineOptions] = None,
+    streaming=_UNSET,
+    rng_mode=_UNSET,
+    backend=_UNSET,
+    metrics=_UNSET,
 ) -> SimResult:
     """Run the virtual testbed.
+
+    ``options`` is the consolidated engine configuration
+    (:class:`~repro.core.options.EngineOptions`); the per-call keywords
+    below (``streaming`` / ``rng_mode`` / ``backend`` / ``metrics``) are
+    *deprecated aliases* that build the same object — they emit a
+    :class:`DeprecationWarning` and raise when combined with an explicit
+    ``options=``.  Fleet-only fields (``window`` / ``prefetch`` /
+    ``devices`` / ``rep_group``) are ignored here, so one options value can
+    drive both entry points.  Unset fields resolve along **explicit > env
+    var > scenario default** (:func:`~repro.core.options.resolve_options`).
+
+    ``EngineOptions(scheduler="hierarchical")`` swaps the dense per-request
+    grid for the class-aggregate path (:mod:`repro.core.aggregation`) — it
+    maps to the ``"gus-hier"`` policy and composes with the default
+    scheduler / ``policy="gus"`` / ``policy="gus-hier"`` only.
 
     ``metrics=True`` additionally records one
     :class:`~repro.obs.metrics.MetricsFrame` per scheduling decision
@@ -699,8 +778,19 @@ def simulate(
     If ``n_requests`` is given, the arrival process stops after that many
     submissions (the paper's x-axis in Fig. 1(e)-(h) is total #requests).
     """
+    opts = fold_deprecated_kwargs(
+        options,
+        dict(streaming=streaming, rng_mode=rng_mode, backend=backend,
+             metrics=metrics),
+        caller="simulate",
+    )
+    scn = get_scenario(scenario)
+    opts = resolve_options(opts, scenario=scn)
+    metrics = bool(opts.metrics)
     pol = _resolve_policy(scheduler, policy)
-    pol, scheduler = _apply_backend(pol, scheduler, backend)
+    if opts.scheduler == "hierarchical":
+        pol, scheduler = _fold_hier_scheduler(pol, scheduler, opts)
+    pol, scheduler = _apply_backend(pol, scheduler, opts.backend)
     pad = True
     stateful = False
     needs_key = False
@@ -711,7 +801,6 @@ def simulate(
         needs_key = pol.needs_key and not pol.stateful
     elif scheduler is None:
         scheduler = gus_schedule
-    scn = get_scenario(scenario)
     ccfg = cfg.congestion
     acfg = cfg.admission
     rng = np.random.default_rng(seed)
@@ -726,8 +815,8 @@ def simulate(
     t_run0 = time.perf_counter()
 
     # --- arrivals (materialized trace, or bounded-memory stream) -------------
-    use_stream = scn.streaming if streaming is None else streaming
-    mode = _resolve_rng_mode(scn.rng_mode if rng_mode is None else rng_mode)
+    use_stream = opts.streaming
+    mode = opts.rng_mode
     if use_stream:
         source = _ArrivalSource(
             stream=ArrivalStream(scn, seed, spec.n_edge, K, cfg, rng_mode=mode),
@@ -1437,16 +1526,39 @@ def simulate_fleet(
     scenario: Union[str, Scenario] = "paper-default",
     n_rep: int = 16,
     seed: int = 0,
-    streaming: Optional[bool] = None,
-    devices: Optional[int] = None,
-    window: Optional[int] = None,
-    rep_group: Optional[int] = None,
-    rng_mode: Optional[str] = None,
-    prefetch: int = 1,
-    backend: Optional[str] = None,
-    metrics: bool = False,
+    options: Optional[EngineOptions] = None,
+    streaming=_UNSET,
+    devices=_UNSET,
+    window=_UNSET,
+    rep_group=_UNSET,
+    rng_mode=_UNSET,
+    prefetch=_UNSET,
+    backend=_UNSET,
+    metrics=_UNSET,
 ) -> FleetResult:
     """Monte-Carlo fleet: R independent replications, one device program.
+
+    ``options`` is the consolidated engine configuration
+    (:class:`~repro.core.options.EngineOptions`); the per-call engine
+    keywords below are *deprecated aliases* that build the same object —
+    they emit a :class:`DeprecationWarning` and raise when combined with an
+    explicit ``options=``.  The two call styles resolve to the same
+    :class:`EngineOptions` and return bit-identical ``FleetResult``s
+    (pinned in ``tests/test_options.py``).  Unset fields resolve along
+    **explicit > env var > scenario default**
+    (:func:`~repro.core.options.resolve_options`).
+
+    ``EngineOptions(scheduler="hierarchical")`` routes the fleet to the
+    class-aggregate path (:mod:`repro.core.aggregation`): every frame's
+    requests are bucketed into QoS classes, the merged per-edge class
+    tables are scheduled as aggregates by a global chunked GUS pass, and
+    satisfaction is accounted class-level with per-class counts — memory
+    and schedule time scale with the number of *classes*, not requests,
+    which is what sustains 10^5+ users per frame (``mega-city``).  The
+    path runs host-side on one device (``devices`` other than ``None``/1
+    raises), composes with congestion, impairments, streaming, windowed
+    arrivals, and metrics, and does not support admission control
+    (``cfg.admission.enabled`` raises).
 
     ``metrics=True`` adds a per-frame :class:`~repro.obs.metrics.MetricsFrame`
     output to the scan — stacked on device across each window, drained with
@@ -1486,7 +1598,10 @@ def simulate_fleet(
     path; asking for more than ``jax.local_device_count()`` raises.
     ``rep_group`` must be held fixed when comparing runs across device
     counts; fleets with ``n_rep <= rep_group`` run as one group (the
-    legacy single-program layout).
+    legacy single-program layout).  ``rep_group > n_rep`` clamps to
+    ``n_rep`` — the group width can never exceed the replication count, and
+    the clamped run is bit-identical to ``rep_group=n_rep`` (pinned in
+    ``tests/test_options.py``); ``rep_group < 1`` raises.
 
     ``window`` bounds memory on long horizons: the (R, T) grid is built and
     scanned ``window`` frames at a time, threading the carry between
@@ -1542,32 +1657,55 @@ def simulate_fleet(
     inside the same vmapped scan); it composes only with the default
     scheduler / the ``"gus"`` policy.
     """
-    pol = _resolve_policy(scheduler, policy)
-    pol, scheduler = _apply_backend(pol, scheduler, backend)
+    opts = fold_deprecated_kwargs(
+        options,
+        dict(streaming=streaming, devices=devices, window=window,
+             rep_group=rep_group, rng_mode=rng_mode, prefetch=prefetch,
+             backend=backend, metrics=metrics),
+        caller="simulate_fleet",
+    )
     scn = get_scenario(scenario)
+    opts = resolve_options(opts, scenario=scn)
+    metrics = bool(opts.metrics)
+    devices = opts.devices
+    hier = opts.scheduler == "hierarchical"
+    pol = _resolve_policy(scheduler, policy)
+    if hier:
+        pol, scheduler = _fold_hier_scheduler(pol, scheduler, opts)
+        if cfg.admission.enabled:
+            raise ValueError(
+                "admission control evaluates per-request keep decisions on "
+                "the dense grid; it does not compose with "
+                "EngineOptions(scheduler='hierarchical')"
+            )
+    pol, scheduler = _apply_backend(pol, scheduler, opts.backend)
     ccfg = cfg.congestion
     acfg = cfg.admission
     T = max(1, int(np.ceil(cfg.horizon_ms / cfg.frame_ms)))
     K = spec.proc_ms.shape[1]
     M = spec.n_servers
-    use_stream = scn.streaming if streaming is None else streaming
+    use_stream = opts.streaming
     host_side = pol is not None and (not pol.vmappable or not pol.pad)
     if host_side:
         if devices is not None and devices != 1:
             _resolve_fleet_devices(devices, n_rep)  # impossible counts error first
             raise ValueError(
                 f"policy {pol.name!r} schedules host-side; devices={devices} "
-                "does not apply (use devices=None or 1)"
+                f"of {jax.local_device_count()} visible device(s) does not "
+                "apply — the host-side loop drives exactly one device (use "
+                "devices=None or 1)"
             )
         n_dev = 1
     else:
         n_dev = _resolve_fleet_devices(devices, n_rep)
-    W = T if window is None else max(1, min(int(window), T))
+    W = T if opts.window is None else max(1, min(int(opts.window), T))
     # lazy per-window arrival generation needs the stream's chunking
-    # invariance; a materialized trace is bucketed up front either way
-    lazy = use_stream and W < T and not host_side
-    mode = _resolve_rng_mode(scn.rng_mode if rng_mode is None else rng_mode)
-    prefetch = max(0, int(prefetch))
+    # invariance; a materialized trace is bucketed up front either way.
+    # The hierarchical path is host-side but windowed by construction, so
+    # it keeps the stream lazy.
+    lazy = use_stream and W < T and (hier or not host_side)
+    mode = opts.rng_mode
+    prefetch = opts.prefetch
 
     sw = Stopwatch()
     t_run0 = time.perf_counter()
@@ -1579,7 +1717,9 @@ def simulate_fleet(
             )
             for rep in range(n_rep)
         ]
-        if lazy:
+        if hier:
+            n_pad = 0  # the aggregated path never pads a request grid
+        elif lazy:
             # count-only pre-pass: the global max bucket, in bounded memory —
             # one padding bucket for every window, identical to materialized
             n_max = max(
@@ -1588,9 +1728,10 @@ def simulate_fleet(
                 )
                 for rep in range(n_rep)
             )
+            n_pad = _pad_bucket(n_max)
         else:
             n_max = max(src.max_bucket for src in sources)
-        n_pad = _pad_bucket(n_max)
+            n_pad = _pad_bucket(n_max)
     # trace generation + padding pre-pass; per-window blocking adds to this
     gen_s = sw.total("fleet/generate_traces")
     # the resilience engine is replication-independent (same network
@@ -1601,6 +1742,12 @@ def simulate_fleet(
         ResilienceEngine(cfg.impairments, spec.n_edge, M)
         if cfg.impairments.enabled else None
     )
+
+    if hier:
+        return _simulate_fleet_hier(
+            spec, cfg, scn, sources, n_rep=n_rep, T=T, W=W, gen_s=gen_s,
+            engine=engine, metrics=metrics, sw=sw, t_run0=t_run0,
+        )
 
     if host_side:
         return _simulate_fleet_host(
@@ -1638,7 +1785,9 @@ def simulate_fleet(
     # scheduler with different fusion, and greedy argmax/argsort decisions
     # amplify 1-ulp differences into different assignments.  jax dispatch
     # is async, so the per-group calls overlap across devices.
-    G = min(FLEET_REP_GROUP if rep_group is None else max(1, int(rep_group)), n_rep)
+    # rep_group < 1 was rejected by resolve_options; > n_rep clamps (a group
+    # can never be wider than the replication axis), documented above
+    G = min(FLEET_REP_GROUP if opts.rep_group is None else int(opts.rep_group), n_rep)
     pad_r = (-n_rep) % G
     n_groups = (n_rep + pad_r) // G
     if n_dev > 1:
@@ -1711,12 +1860,12 @@ def simulate_fleet(
                             ]
                     i += 1
         with sw.span("fleet/grid_build", CAT_BUILD, t0=t0):
-            # per-frame budgets are replication-independent: one
-            # _frame_budgets call per frame index, reused across the R reps
-            budgets_by_k = [
-                _frame_budgets(spec, cfg, scn, (t0 + k) * cfg.frame_ms, engine=engine)
-                for k in range(Tc)
-            ]
+            # per-frame budgets are replication-independent: one *batched*
+            # capacity-stream call per window, reused across the R reps
+            gb, eb = _frame_budgets_batch(
+                spec, cfg, scn, (t0 + np.arange(Tc)) * cfg.frame_ms, engine=engine,
+            )
+            budgets_by_k = [(gb[k], eb[k]) for k in range(Tc)]
             R_pad = n_rep + pad_r
             if engine is not None:
                 links_by_k = [engine.link_frame(t0 + k) for k in range(Tc)]
@@ -2176,6 +2325,263 @@ def _simulate_fleet_host(
         mean_compute_inflation=float(np.mean(phi_c)) if ccfg.enabled else 1.0,
         n_devices=1,
         window=T,
+        gen_s=gen_s,
+        timings=timings,
+        metrics=mres,
+    )
+
+
+def _simulate_fleet_hier(
+    spec: ClusterSpec,
+    cfg: SimConfig,
+    scn: Scenario,
+    sources: List[_RepFrameSource],
+    *,
+    n_rep: int,
+    T: int,
+    W: int,
+    gen_s: float = 0.0,
+    engine: Optional[ResilienceEngine] = None,
+    metrics: bool = False,
+    sw: Optional[Stopwatch] = None,
+    t_run0: Optional[float] = None,
+) -> FleetResult:
+    """Class-aggregate fleet path for ``EngineOptions(scheduler="hierarchical")``.
+
+    Never materializes a dense ``N x M x L`` request grid: each frame's
+    arrivals are bucketed into QoS classes
+    (:func:`repro.core.aggregation.aggregate_requests`), one
+    ``n_classes x M x L`` candidate grid is built from count-weighted class
+    representatives, the global chunked greedy
+    (:func:`repro.core.aggregation.hier_assign`) allocates against the
+    shared per-frame budgets, and satisfaction / US / metrics are accounted
+    *class-level*, weighted by member counts.  Memory and schedule time
+    scale with the class count (bounded by the QoS tier space), not the
+    request count — the 10^5-users-per-frame path.
+
+    Congestion mirrors the scan step in the same order: the scheduler sees
+    the backlog-reduced budgets, inflation factors come from committed +
+    carried load against the *full* budgets, realized completion times are
+    inflated per :func:`repro.core.queueing.congested_ctime`'s formula at
+    the chosen cells, and the backlog drains every frame.  Arrivals stream
+    window by window (``W`` frames at a time), so long horizons stay
+    bounded-memory end to end.
+    """
+    from .aggregation import AggregateClasses, QuantizationConfig, aggregate_requests, hier_assign
+
+    ccfg = cfg.congestion
+    M = spec.n_servers
+    n_edge = spec.n_edge
+    if sw is None:
+        sw = Stopwatch()
+    if t_run0 is None:
+        t_run0 = time.perf_counter()
+    quant = QuantizationConfig()
+    edges_q = np.asarray(QOS_ACC_EDGES, np.float64)
+    nq = len(QOS_ACC_EDGES) + 1
+
+    reqs_per_rep = np.zeros(n_rep, np.int64)
+    served_per_rep = np.zeros(n_rep, np.int64)
+    sat_per_rep = np.zeros(n_rep, np.int64)
+    us_sum_per_rep = np.zeros(n_rep, np.float64)
+    bg = np.zeros((n_rep, M))  # carried compute backlog, f64 like the budgets
+    be = np.zeros((n_rep, M))
+    phi_sum = 0.0
+    phi_cnt = 0
+    m_acc: Optional[Dict[str, np.ndarray]] = None
+    if metrics:
+        m_acc = {
+            "n_arrivals": np.zeros((n_rep, T), np.int32),
+            "n_served": np.zeros((n_rep, T), np.int32),
+            "n_satisfied": np.zeros((n_rep, T), np.int32),
+            "n_shed": np.zeros((n_rep, T), np.int32),
+            "n_refused": np.zeros((n_rep, T), np.int32),
+            "tier_hist": np.zeros((n_rep, T, 3), np.int32),
+            "qos_sat": np.zeros((n_rep, T, nq), np.int32),
+            "qos_count": np.zeros((n_rep, T, nq), np.int32),
+            "util_gamma": np.zeros((n_rep, T, M), np.float32),
+            "util_eta": np.zeros((n_rep, T, M), np.float32),
+            "backlog_gamma": np.zeros((n_rep, T, M), np.float32),
+            "backlog_eta": np.zeros((n_rep, T, M), np.float32),
+            "us_sum": np.zeros((n_rep, T), np.float32),
+        }
+
+    for t0 in range(0, T, W):
+        t1 = min(t0 + W, T)
+        Tc = t1 - t0
+        with sw.span("fleet/hier_build", CAT_BUILD, t0=t0):
+            gb, eb = _frame_budgets_batch(
+                spec, cfg, scn, (t0 + np.arange(Tc)) * cfg.frame_ms, engine=engine,
+            )
+            links = (
+                [engine.link_frame(t0 + k) for k in range(Tc)]
+                if engine is not None else None
+            )
+        for rep, src in enumerate(sources):
+            with sw.span("fleet/arrivals", CAT_GEN, t0=t0, rep=rep):
+                buckets = src.take(t1)
+            for k, bucket in enumerate(buckets):
+                tf = t0 + k
+                n = len(bucket)
+                reqs_per_rep[rep] += n
+                frame_end = (tf + 1) * cfg.frame_ms
+                g_full, e_full = gb[k], eb[k]
+                w_load = np.zeros(M)
+                c_load = np.zeros(M)
+                chunks = np.zeros((0, 4), np.int64)
+                if n:
+                    if isinstance(bucket, RequestColumns):
+                        cov, svc = bucket.cover, bucket.service
+                        A_r, C_r = bucket.A, bucket.C
+                        size = bucket.size_bytes
+                        arr_ms = bucket.arrival_ms
+                    else:
+                        cov = np.array([r.cover for r in bucket], np.int64)
+                        svc = np.array([r.service for r in bucket], np.int64)
+                        A_r = np.array([r.A for r in bucket], np.float64)
+                        C_r = np.array([r.C for r in bucket], np.float64)
+                        size = np.array([r.size_bytes for r in bucket], np.float64)
+                        arr_ms = np.array([r.arrival_ms for r in bucket], np.float64)
+                    with sw.span("fleet/hier_aggregate", CAT_BUILD, frame=tf):
+                        tq = frame_end - np.asarray(arr_ms, np.float64)
+                        count, first_idx, members, offsets, repc = (
+                            aggregate_requests(cov, svc, A_r, C_r, size, tq, quant)
+                        )
+                        rc = RequestColumns(
+                            arrival_ms=frame_end - repc["tq"],
+                            cover=repc["cover"],
+                            service=repc["service"],
+                            A=repc["A"],
+                            C=repc["C"],
+                            size_bytes=repc["size"],
+                        )
+                        link = None
+                        if links is not None:
+                            sc, la = links[k]
+                            link = (sc[repc["cover"]], la[repc["cover"]])
+                        if ccfg.enabled:  # scheduler sees effective capacity
+                            g_sched = np.maximum(g_full - bg[rep], 0.0)
+                            e_sched = np.maximum(e_full - be[rep], 0.0)
+                        else:
+                            g_sched, e_sched = g_full, e_full
+                        cls_inst = _build_frame_instance(
+                            rc, spec, cfg, frame_end, spec.bandwidth_true,
+                            cfg.max_cs, gamma=g_sched, eta=e_sched, link=link,
+                        )
+                        agg = AggregateClasses(
+                            count=count, first_idx=first_idx, members=members,
+                            offsets=offsets, cover=repc["cover"],
+                            us=np.asarray(us_tensor(cls_inst)),
+                            feas=np.asarray(hard_feasible(cls_inst)),
+                            v=np.asarray(cls_inst.v),
+                            u=np.asarray(cls_inst.u),
+                        )
+                    with sw.span("fleet/schedule_hier", CAT_SCHED, frame=tf):
+                        chunks = hier_assign(agg, g_sched, e_sched, exact=False)
+                    if len(chunks):
+                        cc, jj, ll, take = (chunks[:, i] for i in range(4))
+                        vv = agg.v[cc, jj, ll].astype(np.float64)
+                        uu = agg.u[cc, jj, ll].astype(np.float64)
+                        np.add.at(w_load, jj, take * vv)
+                        off_m = jj != agg.cover[cc]
+                        if off_m.any():
+                            np.add.at(
+                                c_load, agg.cover[cc][off_m], (take * uu)[off_m]
+                            )
+                # inflation from committed + carried load vs the FULL budgets
+                # (the scan's order: schedule, commit, inflate, drain)
+                if ccfg.enabled:
+                    phi_c = np.asarray(
+                        compute_inflation(bg[rep] + w_load, g_full, ccfg), np.float64
+                    )
+                    phi_e = np.asarray(
+                        comm_inflation(be[rep] + c_load, e_full, ccfg), np.float64
+                    )
+                    phi_sum += float(phi_c.sum())
+                    phi_cnt += M
+                if len(chunks):
+                    ct = np.asarray(cls_inst.ctime, np.float64)[cc, jj, ll]
+                    acc_c = np.asarray(cls_inst.acc, np.float64)[cc, jj, ll]
+                    if ccfg.enabled:  # congested_ctime's formula, class-level
+                        comm = ct - vv - repc["tq"][cc]
+                        ct = (
+                            ct
+                            + vv * (phi_c[jj] - 1.0)
+                            + comm * (phi_e[agg.cover[cc]] - 1.0)
+                        )
+                    A_c = repc["A"][cc]
+                    C_c = repc["C"][cc]
+                    sat_c = (acc_c >= A_c) & (ct <= C_c)
+                    us_c = (
+                        cfg.w_a * (acc_c - A_c) / cfg.max_as
+                        + cfg.w_c * (C_c - ct) / cfg.max_cs
+                    )
+                    served_per_rep[rep] += int(take.sum())
+                    sat_per_rep[rep] += int((take * sat_c).sum())
+                    us_sum_per_rep[rep] += float((take * us_c).sum())
+                if ccfg.enabled:  # backlog conservation: see step_backlog
+                    bg[rep] = np.maximum(
+                        bg[rep] + w_load - g_full * ccfg.drain, 0.0
+                    )
+                    be[rep] = np.maximum(
+                        be[rep] + c_load - e_full * ccfg.drain, 0.0
+                    )
+                if metrics:
+                    m_acc["n_arrivals"][rep, tf] = n
+                    if n:
+                        cls_q = (repc["A"][:, None] >= edges_q).sum(-1)
+                        np.add.at(m_acc["qos_count"][rep, tf], cls_q, count)
+                    if len(chunks):
+                        m_acc["n_served"][rep, tf] = int(take.sum())
+                        m_acc["n_satisfied"][rep, tf] = int((take * sat_c).sum())
+                        local_m = jj == agg.cover[cc]
+                        cloud_m = (jj >= n_edge) & ~local_m
+                        eo_m = ~local_m & ~cloud_m
+                        m_acc["tier_hist"][rep, tf] = (
+                            int(take[local_m].sum()),
+                            int(take[eo_m].sum()),
+                            int(take[cloud_m].sum()),
+                        )
+                        np.add.at(
+                            m_acc["qos_sat"][rep, tf], cls_q[cc],
+                            (take * sat_c).astype(np.int64),
+                        )
+                        m_acc["us_sum"][rep, tf] = float((take * us_c).sum())
+                    with np.errstate(invalid="ignore"):
+                        m_acc["util_gamma"][rep, tf] = np.where(
+                            g_full > 0.0, w_load / np.maximum(g_full, 1e-9), 0.0
+                        )
+                        m_acc["util_eta"][rep, tf] = np.where(
+                            e_full > 0.0, c_load / np.maximum(e_full, 1e-9), 0.0
+                        )
+                    m_acc["backlog_gamma"][rep, tf] = bg[rep]
+                    m_acc["backlog_eta"][rep, tf] = be[rep]
+
+    gen_s += sw.total("fleet/arrivals")
+    timings = sw.as_dict()
+    timings["total_s"] = time.perf_counter() - t_run0
+    mres = None
+    if metrics:
+        mres = MetricsResult.from_stacked(
+            MetricsFrame(**m_acc),
+            t_ms=(np.arange(T) + 1.0) * cfg.frame_ms,
+            n_edge=spec.n_edge,
+            frame_ms=cfg.frame_ms,
+        )
+    return FleetResult(
+        n_rep=n_rep,
+        n_frames=T,
+        n_requests=int(reqs_per_rep.sum()),
+        n_served=int(served_per_rep.sum()),
+        satisfied_per_rep=100.0 * sat_per_rep / np.maximum(reqs_per_rep, 1),
+        mean_us_per_rep=us_sum_per_rep / np.maximum(reqs_per_rep, 1),
+        final_backlog_per_rep=bg.astype(np.float32) if ccfg.enabled else None,
+        mean_compute_inflation=(
+            phi_sum / phi_cnt if ccfg.enabled and phi_cnt else 1.0
+        ),
+        n_devices=1,
+        window=W,
+        dispatch_s=sw.total("fleet/schedule_hier"),
         gen_s=gen_s,
         timings=timings,
         metrics=mres,

@@ -1,0 +1,267 @@
+"""Hierarchical class-aggregate scheduling (``repro.core.aggregation``).
+
+The contract under test (see ``docs/architecture.md`` section 11):
+
+* ``aggregate_instance`` partitions a frame's requests into QoS classes:
+  counts sum to N, ``members`` is a permutation grouped by class and
+  ascending within each class, and each representative is the class's
+  lowest-index member;
+* ``gus-hier`` (exact mode) is **bit-identical** to dense GUS whenever
+  classes are lossless — every singleton-class frame (the paper generator:
+  continuous QoS draws) and frames with index-contiguous duplicate blocks;
+* de-aggregation is deterministic: chunks consume members in ascending
+  request index, never over-allocate a class, and replaying the same
+  chunks reproduces the same per-request assignment;
+* the fleet path (``EngineOptions(scheduler="hierarchical")``) stays
+  within the 2% satisfaction band of the dense fleet on paper-scale
+  scenarios, congestion on and off;
+* composition errors are loud: hierarchical + non-GUS policy, + raw
+  callable, + ``backend=``, + admission control all raise;
+* the ``mega-city`` scenario delivers 10^5+ users per frame to the
+  hierarchical fleet within bounded memory and all-finite statistics
+  (reduced-scale fast, full scale marked slow).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core import (  # noqa: E402
+    CongestionConfig,
+    EngineOptions,
+    SimConfig,
+    aggregate_instance,
+    aggregate_requests,
+    demo_cluster_spec,
+    generate_instance,
+    get_scenario,
+    gus_schedule_np,
+    hier_assign,
+    hier_schedule_np,
+    deaggregate,
+    simulate,
+    simulate_fleet,
+)
+from repro.core.impairments import AdmissionConfig  # noqa: E402
+from repro.core.instance import FlatInstance, GeneratorConfig  # noqa: E402
+
+SPEC = demo_cluster_spec()
+
+SMALL = GeneratorConfig(n_requests=24, n_edge=4, n_cloud=1, n_services=6,
+                        n_variants=4)
+
+
+def fleet_cfg(congestion: bool = False, **kw) -> SimConfig:
+    base = dict(
+        horizon_ms=12_000.0,
+        arrival_rate_per_s=4.0,
+        delay_req_ms=6000.0,
+        acc_req_mean=50.0,
+        acc_req_std=10.0,
+        congestion=CongestionConfig(enabled=congestion),
+    )
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def tile_instance(inst: FlatInstance, k: int) -> FlatInstance:
+    """Repeat every request row ``k`` times (duplicates index-contiguous)."""
+    rep = lambda x: np.repeat(np.asarray(x), k, axis=0)  # noqa: E731
+    return dataclasses.replace(
+        inst,
+        cover=rep(inst.cover), A=rep(inst.A), C=rep(inst.C),
+        w_a=rep(inst.w_a), w_c=rep(inst.w_c),
+        acc=rep(inst.acc), ctime=rep(inst.ctime), v=rep(inst.v),
+        u=rep(inst.u), avail=rep(inst.avail),
+    )
+
+
+# ---------------------------------------------------------------------------
+# aggregation invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+def test_aggregate_instance_partitions(seed):
+    inst = generate_instance(seed, SMALL, as_numpy=True)
+    agg = aggregate_instance(inst)
+    n = np.asarray(inst.A).shape[0]
+    assert int(agg.count.sum()) == n
+    assert sorted(agg.members.tolist()) == list(range(n))
+    for c in range(agg.n_classes):
+        mem = agg.members[agg.offsets[c]:agg.offsets[c + 1]]
+        assert mem.shape[0] == agg.count[c]
+        assert np.all(np.diff(mem) > 0)  # ascending within the class
+        assert agg.first_idx[c] == mem[0]
+        assert agg.cover[c] == np.asarray(inst.cover)[mem[0]]
+
+
+def test_duplicates_collapse_into_one_class():
+    inst = tile_instance(generate_instance(0, SMALL, as_numpy=True), 5)
+    agg = aggregate_instance(inst)
+    assert agg.n_classes == SMALL.n_requests
+    assert np.all(agg.count == 5)
+
+
+# ---------------------------------------------------------------------------
+# exact-mode parity with dense GUS
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(6))
+def test_singleton_classes_match_dense_gus(seed):
+    inst = generate_instance(seed)  # continuous QoS draws: all singletons
+    dense = gus_schedule_np(inst)
+    hier = hier_schedule_np(inst)
+    np.testing.assert_array_equal(np.asarray(dense.j), np.asarray(hier.j))
+    np.testing.assert_array_equal(np.asarray(dense.l), np.asarray(hier.l))
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("k", [2, 7])
+def test_contiguous_duplicate_classes_match_dense_gus(seed, k):
+    inst = tile_instance(generate_instance(seed, SMALL, as_numpy=True), k)
+    dense = gus_schedule_np(inst)
+    hier = hier_schedule_np(inst)
+    np.testing.assert_array_equal(np.asarray(dense.j), np.asarray(hier.j))
+    np.testing.assert_array_equal(np.asarray(dense.l), np.asarray(hier.l))
+
+
+def test_deaggregate_is_deterministic_and_bounded():
+    inst = tile_instance(generate_instance(1, SMALL, as_numpy=True), 4)
+    agg = aggregate_instance(inst)
+    chunks = hier_assign(
+        agg, np.asarray(inst.gamma), np.asarray(inst.eta), exact=True
+    )
+    taken = np.zeros(agg.n_classes, np.int64)
+    for c, _, _, take in chunks:
+        taken[c] += take
+    assert np.all(taken <= agg.count)  # never over-allocates a class
+    n = np.asarray(inst.A).shape[0]
+    j1, l1 = deaggregate(agg, chunks, n)
+    j2, l2 = deaggregate(agg, chunks, n)
+    np.testing.assert_array_equal(j1, j2)
+    np.testing.assert_array_equal(l1, l2)
+    # allocated members are exactly the first `take` (lowest-index) members
+    for c, j, l, take in chunks:
+        mem = agg.members[agg.offsets[c]:agg.offsets[c] + take]
+        assert np.all(j1[mem] == j) and np.all(l1[mem] == l)
+
+
+def test_aggregate_requests_groups_discrete_tiers():
+    n = 300
+    rng = np.random.default_rng(0)
+    cover = rng.integers(0, 4, n)
+    service = rng.integers(0, 3, n)
+    A = np.choose(rng.integers(0, 2, n), [45.0, 65.0])
+    C = np.full(n, 6000.0)
+    size = np.full(n, 512.0)
+    tq = np.zeros(n)
+    count, first_idx, members, offsets, rep = aggregate_requests(
+        cover, service, A, C, size, tq
+    )
+    assert int(count.sum()) == n
+    assert count.shape[0] <= 4 * 3 * 2  # bounded by the tier product
+    np.testing.assert_array_equal(rep["cover"], cover[first_idx])
+    np.testing.assert_array_equal(rep["service"], service[first_idx])
+    for v in rep.values():
+        assert np.isfinite(np.asarray(v, dtype=np.float64)).all()
+
+
+# ---------------------------------------------------------------------------
+# engine composition: gus-hier policy and the scheduler switch
+# ---------------------------------------------------------------------------
+
+def test_simulate_hier_matches_dense_gus_bitwise():
+    cfg = fleet_cfg()
+    dense = simulate(SPEC, cfg, policy="gus", seed=0)
+    hier = simulate(SPEC, cfg, policy="gus-hier", seed=0)
+    assert dense.as_dict() == hier.as_dict()
+    via_opts = simulate(
+        SPEC, cfg, policy="gus", seed=0,
+        options=EngineOptions(scheduler="hierarchical"),
+    )
+    assert dense.as_dict() == via_opts.as_dict()
+
+
+@pytest.mark.parametrize("congestion", [False, True], ids=["plain", "congestion"])
+def test_fleet_hier_within_two_percent_of_dense(congestion):
+    cfg = fleet_cfg(congestion)
+    dense = simulate_fleet(SPEC, cfg, policy="gus", n_rep=3, seed=0)
+    hier = simulate_fleet(
+        SPEC, cfg, policy="gus", n_rep=3, seed=0,
+        options=EngineOptions(scheduler="hierarchical", window=2),
+    )
+    assert hier.n_requests == dense.n_requests
+    gap = np.abs(
+        np.asarray(hier.satisfied_per_rep) - np.asarray(dense.satisfied_per_rep)
+    )
+    assert gap.max() <= 2.0, f"per-rep satisfaction gap {gap} exceeds 2%"
+
+
+def test_fleet_hier_metrics_stream_is_finite():
+    cfg = fleet_cfg(congestion=True)
+    fr = simulate_fleet(
+        SPEC, cfg, policy="gus", n_rep=2, seed=0,
+        options=EngineOptions(scheduler="hierarchical", metrics=True),
+    )
+    assert fr.metrics is not None
+    agg = fr.metrics.aggregate()
+    assert agg  # non-empty aggregate
+    for k, v in agg.items():
+        assert np.isfinite(np.asarray(v, dtype=np.float64)).all(), k
+
+
+def test_hier_scheduler_composition_errors():
+    cfg = fleet_cfg()
+    hier = EngineOptions(scheduler="hierarchical")
+    with pytest.raises(ValueError, match="does not compose"):
+        simulate(SPEC, cfg, policy="random", seed=0, options=hier)
+    with pytest.raises(ValueError, match="callable"):
+        simulate(SPEC, cfg, gus_schedule_np, seed=0, options=hier)
+    with pytest.raises(ValueError, match="backend"):
+        simulate(
+            SPEC, cfg, policy="gus", seed=0,
+            options=EngineOptions(scheduler="hierarchical", backend="pallas"),
+        )
+    with pytest.raises(ValueError, match="admission"):
+        simulate_fleet(
+            SPEC, fleet_cfg(admission=AdmissionConfig(enabled=True)),
+            policy="gus", n_rep=2, seed=0, options=hier,
+        )
+
+
+# ---------------------------------------------------------------------------
+# mega-city: the 10^5-users-per-frame workload
+# ---------------------------------------------------------------------------
+
+def _mega_city_run(rate_per_edge_per_s: float, n_edge: int):
+    spec = demo_cluster_spec(n_edge=n_edge, n_cloud=1, n_services=5,
+                             n_variants=10)
+    cfg = SimConfig(horizon_ms=9_000.0)
+    scn = dataclasses.replace(
+        get_scenario("mega-city"), rate_per_edge_per_s=rate_per_edge_per_s
+    )
+    return simulate_fleet(
+        spec, cfg, policy="gus", scenario=scn, n_rep=1, seed=0,
+        options=EngineOptions(scheduler="hierarchical", window=1),
+    )
+
+
+def test_mega_city_smoke_reduced_scale():
+    fr = _mega_city_run(rate_per_edge_per_s=60.0, n_edge=6)
+    assert fr.n_requests > 0
+    assert np.isfinite(np.asarray(fr.satisfied_per_rep)).all()
+    assert np.isfinite(np.asarray(fr.mean_us_per_rep)).all()
+    assert fr.window == 1
+
+
+@pytest.mark.slow
+def test_mega_city_full_scale_bounded():
+    fr = _mega_city_run(rate_per_edge_per_s=2400.0, n_edge=20)
+    per_frame = fr.n_requests / fr.n_frames
+    assert per_frame >= 1e5, f"only {per_frame:,.0f} users/frame"
+    assert np.isfinite(np.asarray(fr.satisfied_per_rep)).all()
+    assert np.isfinite(np.asarray(fr.mean_us_per_rep)).all()

@@ -1,0 +1,294 @@
+"""The consolidated ``EngineOptions`` API (``options=``).
+
+The contract under test (see ``docs/architecture.md``):
+
+* old-style per-call keywords and ``options=EngineOptions(...)`` resolve to
+  the same configuration, so the two spellings produce **bit-identical**
+  results — checked for every vmappable policy, congestion on and off;
+* any deprecated per-call keyword emits one ``DeprecationWarning``; mixing
+  them with an explicit ``options=`` raises (never a silent merge);
+* ``resolve_options`` / ``resolve_backend`` enforce one precedence order:
+  explicit argument > environment variable > scenario default > built-in;
+* fleet sizing knobs validate loudly: ``rep_group < 1`` raises,
+  ``rep_group > n_rep`` clamps (bit-identical to ``rep_group=n_rep``), and
+  an unsatisfiable ``devices=`` request names both the requested and the
+  visible device count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core import (  # noqa: E402
+    CongestionConfig,
+    EngineOptions,
+    SimConfig,
+    demo_cluster_spec,
+    get_policy,
+    get_scenario,
+    list_policies,
+    resolve_backend,
+    resolve_options,
+    simulate,
+    simulate_fleet,
+)
+from repro.core.options import (  # noqa: E402
+    ENV_BACKEND,
+    ENV_RNG_MODE,
+    ENV_SCHEDULER,
+)
+
+VMAPPABLE = [p for p in list_policies() if get_policy(p).vmappable]
+SPEC = demo_cluster_spec()
+N_DEV = jax.local_device_count()
+
+
+def fleet_cfg(congestion: bool = False, **kw) -> SimConfig:
+    base = dict(
+        horizon_ms=12_000.0,
+        arrival_rate_per_s=4.0,
+        delay_req_ms=6000.0,
+        acc_req_mean=50.0,
+        acc_req_std=10.0,
+        congestion=CongestionConfig(enabled=congestion),
+    )
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def assert_fleet_identical(a, b):
+    """Bitwise equality of every result array two fleet runs produce."""
+    assert a.n_rep == b.n_rep
+    assert a.n_frames == b.n_frames
+    assert a.n_requests == b.n_requests
+    assert a.n_served == b.n_served
+    np.testing.assert_array_equal(a.satisfied_per_rep, b.satisfied_per_rep)
+    np.testing.assert_array_equal(a.mean_us_per_rep, b.mean_us_per_rep)
+    assert (a.final_backlog_per_rep is None) == (b.final_backlog_per_rep is None)
+    if a.final_backlog_per_rep is not None:
+        np.testing.assert_array_equal(
+            a.final_backlog_per_rep, b.final_backlog_per_rep
+        )
+    assert a.mean_compute_inflation == b.mean_compute_inflation
+
+
+# ---------------------------------------------------------------------------
+# old-style keywords vs options= : bit-identical results
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("congestion", [False, True], ids=["plain", "congestion"])
+@pytest.mark.parametrize("policy", VMAPPABLE)
+def test_fleet_kwargs_vs_options_bitwise(policy, congestion):
+    cfg = fleet_cfg(congestion)
+    with pytest.warns(DeprecationWarning):
+        old = simulate_fleet(
+            SPEC, cfg, policy=policy, n_rep=4, seed=0,
+            rng_mode="paper-default", window=2,
+        )
+    new = simulate_fleet(
+        SPEC, cfg, policy=policy, n_rep=4, seed=0,
+        options=EngineOptions(rng_mode="paper-default", window=2),
+    )
+    assert_fleet_identical(old, new)
+
+
+def test_simulate_kwargs_vs_options_bitwise():
+    cfg = fleet_cfg()
+    with pytest.warns(DeprecationWarning):
+        old = simulate(SPEC, cfg, policy="gus", seed=0, rng_mode="vectorized")
+    new = simulate(
+        SPEC, cfg, policy="gus", seed=0,
+        options=EngineOptions(rng_mode="vectorized"),
+    )
+    assert old.as_dict() == new.as_dict()
+
+
+def test_options_only_emits_no_deprecation_warning():
+    cfg = fleet_cfg()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        simulate(SPEC, cfg, policy="gus", seed=0, options=EngineOptions())
+        simulate_fleet(
+            SPEC, cfg, policy="gus", n_rep=2, seed=0, options=EngineOptions()
+        )
+
+
+# ---------------------------------------------------------------------------
+# deprecation warnings and the conflict error
+# ---------------------------------------------------------------------------
+
+def test_deprecated_kwarg_warns_with_name():
+    cfg = fleet_cfg()
+    with pytest.warns(DeprecationWarning, match="streaming"):
+        simulate(SPEC, cfg, policy="gus", seed=0, streaming=False)
+    with pytest.warns(DeprecationWarning, match="prefetch"):
+        simulate_fleet(SPEC, cfg, policy="gus", n_rep=2, seed=0, prefetch=0)
+
+
+def test_options_plus_deprecated_kwarg_conflicts():
+    cfg = fleet_cfg()
+    with pytest.raises(ValueError, match="rng_mode"):
+        simulate(
+            SPEC, cfg, policy="gus", seed=0,
+            options=EngineOptions(), rng_mode="vectorized",
+        )
+    with pytest.raises(ValueError, match="window"):
+        simulate_fleet(
+            SPEC, cfg, policy="gus", n_rep=2, seed=0,
+            options=EngineOptions(), window=2,
+        )
+
+
+# ---------------------------------------------------------------------------
+# resolution precedence: explicit > env > scenario > built-in
+# ---------------------------------------------------------------------------
+
+def test_builtin_defaults():
+    r = resolve_options(None, env={})
+    assert r.rng_mode == "paper-default"
+    assert r.streaming is False
+    assert r.scheduler == "dense"
+    assert r.backend is None
+    assert r.prefetch == 1
+
+
+def test_env_beats_builtin_default():
+    r = resolve_options(
+        None,
+        env={ENV_RNG_MODE: "vectorized", ENV_SCHEDULER: "hierarchical"},
+    )
+    assert r.rng_mode == "vectorized"
+    assert r.scheduler == "hierarchical"
+
+
+def test_explicit_beats_env():
+    r = resolve_options(
+        EngineOptions(rng_mode="paper-default", scheduler="dense"),
+        env={ENV_RNG_MODE: "vectorized", ENV_SCHEDULER: "hierarchical"},
+    )
+    assert r.rng_mode == "paper-default"
+    assert r.scheduler == "dense"
+
+
+def test_scenario_default_fills_unset_fields():
+    scn = get_scenario("mega-city")  # streaming=True, rng_mode="vectorized"
+    r = resolve_options(None, scenario=scn, env={})
+    assert r.streaming is True
+    assert r.rng_mode == "vectorized"
+
+
+def test_env_beats_scenario_default():
+    scn = get_scenario("mega-city")
+    r = resolve_options(None, scenario=scn, env={ENV_RNG_MODE: "paper-default"})
+    assert r.rng_mode == "paper-default"
+    assert r.streaming is True  # no env var for streaming: scenario wins
+
+
+def test_explicit_beats_scenario_default():
+    scn = get_scenario("mega-city")
+    r = resolve_options(
+        EngineOptions(streaming=False, rng_mode="paper-default"),
+        scenario=scn,
+        env={},
+    )
+    assert r.streaming is False
+    assert r.rng_mode == "paper-default"
+
+
+def test_invalid_env_value_raises():
+    with pytest.raises(ValueError, match=ENV_RNG_MODE):
+        resolve_options(None, env={ENV_RNG_MODE: "bogus"})
+    with pytest.raises(ValueError, match=ENV_SCHEDULER):
+        resolve_options(None, env={ENV_SCHEDULER: "bogus"})
+    with pytest.raises(ValueError, match=ENV_BACKEND):
+        resolve_backend(None, env={ENV_BACKEND: "bogus"})
+
+
+def test_resolve_backend_precedence():
+    assert resolve_backend(None, env={}) == "xla"
+    assert resolve_backend(None, env={ENV_BACKEND: "pallas"}) == "pallas"
+    assert resolve_backend("xla", env={ENV_BACKEND: "pallas"}) == "xla"
+    with pytest.raises(ValueError, match="bogus"):
+        resolve_backend("bogus", env={})
+
+
+def test_invalid_backend_in_options_raises_early():
+    with pytest.raises(ValueError, match="bogus"):
+        resolve_options(EngineOptions(backend="bogus"), env={})
+
+
+def test_env_read_from_process_environment(monkeypatch):
+    monkeypatch.setenv(ENV_RNG_MODE, "vectorized")
+    monkeypatch.setenv(ENV_SCHEDULER, "hierarchical")
+    r = resolve_options(None)
+    assert r.rng_mode == "vectorized"
+    assert r.scheduler == "hierarchical"
+
+
+def test_resolve_is_idempotent():
+    scn = get_scenario("mega-city")
+    once = resolve_options(EngineOptions(window=3), scenario=scn, env={})
+    twice = resolve_options(once, scenario=get_scenario("paper-default"), env={})
+    assert once == twice  # resolved fields never re-defer
+
+
+def test_prefetch_clamps_and_sizes_validate():
+    assert resolve_options(EngineOptions(prefetch=-3), env={}).prefetch == 0
+    for field in ("window", "devices", "rep_group"):
+        with pytest.raises(ValueError, match=field):
+            resolve_options(EngineOptions(**{field: 0}), env={})
+
+
+def test_options_type_checked():
+    with pytest.raises(TypeError, match="EngineOptions"):
+        resolve_options({"rng_mode": "vectorized"}, env={})
+
+
+# ---------------------------------------------------------------------------
+# fleet sizing knobs: rep_group edge cases, devices error message
+# ---------------------------------------------------------------------------
+
+def test_rep_group_below_one_raises():
+    cfg = fleet_cfg()
+    with pytest.raises(ValueError, match="rep_group"):
+        simulate_fleet(
+            SPEC, cfg, policy="gus", n_rep=4, seed=0,
+            options=EngineOptions(rep_group=0),
+        )
+
+
+def test_rep_group_above_n_rep_clamps_bitwise():
+    cfg = fleet_cfg()
+    big = simulate_fleet(
+        SPEC, cfg, policy="gus", n_rep=4, seed=0,
+        options=EngineOptions(rep_group=64),
+    )
+    exact = simulate_fleet(
+        SPEC, cfg, policy="gus", n_rep=4, seed=0,
+        options=EngineOptions(rep_group=4),
+    )
+    assert_fleet_identical(big, exact)
+
+
+def test_devices_error_names_requested_and_available():
+    cfg = fleet_cfg()
+    want = N_DEV + 3
+    with pytest.raises(ValueError) as ei:
+        simulate_fleet(
+            SPEC, cfg, policy="gus", n_rep=4, seed=0,
+            options=EngineOptions(devices=want),
+        )
+    msg = str(ei.value)
+    assert str(want) in msg and str(N_DEV) in msg
+
+
+def test_engine_options_is_frozen_and_replaceable():
+    opts = EngineOptions(window=2)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        opts.window = 3
+    assert dataclasses.replace(opts, prefetch=0).window == 2

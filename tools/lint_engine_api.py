@@ -1,0 +1,95 @@
+"""Engine-API lint: no deprecated per-call engine keywords in user-facing code.
+
+``simulate`` / ``simulate_fleet`` accept their engine axes (streaming,
+rng_mode, backend, metrics, devices, window, prefetch, rep_group) two ways:
+bundled in one ``options=EngineOptions(...)`` value (the API), or as
+individual keywords (deprecated aliases kept for one release so downstream
+call sites migrate on a ``DeprecationWarning``, not a crash).  Examples and
+benchmarks are the code users copy from, so they must demonstrate the real
+API.  This checker walks every ``.py`` file under ``examples/`` and
+``benchmarks/`` and fails when a ``simulate*`` call passes a deprecated
+keyword.
+
+Tests are deliberately *not* linted: they pin the alias path (parity with
+``options=``, the warning itself, the conflict error) and need the
+deprecated spellings to do it.
+
+Run (CI runs it in the lint job):
+
+    python tools/lint_engine_api.py
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+LINTED_DIRS = ("examples", "benchmarks")
+ENTRYPOINTS = {"simulate", "simulate_fleet"}
+DEPRECATED_KW = {
+    "streaming",
+    "rng_mode",
+    "backend",
+    "metrics",
+    "devices",
+    "window",
+    "prefetch",
+    "rep_group",
+}
+
+
+def _call_name(node: ast.Call) -> str | None:
+    """Bare-name or attribute tail: matches simulate(...), core.simulate(...)."""
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return None
+
+
+def lint_file(path: Path) -> list[str]:
+    try:
+        tree = ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError as e:  # a broken file is its own CI failure; skip here
+        return [f"{path}: could not parse ({e.msg})"]
+    errors = []
+    rel = path.relative_to(REPO)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call) or _call_name(node) not in ENTRYPOINTS:
+            continue
+        bad = sorted(
+            kw.arg for kw in node.keywords
+            if kw.arg is not None and kw.arg in DEPRECATED_KW
+        )
+        if bad:
+            errors.append(
+                f"{rel}:{node.lineno}: {_call_name(node)}() passes deprecated "
+                f"engine keyword(s) {', '.join(bad)} — bundle them in "
+                f"options=EngineOptions(...)"
+            )
+    return errors
+
+
+def main(argv=None) -> int:
+    roots = [REPO / d for d in LINTED_DIRS]
+    errors = []
+    n_files = 0
+    for root in roots:
+        for path in sorted(root.rglob("*.py")):
+            n_files += 1
+            errors.extend(lint_file(path))
+    for e in errors:
+        print(e, file=sys.stderr)
+    if errors:
+        print(f"engine-api lint: {len(errors)} violation(s) in {n_files} files",
+              file=sys.stderr)
+        return 1
+    print(f"engine-api lint: {n_files} files clean "
+          f"(no deprecated simulate*/fleet keywords)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
