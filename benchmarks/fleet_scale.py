@@ -71,6 +71,12 @@ from repro.core import (
     get_scenario,
     simulate_fleet,
 )
+from repro.core.impairments import (
+    AdmissionConfig,
+    BurstyLossLink,
+    ImpairmentConfig,
+    IntermittentLink,
+)
 from repro.obs import profile_trace
 
 try:  # imported as benchmarks.fleet_scale (run.py)
@@ -147,14 +153,36 @@ def run_users_sweep(*, tiny: bool, repeats: int) -> list:
     arrivals per frame hit the target (users = rate * n_edge * frame_s);
     asserts the measured wall time grows *sub-quadratically* in the request
     count between consecutive points — the whole point of scheduling class
-    aggregates instead of 10^5 individual users."""
+    aggregates instead of 10^5 individual users.
+
+    The sweep runs with **admission control and link impairments enabled**
+    (class-level shedding + per-member realized channels — the composition
+    the PR-9 host loop hard-raised on), and the largest point is re-timed
+    under ``REPRO_HIER_HOST_LOOP=1`` (the retained PR-9 per-window host
+    loop): the device pipeline must come in measurably faster in the full
+    sweep (the 10^5-users point); in ``--tiny`` the speedup is reported
+    but not asserted."""
     n_edge = 20
     spec = demo_cluster_spec(n_edge=n_edge, n_cloud=1, n_services=5, n_variants=10)
-    cfg = SimConfig(horizon_ms=9_000.0)
+    cfg = SimConfig(
+        horizon_ms=9_000.0,
+        admission=AdmissionConfig(enabled=True, shed=True),
+        impairments=ImpairmentConfig(
+            enabled=True,
+            link_profiles=(IntermittentLink(), BurstyLossLink()),
+            seed=7,
+        ),
+    )
     frame_s = cfg.frame_ms / 1000.0
     base = get_scenario("mega-city")
     targets = [1_000, 10_000] if tiny else [1_000, 10_000, 100_000]
-    opts = EngineOptions(scheduler="hierarchical", window=1)
+    # materialized columnar traces (streaming=False keeps arrivals as array
+    # slices, never per-request objects) + per-frame windows with prefetch:
+    # the producer thread builds frame k+1's class grid while the device
+    # crunches frame k — the overlap the per-window host loop cannot have
+    opts = EngineOptions(
+        scheduler="hierarchical", window=1, prefetch=2, streaming=False
+    )
     rows = []
     for users in targets:
         scn = dataclasses.replace(
@@ -180,6 +208,37 @@ def run_users_sweep(*, tiny: bool, repeats: int) -> list:
         rows.append(row)
         print(f"users_sweep,users={users},n_requests={fr.n_requests},"
               f"{row['wall_s']}s,{row['reqs_per_s']} req/s", flush=True)
+
+    # PR-9 host-loop baseline at the largest point (same trace; the host
+    # loop ignores admission — it predates it — so it does strictly *less*
+    # work and still has to lose on wall time)
+    top = rows[-1]
+    scn = dataclasses.replace(
+        base, rate_per_edge_per_s=top["users_per_frame"] / (n_edge * frame_s)
+    )
+    host_wall = float("inf")
+    os.environ["REPRO_HIER_HOST_LOOP"] = "1"
+    try:
+        for _ in range(max(1, repeats)):
+            t0 = time.perf_counter()
+            simulate_fleet(
+                spec, cfg, policy="gus", scenario=scn, n_rep=1, seed=0,
+                options=opts,
+            )
+            host_wall = min(host_wall, time.perf_counter() - t0)
+    finally:
+        del os.environ["REPRO_HIER_HOST_LOOP"]
+    top["host_loop_wall_s"] = round(host_wall, 4)
+    top["device_speedup_vs_host"] = round(host_wall / max(top["wall_s"], 1e-9), 2)
+    print(f"users_sweep,host-loop baseline at {top['users_per_frame']} "
+          f"users/frame: {top['host_loop_wall_s']}s vs device "
+          f"{top['wall_s']}s ({top['device_speedup_vs_host']}x)", flush=True)
+    if not tiny and top["device_speedup_vs_host"] <= 1.0:
+        raise SystemExit(
+            f"users_sweep gate: device hier pipeline ({top['wall_s']}s) is "
+            f"not faster than the PR-9 host loop ({top['host_loop_wall_s']}s) "
+            f"at the {top['users_per_frame']}-users point"
+        )
     import math as _math
 
     for lo, hi in zip(rows, rows[1:]):

@@ -43,13 +43,17 @@ import numpy as np
 
 from repro.core import (
     GeneratorConfig,
+    aggregate_instance,
     generate_batch,
     generate_instance,
     gus_schedule,
     gus_schedule_batch,
     gus_schedule_np,
+    hier_backend_fn,
+    hier_cells_np,
 )
 from repro.kernels.gus_pallas import gus_pallas_interpret_default
+from repro.kernels.hier_pallas import hier_cells_pallas
 
 from .common import csv_row, gate_rows_against_baseline
 
@@ -87,6 +91,40 @@ def _assert_bit_parity(a, b, what: str):
                 f"scheduler bench: pallas/xla assignment mismatch on {what} "
                 f"({field}: {int((av != bv).sum())} cells differ) — refusing "
                 "to benchmark a kernel that is not bit-identical"
+            )
+
+
+def _hier_class_args(inst, k: int = 3):
+    """Class tensors for the hierarchical allocator rows: a paper-scale
+    frame tiled ``k``-fold so every class carries a multi-member count and
+    the analytic chunk loop actually loops."""
+    rep = lambda x: np.repeat(np.asarray(x), k, axis=0)  # noqa: E731
+    import dataclasses
+
+    tiled = dataclasses.replace(
+        inst,
+        cover=rep(inst.cover), A=rep(inst.A), C=rep(inst.C),
+        w_a=rep(inst.w_a), w_c=rep(inst.w_c),
+        acc=rep(inst.acc), ctime=rep(inst.ctime), v=rep(inst.v),
+        u=rep(inst.u), avail=rep(inst.avail),
+    )
+    agg = aggregate_instance(tiled)
+    o = np.argsort(agg.first_idx, kind="stable")
+    return (
+        agg.us[o], agg.feas[o], agg.v[o], agg.u[o],
+        agg.cover[o].astype(np.int32), agg.count[o].astype(np.int32),
+        np.asarray(inst.gamma, np.float32), np.asarray(inst.eta, np.float32),
+    )
+
+
+def _assert_cells_parity(got, exp, what: str):
+    for name, g, e in zip(("take", "start"), got, exp):
+        g, e = np.asarray(g), np.asarray(e)
+        if not np.array_equal(g, e):
+            raise SystemExit(
+                f"scheduler bench: hier cell mismatch on {what} ({name}: "
+                f"{int((g != e).sum())} cells differ) — refusing to "
+                "benchmark an allocator that is not bit-identical"
             )
 
 
@@ -129,6 +167,33 @@ def run(repeats: int = 3) -> dict:
         )
         add("pallas", bs, _time(pallas_b, batch, reps=repeats),
             gated=pallas_gated)
+
+    # hierarchical analytic allocator (class-aggregate fleet path): same
+    # three-implementation story, parity asserted before any row is timed
+    hargs = _hier_class_args(generate_instance(0, CFG, as_numpy=True))
+    ref = hier_cells_np(*hargs)
+    xla_fn, pal_fn = hier_backend_fn("xla"), hier_backend_fn("pallas")
+    _assert_cells_parity(xla_fn(*hargs), ref, "hier frame (xla)")
+    _assert_cells_parity(pal_fn(*hargs), ref, "hier frame (pallas)")
+    add("hier-np", 1, _time(hier_cells_np, *hargs, reps=1), gated=False)
+    add("hier-xla", 1, _time(xla_fn, *hargs, reps=repeats), gated=True)
+    add("hier-pallas", 1, _time(pal_fn, *hargs, reps=repeats),
+        gated=pallas_gated)
+
+    # batched hier rows: vmap over a replication axis, the fleet's layout
+    bs = 16
+    hbatch = [np.broadcast_to(a, (bs,) + a.shape).copy() for a in hargs]
+    vx = jax.jit(jax.vmap(xla_fn))
+    _assert_cells_parity(
+        jax.tree.map(lambda x: np.asarray(x)[0], tuple(vx(*hbatch))), ref,
+        f"hier batch-{bs} (xla)")
+    _assert_cells_parity(
+        jax.tree.map(lambda x: np.asarray(x)[0],
+                     tuple(hier_cells_pallas(*hbatch))), ref,
+        f"hier batch-{bs} (pallas)")
+    add("hier-xla", bs, _time(vx, *hbatch, reps=repeats), gated=True)
+    add("hier-pallas", bs, _time(hier_cells_pallas, *hbatch, reps=repeats),
+        gated=pallas_gated)
 
     return {
         "meta": {

@@ -48,16 +48,39 @@ The fleet's ``scheduler="hierarchical"`` path (``simulator.py``) reuses
 :func:`aggregate_requests` / :func:`hier_assign` / :func:`deaggregate` but
 builds only the class-level tensors, never the dense ``N x M x L`` grid —
 that is what bounds memory at ``10^5+`` users per frame.
+
+Device backends
+---------------
+The fleet's analytic allocation also exists as a jitted XLA program
+(:func:`hier_cells`, ``backend="xla"``) and a fused Pallas kernel
+(:mod:`repro.kernels.hier_pallas`, ``backend="pallas"``), dispatched
+through the same ``backend=`` / ``REPRO_GUS_BACKEND`` switch as the dense
+GUS implementations.  All three speak a fixed-shape *cell* contract
+instead of a variable-length chunk list: for classes *pre-sorted by first
+request index*, ``(take, start)`` are ``(C, M, L)`` int32 tensors where
+``take[c, j, l]`` members of class ``c`` run variant ``l`` on server ``j``
+and ``start[c, j, l]`` is their offset into the class's (ascending)
+member list.  Consecutive re-picks of one cell accumulate, so member
+ranges stay contiguous and :func:`deaggregate` semantics are preserved.
+The chunk sizing is float32 with one explicit IEEE op sequence —
+``floor(budget / cost)``, ``min`` against the remainder, ``budget -
+take * cost`` — shared verbatim by the NumPy oracle
+(:func:`hier_cells_np`), the XLA scan and the Pallas kernel, which is
+what makes three-way bit-parity (``tests/test_hier_parity.py``)
+well-defined with jax's default float32 everywhere.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+from functools import partial
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .gus import Assignment
+from .gus import Assignment, resolve_gus_backend
 from .instance import FlatInstance
 from .satisfaction import hard_feasible, us_tensor
 
@@ -66,7 +89,11 @@ __all__ = [
     "QuantizationConfig",
     "aggregate_instance",
     "aggregate_requests",
+    "class_keys",
     "hier_assign",
+    "hier_cells_np",
+    "hier_cells",
+    "hier_backend_fn",
     "deaggregate",
     "hier_schedule_np",
     "make_gus_hier",
@@ -79,15 +106,23 @@ class QuantizationConfig:
 
     ``acc_decimals`` / ``deadline_decimals`` round the accuracy floor and
     deadline with :func:`numpy.round` (negative = coarser than integer), so
-    discrete QoS tiers collapse losslessly.  ``size_bins`` / ``tq_bins``
-    are equal-width bins over each frame's observed payload-size and
-    queueing-age ranges.
+    discrete QoS tiers collapse losslessly.  ``size_bin_bytes`` /
+    ``tq_bin_ms`` are *anchored* absolute-width bins
+    (``floor(x / width)``): a request's class key depends only on its own
+    attributes, never on which other requests share the frame.  The earlier
+    observed-min/max equal-width bins made keys a function of the frame's
+    extremes, so the same trace produced different classes under
+    ``rng_mode="vectorized"`` vs object mode (different float roundtrips)
+    and under different window chunkings — the instability pinned down by
+    ``test_class_keys_chunk_invariant``.  The defaults keep the old
+    granularity on the default generator: 12.5 kB over the 20–120 kB
+    payload range ≈ the old 8 bins, 750 ms over a frame ≈ the old 4 bins.
     """
 
     acc_decimals: int = 0
     deadline_decimals: int = -2
-    size_bins: int = 8
-    tq_bins: int = 4
+    size_bin_bytes: float = 12_500.0
+    tq_bin_ms: float = 750.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -188,6 +223,71 @@ def aggregate_instance(
     )
 
 
+def class_keys(
+    cover: np.ndarray,
+    service: np.ndarray,
+    A: np.ndarray,
+    C: np.ndarray,
+    size: np.ndarray,
+    tq: np.ndarray,
+    quant: Optional[QuantizationConfig] = None,
+) -> np.ndarray:
+    """(n, 6) int64 class keys: (cover, service, rounded A, rounded C,
+    payload-size bin, queueing-age bin).
+
+    Every column is a pure per-request function — anchored ``floor(x /
+    width)`` bins, no frame-level statistics — so the key assigned to a
+    request is invariant to chunking, windowing, and the arrival
+    generator's rng mode.  Exposed so tests (and downstream tooling) can
+    assert that invariance directly.
+    """
+    quant = quant or QuantizationConfig()
+    return np.column_stack(
+        [
+            np.asarray(cover).astype(np.int64),
+            np.asarray(service).astype(np.int64),
+            np.round(
+                np.asarray(A, np.float64) * 10.0 ** quant.acc_decimals
+            ).astype(np.int64),
+            np.round(
+                np.asarray(C, np.float64) * 10.0 ** quant.deadline_decimals
+            ).astype(np.int64),
+            np.floor(
+                np.asarray(size, np.float64) / quant.size_bin_bytes
+            ).astype(np.int64),
+            np.floor(
+                np.asarray(tq, np.float64) / quant.tq_bin_ms
+            ).astype(np.int64),
+        ]
+    )
+
+
+def _unique_inverse_rows(key: np.ndarray) -> np.ndarray:
+    """Inverse indices of ``np.unique(key, axis=0)`` via mixed-radix packing.
+
+    Shifting each column to zero and packing most-significant-first keeps
+    the scalar order identical to lexicographic row order, so the inverse
+    (and therefore every downstream class index) is bit-identical to the
+    ``axis=0`` path — just without the void-dtype row sort, which dominates
+    aggregation time at 10^5 requests/frame.  Falls back to ``axis=0`` when
+    the packed radix would overflow int64 (pathological key ranges).
+    """
+    lo = key.min(axis=0)
+    k = key - lo
+    span = k.max(axis=0).astype(object) + 1
+    radix = 1
+    for s in span:
+        radix *= int(s)
+    if radix >= np.iinfo(np.int64).max:
+        _, inv = np.unique(key, axis=0, return_inverse=True)
+        return inv.reshape(-1)
+    packed = k[:, 0]
+    for c in range(1, key.shape[1]):
+        packed = packed * int(span[c]) + k[:, c]
+    _, inv = np.unique(packed, return_inverse=True)
+    return inv
+
+
 def aggregate_requests(
     cover: np.ndarray,
     service: np.ndarray,
@@ -199,13 +299,14 @@ def aggregate_requests(
 ):
     """Bucket raw request columns into QoS classes (fleet path, no grid).
 
-    Classes key on (covering edge, service, rounded ``A``, rounded ``C``,
-    payload-size bin, queueing-age bin) per ``quant``.  Returns the
-    grouping arrays plus *count-weighted mean* representative columns —
-    ``(count, first_idx, members, offsets, rep)`` where ``rep`` is a dict
-    of per-class ``cover``/``service`` (exact) and ``A``/``C``/``size``/
-    ``tq`` (means).  The caller builds the ``(n_classes, M, L)`` candidate
-    grid from ``rep`` — dense per-request tensors are never materialized.
+    Classes key on :func:`class_keys` (covering edge, service, rounded
+    ``A``, rounded ``C``, anchored payload-size bin, anchored queueing-age
+    bin) per ``quant``.  Returns the grouping arrays plus *count-weighted
+    mean* representative columns — ``(count, first_idx, members, offsets,
+    rep)`` where ``rep`` is a dict of per-class ``cover``/``service``
+    (exact) and ``A``/``C``/``size``/``tq`` (means).  The caller builds the
+    ``(n_classes, M, L)`` candidate grid from ``rep`` — dense per-request
+    tensors are never materialized.
     """
     quant = quant or QuantizationConfig()
     n = cover.shape[0]
@@ -221,25 +322,8 @@ def aggregate_requests(
         )
         return empty, empty, empty, np.zeros(1, np.int64), rep
 
-    def _bin(x, bins):
-        lo, hi = float(np.min(x)), float(np.max(x))
-        if hi <= lo:
-            return np.zeros(n, np.int64)
-        edges = (x - lo) * (bins / (hi - lo))
-        return np.clip(edges.astype(np.int64), 0, bins - 1)
-
-    key = np.column_stack(
-        [
-            cover.astype(np.int64),
-            service.astype(np.int64),
-            np.round(A * 10.0 ** quant.acc_decimals).astype(np.int64),
-            np.round(C * 10.0 ** quant.deadline_decimals).astype(np.int64),
-            _bin(np.asarray(size, np.float64), quant.size_bins),
-            _bin(np.asarray(tq, np.float64), quant.tq_bins),
-        ]
-    )
-    _, inv = np.unique(key, axis=0, return_inverse=True)
-    inv = inv.reshape(-1)
+    key = class_keys(cover, service, A, C, size, tq, quant)
+    inv = _unique_inverse_rows(key)
     n_c = int(inv.max()) + 1
     count, first_idx, members, offsets = _group(inv, n_c)
 
@@ -284,16 +368,37 @@ def hier_assign(
     ``exact=True`` consumes members one at a time with float32 capacity
     subtraction, reproducing :func:`repro.core.gus.gus_schedule_np`'s
     arithmetic bit for bit; ``exact=False`` sizes chunks analytically in
-    float64 (the fleet path — one division instead of ``count`` updates).
+    float32 via :func:`hier_cells_np` (the fleet path — one floor-division
+    instead of ``count`` updates), with the same IEEE op sequence as the
+    XLA and Pallas device backends, so the fleet's host oracle and its
+    device program agree bit for bit.
 
     Returns an ``(n_chunks, 4)`` int64 array of ``(class, j, l, take)`` in
     allocation order.
     """
-    dtype = np.float32 if exact else np.float64
-    gamma = np.asarray(gamma, dtype).copy()
-    eta = np.asarray(eta, dtype).copy()
     if agg.n_classes == 0:
         return np.zeros((0, 4), np.int64)
+
+    if not exact:  # analytic mode: delegate to the (take, start) cell oracle
+        order_all = np.argsort(agg.first_idx, kind="stable")
+        take, start = hier_cells_np(
+            agg.us[order_all], agg.feas[order_all], agg.v[order_all],
+            agg.u[order_all], agg.cover[order_all], agg.count[order_all],
+            gamma, eta,
+        )
+        ci, jj, ll = np.nonzero(take > 0)
+        if ci.size == 0:
+            return np.zeros((0, 4), np.int64)
+        # classes allocate strictly in order and within a class ``start`` is
+        # the running member offset, so (class position, start) IS the
+        # allocation order
+        o = np.lexsort((start[ci, jj, ll], ci))
+        return np.column_stack(
+            [order_all[ci], jj, ll, take[ci, jj, ll]]
+        )[o].astype(np.int64)
+
+    gamma = np.asarray(gamma, np.float32).copy()
+    eta = np.asarray(eta, np.float32).copy()
     M = gamma.shape[0]
     L = agg.us.shape[-1]
     server = np.arange(M)
@@ -308,8 +413,8 @@ def hier_assign(
         rem = int(agg.count[c])
         s = int(agg.cover[c])
         row_us = agg.us[c]
-        row_v = np.asarray(agg.v[c], dtype)
-        row_u = np.asarray(agg.u[c], dtype)
+        row_v = np.asarray(agg.v[c], np.float32)
+        row_u = np.asarray(agg.u[c], np.float32)
         local = (server == s)[:, None]
         feas = agg.feas[c]
         while rem > 0:
@@ -320,24 +425,14 @@ def hier_assign(
             j, l = divmod(flat, L)
             vv = row_v[j, l]
             uv = row_u[j, l]
-            if exact:
-                take = 0
-                while take < rem:
-                    if vv > gamma[j] or (j != s and uv > eta[s]):
-                        break
-                    gamma[j] -= vv
-                    if j != s:
-                        eta[s] -= uv
-                    take += 1
-            else:
-                take = rem
-                if vv > 0:
-                    take = min(take, int(gamma[j] // vv))
-                if j != s and uv > 0:
-                    take = min(take, int(eta[s] // uv))
-                gamma[j] -= take * vv
+            take = 0
+            while take < rem:
+                if vv > gamma[j] or (j != s and uv > eta[s]):
+                    break
+                gamma[j] -= vv
                 if j != s:
-                    eta[s] -= take * uv
+                    eta[s] -= uv
+                take += 1
             if take <= 0:
                 break  # float edge: argmax cell passed ``ok`` but fits zero
             chunks.append((int(c), j, l, take))
@@ -345,6 +440,209 @@ def hier_assign(
     if not chunks:
         return np.zeros((0, 4), np.int64)
     return np.asarray(chunks, np.int64)
+
+
+def hier_cells_np(
+    us: np.ndarray,
+    feas: np.ndarray,
+    v: np.ndarray,
+    u: np.ndarray,
+    cover: np.ndarray,
+    count: np.ndarray,
+    gamma: np.ndarray,
+    eta: np.ndarray,
+):
+    """NumPy oracle for the device hierarchical allocator (analytic mode).
+
+    Classes are processed **in the given order** (callers pre-sort by
+    ``first_idx``); ``(take, start)`` are the fixed-shape cell tensors
+    described in the module docstring.  All capacity arithmetic is float32
+    with the exact op sequence of the XLA scan and the Pallas kernel:
+    ``cap = floor(budget / cost)`` (f32 divide then f32 floor), ``take =
+    min(rem, cap_gamma, cap_eta)``, ``budget -= f32(take) * cost``.
+    Zero-count rows (padding) and classes with no feasible cell are
+    skipped without touching the budgets.
+
+    Re-picks of one cell are always consecutive (its utility never changes
+    and feasibility is monotone), so accumulated ``take`` spans a
+    contiguous member range from its first ``start`` — the property that
+    lets a fixed-shape tensor replace the variable-length chunk list.
+    """
+    us = np.asarray(us, np.float32)
+    feas = np.asarray(feas, bool)
+    v = np.asarray(v, np.float32)
+    u = np.asarray(u, np.float32)
+    gamma = np.asarray(gamma, np.float32).copy()
+    eta = np.asarray(eta, np.float32).copy()
+    C, M, L = us.shape
+    take = np.zeros((C, M, L), np.int32)
+    start = np.zeros((C, M, L), np.int32)
+    server = np.arange(M)
+    neg = np.float32(_NEG)
+    for c in range(C):
+        rem = int(count[c])
+        if rem <= 0 or not feas[c].any():
+            continue
+        s = int(cover[c])
+        local = (server == s)[:, None]
+        used = 0
+        while rem > 0:
+            ok = feas[c] & (v[c] <= gamma[:, None]) & (local | (u[c] <= eta[s]))
+            if not ok.any():
+                break
+            flat = int(np.argmax(np.where(ok, us[c], neg)))
+            j, l = divmod(flat, L)
+            vv = v[c, j, l]
+            uv = u[c, j, l]
+            t_f = np.float32(rem)
+            if vv > 0:
+                t_f = min(t_f, np.floor(gamma[j] / vv))
+            if j != s and uv > 0:
+                t_f = min(t_f, np.floor(eta[s] / uv))
+            t = int(t_f)
+            if t < 1:
+                break  # float edge: cell passed ``ok`` but fits zero members
+            tf32 = np.float32(t)
+            gamma[j] = gamma[j] - tf32 * vv
+            if j != s:
+                eta[s] = eta[s] - tf32 * uv
+            if take[c, j, l] == 0:
+                start[c, j, l] = used
+            take[c, j, l] += t
+            used += t
+            rem -= t
+    return take, start
+
+
+@jax.jit
+def _hier_cells_xla(us, feas, v, u, cover, count, gamma, eta):
+    """Jitted XLA implementation of :func:`hier_cells_np`: ``lax.scan``
+    over the (pre-sorted, padded) class axis threading the shared budget
+    vectors, with an inner ``lax.while_loop`` sizing one chunk per
+    iteration.  Bit-identical to the oracle — same f32 op sequence, same
+    first-occurrence argmax tie-break."""
+    us = jnp.asarray(us, jnp.float32)
+    feas = jnp.asarray(feas, bool)
+    v = jnp.asarray(v, jnp.float32)
+    u = jnp.asarray(u, jnp.float32)
+    cover = jnp.asarray(cover, jnp.int32)
+    count = jnp.asarray(count, jnp.int32)
+    gamma = jnp.asarray(gamma, jnp.float32)
+    eta = jnp.asarray(eta, jnp.float32)
+    C, M, L = us.shape
+    neg = jnp.float32(_NEG)
+    if C == 0:
+        z = jnp.zeros((0, M, L), jnp.int32)
+        return z, z
+
+    def cls_step(carry, x):
+        gamma, eta = carry
+        us_c, feas_c, v_c, u_c, s, cnt = x
+        is_local = jnp.arange(M, dtype=jnp.int32) == s
+
+        def cond(st):
+            return st[-1]
+
+        def body(st):
+            rem, gamma, eta, take, start, used, _ = st
+            ok = (
+                feas_c
+                & (v_c <= gamma[:, None])
+                & (is_local[:, None] | (u_c <= eta[s]))
+            )
+            score = jnp.where(ok, us_c, neg).reshape(-1)
+            flat = jnp.argmax(score)
+            any_ok = score[flat] > neg
+            j = (flat // L).astype(jnp.int32)
+            l = (flat % L).astype(jnp.int32)
+            vv = v_c[j, l]
+            uv = u_c[j, l]
+            offl = j != s
+            rem_f = rem.astype(jnp.float32)
+            cap_g = jnp.where(
+                vv > 0, jnp.floor(gamma[j] / jnp.where(vv > 0, vv, 1.0)), rem_f
+            )
+            cap_e = jnp.where(
+                offl & (uv > 0),
+                jnp.floor(eta[s] / jnp.where(uv > 0, uv, 1.0)),
+                rem_f,
+            )
+            t_f = jnp.minimum(rem_f, jnp.minimum(cap_g, cap_e))
+            t = t_f.astype(jnp.int32)
+            do = any_ok & (t >= 1)
+            tf32 = jnp.where(do, t, 0).astype(jnp.float32)
+            gamma = gamma.at[j].add(-(tf32 * vv))
+            eta = eta.at[s].add(jnp.where(offl, -(tf32 * uv), 0.0))
+            first = take[j, l] == 0
+            start = start.at[j, l].set(
+                jnp.where(do & first, used, start[j, l])
+            )
+            take = take.at[j, l].add(jnp.where(do, t, 0))
+            used = used + jnp.where(do, t, 0)
+            rem = rem - jnp.where(do, t, 0)
+            return rem, gamma, eta, take, start, used, do & (rem > 0)
+
+        st0 = (
+            cnt,
+            gamma,
+            eta,
+            jnp.zeros((M, L), jnp.int32),
+            jnp.zeros((M, L), jnp.int32),
+            jnp.int32(0),
+            feas_c.any() & (cnt > 0),
+        )
+        _, gamma, eta, take, start, _, _ = jax.lax.while_loop(cond, body, st0)
+        return (gamma, eta), (take, start)
+
+    (_, _), (take, start) = jax.lax.scan(
+        cls_step, (gamma, eta), (us, feas, v, u, cover, count)
+    )
+    return take, start
+
+
+def _hier_cells_pallas(us, feas, v, u, cover, count, gamma, eta):
+    """Fused-Pallas entry: batch-of-1 lift into the hierarchical kernel
+    (``vmap`` over the fleet's replication axis lifts it further, exactly
+    like the dense GUS kernel).  The interpret flag resolves at trace
+    time, same env switch as the dense kernel."""
+    from repro.kernels.gus_pallas import gus_pallas_interpret_default
+    from repro.kernels.hier_pallas import hier_cells_pallas
+
+    add = lambda x: jnp.asarray(x)[None]  # noqa: E731 — lift to batch of 1
+    take, start = hier_cells_pallas(
+        add(us), add(feas), add(v), add(u), add(cover), add(count),
+        add(gamma), add(eta), interpret=gus_pallas_interpret_default(),
+    )
+    return take[0], start[0]
+
+
+def hier_cells(
+    us, feas, v, u, cover, count, gamma, eta, *, backend: Optional[str] = None
+):
+    """Backend-dispatched analytic allocator over pre-sorted class tensors.
+
+    ``backend`` follows the dense GUS precedence (explicit >
+    ``REPRO_GUS_BACKEND`` > ``"xla"``); outputs are bit-identical across
+    the NumPy oracle, XLA, and the Pallas kernel (integer tensors, exact
+    equality — ``tests/test_hier_parity.py``)."""
+    if resolve_gus_backend(backend) == "pallas":
+        return _hier_cells_pallas(us, feas, v, u, cover, count, gamma, eta)
+    return _hier_cells_xla(us, feas, v, u, cover, count, gamma, eta)
+
+
+@functools.lru_cache(maxsize=None)
+def _hier_backend_impl(resolved: str):
+    if resolved == "pallas":
+        return partial(hier_cells, backend="pallas")
+    return _hier_cells_xla  # the default object existing caches key on
+
+
+def hier_backend_fn(backend: Optional[str] = None):
+    """A stable-identity cells callable for one backend — the hierarchical
+    twin of :func:`repro.core.gus.gus_backend_fn`.  The fleet runner's
+    compiled-program cache keys on this function's identity, so every
+    caller must get the same object per resolved backend."""
+    return _hier_backend_impl(resolve_gus_backend(backend))
 
 
 def deaggregate(agg: AggregateClasses, chunks: np.ndarray, n_requests: int):

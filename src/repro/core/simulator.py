@@ -266,6 +266,23 @@ def _pad_bucket(n: int) -> int:
     return max(4, 1 << max(n - 1, 0).bit_length())
 
 
+def _pad_bucket_fine(n: int) -> int:
+    """Bucket schedule for the hierarchical class axis: powers of two up to
+    4096, multiples of 1024 above.
+
+    Class counts sit wherever quantization puts them — at 10^5 users/frame
+    the mega-city lands near 19k classes, which the power-of-two schedule
+    pads to 32768 (≈70% dead rows in every (C, M, L) tensor *and* ≈70%
+    dead steps in the allocator's scan over classes).  Above 4096 the waste
+    is capped at ~5% instead; the compile-cache cost stays bounded because
+    a window's bucket moves only when its class count crosses a 1024
+    boundary, and city-scale frames drawn from one arrival process cluster
+    tightly."""
+    if n <= 4096:
+        return max(4, 1 << max(n - 1, 0).bit_length())
+    return ((n + 1023) // 1024) * 1024
+
+
 #: default width of a fleet replication group — the unit of device dispatch
 #: in :func:`simulate_fleet`.  One program is compiled per group shape and
 #: reused for every group on every device, which is what keeps multi-device
@@ -276,7 +293,7 @@ FLEET_REP_GROUP = 8
 
 def _frame_arrays(
     reqs: Sequence[Request], spec: ClusterSpec, cfg: SimConfig, now_ms: float, bw_est: float,
-    link=None,
+    link=None, lean: bool = False,
 ) -> Dict[str, np.ndarray]:
     """Numpy request-row tensors for one frame, using the scheduler's
     *estimated* bandwidth for comm delays — shared by
@@ -327,6 +344,13 @@ def _frame_arrays(
 
     proc = spec.proc_ms[:, svc, :].transpose(1, 0, 2)       # (N, M, L)
     ctime = Tq[:, None, None] + proc + comm[:, :, None]
+    if lean:
+        # class-grid builder fast path: the candidate gathers/broadcasts
+        # (acc, avail, v, u) are pure float32 lookups of spec tensors and
+        # are rebuilt on device from these per-row vectors — only ctime's
+        # float64 link math must stay host-side to agree bitwise with the
+        # request-level paths
+        return dict(cover=cover, A=A, C=C, ctime=ctime, svc=svc, size=size)
     avail = spec.placed[:, svc, :].transpose(1, 0, 2)
     # broadcast view, not a copy: every consumer only reads (scatter/slice
     # assignment or jnp.asarray), and skipping the 16MB materialization
@@ -379,6 +403,7 @@ def _build_frame_batch(
     budgets,
     n_pad: int,
     links=None,
+    lean: bool = False,
 ) -> FlatInstance:
     """Stacked, padded ``FlatInstance`` for a whole grid of frames at once.
 
@@ -411,11 +436,18 @@ def _build_frame_batch(
     C = np.full((F, n_pad), -1.0, np.float32)    # already-expired deadline
     w_a = np.zeros((F, n_pad), np.float32)       # padded rows contribute zero US
     w_c = np.zeros((F, n_pad), np.float32)
-    acc = np.zeros((F, n_pad, M, L), np.float32)
+    # ``lean`` (hierarchical fast path): the four candidate tensors that are
+    # pure spec gathers are never materialized on host — (F, 1, 1, 1)
+    # dummies hold their slots and the caller rebuilds them on device from
+    # the per-row ``svc``/``size`` vectors returned alongside the instance
+    big = (F, 1, 1, 1) if lean else (F, n_pad, M, L)
+    acc = np.zeros(big, np.float32)
     ctime = np.full((F, n_pad, M, L), 1e9, np.float32)
-    v = np.zeros((F, n_pad, M, L), np.float32)
-    u = np.zeros((F, n_pad, M, L), np.float32)
-    avail = np.zeros((F, n_pad, M, L), bool)
+    v = np.zeros(big, np.float32)
+    u = np.zeros(big, np.float32)
+    avail = np.zeros(big, bool)
+    svc_p = np.zeros((F, n_pad), np.int32) if lean else None
+    size_p = np.zeros((F, n_pad), np.float32) if lean else None
     gamma = np.zeros((F, M), np.float32)
     eta = np.zeros((F, M), np.float32)
     for i in range(F):
@@ -429,7 +461,6 @@ def _build_frame_batch(
         if nn:
             cat = RequestColumns.concatenate(frames)
             row = np.repeat(np.arange(F), lengths)
-            col = np.arange(nn) - np.repeat(np.cumsum(lengths) - lengths, lengths)
             now = np.repeat(
                 np.asarray(frame_starts, np.float64) + cfg.frame_ms, lengths
             )
@@ -439,17 +470,34 @@ def _build_frame_batch(
                 sc = np.stack([l[0] for l in links])  # (F, M)
                 la = np.stack([l[1] for l in links])
                 link = (sc[row, cov], la[row, cov])
-            arr = _frame_arrays(cat, spec, cfg, now, spec.bandwidth_true, link=link)
-            cover[row, col] = arr["cover"]
-            A[row, col] = arr["A"]
-            C[row, col] = arr["C"]
-            w_a[row, col] = cfg.w_a
-            w_c[row, col] = cfg.w_c
-            acc[row, col] = arr["acc"]
-            ctime[row, col] = arr["ctime"]
-            v[row, col] = arr["v"]
-            u[row, col] = arr["u"]
-            avail[row, col] = arr["avail"]
+            arr = _frame_arrays(
+                cat, spec, cfg, now, spec.bandwidth_true, link=link, lean=lean
+            )
+            # rows land at columns 0..n_i-1 of their frame by construction
+            # (``col`` above is a within-frame arange), so the scatter is
+            # really F contiguous slice writes — orders of magnitude fewer
+            # index computations than one 12M-element fancy-indexed store
+            # when frames hold 10^4+ classes
+            starts = np.cumsum(lengths) - lengths
+            for i in range(F):
+                n_i = int(lengths[i])
+                if n_i == 0:
+                    continue
+                sl = slice(int(starts[i]), int(starts[i]) + n_i)
+                cover[i, :n_i] = arr["cover"][sl]
+                A[i, :n_i] = arr["A"][sl]
+                C[i, :n_i] = arr["C"][sl]
+                w_a[i, :n_i] = cfg.w_a
+                w_c[i, :n_i] = cfg.w_c
+                ctime[i, :n_i] = arr["ctime"][sl]
+                if lean:
+                    svc_p[i, :n_i] = arr["svc"][sl]
+                    size_p[i, :n_i] = arr["size"][sl]
+                else:
+                    acc[i, :n_i] = arr["acc"][sl]
+                    v[i, :n_i] = arr["v"][sl]
+                    u[i, :n_i] = arr["u"][sl]
+                    avail[i, :n_i] = arr["avail"][sl]
     else:
         for i, (reqs, t0) in enumerate(zip(frames, frame_starts)):
             n = len(reqs)
@@ -465,22 +513,27 @@ def _build_frame_batch(
                 sc, la = links[i]
                 link = (sc[cov], la[cov])
             arr = _frame_arrays(
-                reqs, spec, cfg, t0 + cfg.frame_ms, spec.bandwidth_true, link=link
+                reqs, spec, cfg, t0 + cfg.frame_ms, spec.bandwidth_true,
+                link=link, lean=lean,
             )
             cover[i, :n] = arr["cover"]
             A[i, :n] = arr["A"]
             C[i, :n] = arr["C"]
             w_a[i, :n] = cfg.w_a
             w_c[i, :n] = cfg.w_c
-            acc[i, :n] = arr["acc"]
             ctime[i, :n] = arr["ctime"]
-            v[i, :n] = arr["v"]
-            u[i, :n] = arr["u"]
-            avail[i, :n] = arr["avail"]
+            if lean:
+                svc_p[i, :n] = arr["svc"]
+                size_p[i, :n] = arr["size"]
+            else:
+                acc[i, :n] = arr["acc"]
+                v[i, :n] = arr["v"]
+                u[i, :n] = arr["u"]
+                avail[i, :n] = arr["avail"]
     # numpy leaves on purpose: the fleet slices replication groups on host
     # and device_puts each slice straight onto its target device (jnp ops
     # consume numpy leaves transparently on the metrics path)
-    return FlatInstance(
+    inst = FlatInstance(
         cover=cover,
         A=A,
         C=C,
@@ -496,6 +549,9 @@ def _build_frame_batch(
         max_as=np.full((F,), cfg.max_as, np.float32),
         max_cs=np.full((F,), cfg.max_cs, np.float32),
     )
+    if lean:
+        return inst, svc_p, size_p
+    return inst
 
 
 def _apply_mobility_inplace(
@@ -616,22 +672,27 @@ def _apply_backend(pol, scheduler, backend):
     return None, gus_backend_fn(backend)
 
 
-def _fold_hier_scheduler(pol, scheduler, opts):
+def _fold_hier_scheduler(pol, scheduler, opts, allow_backend=False):
     """Fold ``EngineOptions(scheduler="hierarchical")`` into the (pol,
     scheduler) pair: the hierarchical layout *is* the ``gus-hier`` policy,
     so it composes only with the default scheduler / ``"gus"`` /
-    ``"gus-hier"`` — any other policy, a raw callable, or an explicit
-    ``backend=`` (which picks a *dense* GUS implementation) is an error,
-    not a silent override."""
+    ``"gus-hier"`` — any other policy or a raw callable is an error, not a
+    silent override.  ``allow_backend=True`` (the fleet) lets ``backend=``
+    through: there it selects the hierarchical allocator's implementation
+    (:func:`repro.core.aggregation.hier_backend_fn` — XLA scan or fused
+    Pallas kernel, bit-identical cells); :func:`simulate`'s single-frame
+    hier path stays host-side, so there it still raises."""
     if pol is None and scheduler is not None:
         raise ValueError(
             "EngineOptions(scheduler='hierarchical') does not compose with "
             "a raw scheduler callable; drop one of the two"
         )
-    if opts.backend is not None:
+    if opts.backend is not None and not allow_backend:
         raise ValueError(
-            f"backend={opts.backend!r} selects a dense GUS implementation; "
-            "it does not compose with EngineOptions(scheduler='hierarchical')"
+            f"backend={opts.backend!r} with "
+            "EngineOptions(scheduler='hierarchical') selects the device "
+            "allocator, which only the fleet path runs — use simulate_fleet "
+            "(simulate's hier path is host-side)"
         )
     if pol is not None and pol.name not in ("gus", "gus-hier"):
         raise ValueError(
@@ -1550,15 +1611,21 @@ def simulate_fleet(
 
     ``EngineOptions(scheduler="hierarchical")`` routes the fleet to the
     class-aggregate path (:mod:`repro.core.aggregation`): every frame's
-    requests are bucketed into QoS classes, the merged per-edge class
-    tables are scheduled as aggregates by a global chunked GUS pass, and
-    satisfaction is accounted class-level with per-class counts — memory
-    and schedule time scale with the number of *classes*, not requests,
-    which is what sustains 10^5+ users per frame (``mega-city``).  The
-    path runs host-side on one device (``devices`` other than ``None``/1
-    raises), composes with congestion, impairments, streaming, windowed
-    arrivals, and metrics, and does not support admission control
-    (``cfg.admission.enabled`` raises).
+    requests are bucketed into QoS classes, the padded class grid is
+    allocated by the *device-resident* analytic allocator
+    (:func:`repro.core.aggregation.hier_cells` — jitted XLA scan or the
+    fused Pallas kernel, selected by ``backend=`` / ``REPRO_GUS_BACKEND``)
+    inside the same vmap-over-R / scan-over-T / prefetch pipeline as the
+    dense path, and satisfaction is accounted *per member* at
+    deaggregation — memory and schedule time scale with the number of
+    *classes*, not requests, which is what sustains 10^5+ users per frame
+    (``mega-city``).  The path composes with congestion, impairments
+    (per-member link draws at deaggregation), admission control
+    (class-level shedding + queue caps, exact on singleton/duplicate
+    classes), streaming, windowed arrivals, and metrics; ``devices`` shards
+    the class-tensor precompute over the mesh
+    (:func:`_hier_class_tensors`).  ``REPRO_HIER_HOST_LOOP=1`` falls back
+    to the PR-9 host loop for baseline comparisons.
 
     ``metrics=True`` adds a per-frame :class:`~repro.obs.metrics.MetricsFrame`
     output to the scan — stacked on device across each window, drained with
@@ -1671,22 +1738,24 @@ def simulate_fleet(
     hier = opts.scheduler == "hierarchical"
     pol = _resolve_policy(scheduler, policy)
     if hier:
-        pol, scheduler = _fold_hier_scheduler(pol, scheduler, opts)
-        if cfg.admission.enabled:
-            raise ValueError(
-                "admission control evaluates per-request keep decisions on "
-                "the dense grid; it does not compose with "
-                "EngineOptions(scheduler='hierarchical')"
-            )
-    pol, scheduler = _apply_backend(pol, scheduler, opts.backend)
+        # backend= now selects the hierarchical allocator's implementation
+        # (XLA scan / fused Pallas kernel); admission control composes —
+        # class-level shed + queue caps run inside the jitted hier runner
+        pol, scheduler = _fold_hier_scheduler(
+            pol, scheduler, opts, allow_backend=True
+        )
+    else:
+        pol, scheduler = _apply_backend(pol, scheduler, opts.backend)
     ccfg = cfg.congestion
     acfg = cfg.admission
     T = max(1, int(np.ceil(cfg.horizon_ms / cfg.frame_ms)))
     K = spec.proc_ms.shape[1]
     M = spec.n_servers
     use_stream = opts.streaming
-    host_side = pol is not None and (not pol.vmappable or not pol.pad)
-    if host_side:
+    host_side = (not hier) and pol is not None and (not pol.vmappable or not pol.pad)
+    if hier:
+        n_dev = _resolve_fleet_devices(devices, n_rep)
+    elif host_side:
         if devices is not None and devices != 1:
             _resolve_fleet_devices(devices, n_rep)  # impossible counts error first
             raise ValueError(
@@ -1701,8 +1770,8 @@ def simulate_fleet(
     W = T if opts.window is None else max(1, min(int(opts.window), T))
     # lazy per-window arrival generation needs the stream's chunking
     # invariance; a materialized trace is bucketed up front either way.
-    # The hierarchical path is host-side but windowed by construction, so
-    # it keeps the stream lazy.
+    # The hierarchical path is windowed by construction, so it keeps the
+    # stream lazy.
     lazy = use_stream and W < T and (hier or not host_side)
     mode = opts.rng_mode
     prefetch = opts.prefetch
@@ -1745,8 +1814,9 @@ def simulate_fleet(
 
     if hier:
         return _simulate_fleet_hier(
-            spec, cfg, scn, sources, n_rep=n_rep, T=T, W=W, gen_s=gen_s,
-            engine=engine, metrics=metrics, sw=sw, t_run0=t_run0,
+            spec, cfg, scn, sources, n_rep=n_rep, T=T, W=W, opts=opts,
+            n_dev=n_dev, gen_s=gen_s, engine=engine, metrics=metrics, sw=sw,
+            t_run0=t_run0,
         )
 
     if host_side:
@@ -2331,7 +2401,644 @@ def _simulate_fleet_host(
     )
 
 
+@jax.jit
+def _us_feas_fused(batch: FlatInstance):
+    """Fused single-dispatch ``(us_tensor, hard_feasible)`` over a class
+    grid.  Same elementwise expression graph as the eager calls (bitwise
+    identical values) but one H2D transfer per field and one fused XLA
+    computation instead of a dozen eager dispatches with host temporaries —
+    this runs on the producer thread at city scale, where it sits on the
+    pipeline's critical path."""
+    return us_tensor(batch).astype(jnp.float32), hard_feasible(batch)
+
+
+@jax.jit
+def _us_feas_lean(ctime, A, C, w_a, w_c, max_as, max_cs, cover, svc, size,
+                  acc_sl, placed_t, proc_t):
+    """Lean-build twin of :func:`_us_feas_fused`: reconstructs the candidate
+    gathers (``acc``, ``avail``, ``v``, ``u``) on device from per-class
+    vectors plus the (S, M, L)-transposed spec tensors, then evaluates the
+    same elementwise expressions as ``us_tensor`` / ``hard_feasible``.
+    Every rebuilt tensor is a pure float32 gather / select, so real rows
+    are bitwise identical to the host-materialized versions; padded rows
+    (``svc``/``size``/``cover`` zero, ``A`` 1e9, ``C`` -1) gather service
+    0's values instead of zeros, which no output can see — their ``us`` is
+    an exact 0 (zero weights), their ``feas`` an exact False (the 1e9
+    accuracy floor), and the allocator never takes from an infeasible
+    zero-count class."""
+    acc_b = acc_sl[svc][..., None, :]                     # (F, Cp, 1, L)
+    avail = placed_t[svc]                                 # (F, Cp, M, L)
+    acc_term = (acc_b - A[..., None, None]) / max_as[..., None, None, None]
+    time_term = (C[..., None, None] - ctime) / max_cs[..., None, None, None]
+    us = w_a[..., None, None] * acc_term + w_c[..., None, None] * time_term
+    feas = (
+        avail & (acc_b >= A[..., None, None]) & (ctime <= C[..., None, None])
+    )
+    v = proc_t[svc]                                       # (F, Cp, M, L)
+    local = cover[..., None] == jnp.arange(v.shape[-2])[None, None, :]
+    u = jnp.where(local[..., None], 0.0, (size / 1024.0)[..., None, None])
+    return (us.astype(jnp.float32), feas, v, jnp.broadcast_to(u, v.shape))
+
+
+def _hier_class_tensors(batch: FlatInstance, n_dev: int):
+    """Utility / feasibility tensors for a window's class grid, with the
+    *class axis* sharded over the ``("rep",)`` device mesh when more than
+    one device is visible.
+
+    ``us_tensor`` / ``hard_feasible`` are elementwise per class row, so
+    cutting the padded class axis into ``n_dev`` contiguous slabs and
+    computing each slab on its own mesh device produces bit-identical
+    values to the single-device call (no cross-class reduction exists to
+    re-associate) — this is the one hierarchical tensor big enough at
+    city-scale frames (``F x Cp x M x L``) to be worth spreading, and the
+    allocator itself stays a sequential scan over classes (the budgets are
+    a carry), so sharding lives here, not in the kernel.
+    """
+    if n_dev <= 1:
+        # one fused jit call instead of eager op-by-op dispatch, and the
+        # outputs stay on device: the runner consumes them next, and a host
+        # round-trip of two (F, Cp, M, L) tensors at city scale costs more
+        # than the allocator's whole scan
+        return _us_feas_fused(batch)
+    from repro.launch.mesh import make_fleet_mesh
+
+    devs = list(make_fleet_mesh(n_dev).devices.ravel())
+    Cp = batch.A.shape[1]
+    cuts = np.linspace(0, Cp, n_dev + 1).astype(int)
+    per_class = ("cover", "A", "C", "w_a", "w_c", "acc", "ctime", "v", "u",
+                 "avail")
+    us_p, fe_p = [], []
+    for d, dev in enumerate(devs):
+        lo, hi = int(cuts[d]), int(cuts[d + 1])
+        if lo == hi:
+            continue
+        sub = dataclasses.replace(batch, **{
+            f: jax.device_put(getattr(batch, f)[:, lo:hi], dev)
+            for f in per_class
+        })
+        us_p.append(np.asarray(us_tensor(sub), np.float32))
+        fe_p.append(np.asarray(hard_feasible(sub)))
+    return np.concatenate(us_p, axis=1), np.concatenate(fe_p, axis=1)
+
+
+@functools.lru_cache(maxsize=32)
+def _hier_runner_impl(
+    cells_fn, ccfg: CongestionConfig, acfg: AdmissionConfig,
+    keep_pre: bool = False,
+):
+    """The hierarchical fleet's jitted vmap-over-reps-of-scan-over-frames
+    runner, cached by (allocator backend fn, congestion config, admission
+    config) — the hier twin of :func:`_fleet_runner_impl`.
+
+    Scan inputs per frame: the padded *class* instance, the precomputed
+    utility/feasibility tensors, the class queueing delays, and the member
+    counts.  Admission control mirrors the dense step's order at class
+    granularity: deadline shedding masks feasibility *before* the
+    allocator (against the pre-frame backlog-only inflation estimate,
+    evaluated on the count-weighted class representative), the queue cap
+    refuses allocated cells *after* it and before the committed work
+    enters the backlog — exact per-request semantics whenever classes are
+    singletons or exact duplicates (the parity tests' scenarios), a
+    representative approximation otherwise.
+
+    ``keep_pre`` (only valid with congestion off): the keep mask is
+    carry-independent (unit inflation makes admission's candidate test
+    bitwise ``hard_feasible``), so the window builder reduces it from the
+    feas tensor up front and ships it in the ``tq`` slot — the step
+    then never touches ``inst.acc``/``ctime``/``avail``/``A``/``C``, and
+    the caller passes slim dummies for them instead of transferring three
+    ``(R, T, Cp, M, L)`` tensors per window.
+    """
+    shed = acfg.enabled and acfg.shed
+    if keep_pre and ccfg.enabled:
+        raise ValueError("keep_pre requires the congestion model off")
+
+    def step(carry, x):
+        bg, be = carry
+        inst, us, feas, tq_c, count = x
+        if ccfg.enabled:  # the allocator sees backlog-reduced budgets
+            g_run = effective_capacity(inst.gamma, bg)
+            e_run = effective_capacity(inst.eta, be)
+        else:
+            g_run, e_run = inst.gamma, inst.eta
+        keep = None
+        if shed:
+            if keep_pre:  # tq slot carries the precomputed mask
+                keep = tq_c
+            else:
+                phi_pc, phi_pe = predicted_inflation(
+                    bg, be, inst.gamma, inst.eta, ccfg
+                )
+                keep = admission_keep(inst, tq_c, phi_pc, phi_pe)
+            feas = feas & keep[:, None, None]
+        take, start = cells_fn(
+            us, feas, inst.v, inst.u, inst.cover, count, g_run, e_run
+        )
+        n_refused = jnp.int32(0)
+        if acfg.enabled:  # queue cap: refuse cells on over-backlogged servers
+            M = inst.gamma.shape[0]
+            over_c = bg >= acfg.queue_cap_mult * inst.gamma
+            over_e = be >= acfg.queue_cap_mult * inst.eta
+            offl = jnp.arange(M)[None, :, None] != inst.cover[:, None, None]
+            refuse = (take > 0) & (
+                over_c[None, :, None] | (offl & over_e[inst.cover][:, None, None])
+            )
+            n_refused = jnp.sum(jnp.where(refuse, take, 0))
+            take = jnp.where(refuse, 0, take)
+        n_shed = (
+            jnp.sum(jnp.where(keep, 0, count)) if keep is not None
+            else jnp.int32(0)
+        )
+        tf = take.astype(jnp.float32)
+        w = jnp.sum(tf * inst.v, axis=(0, 2))          # (M,) committed compute
+        # inst.u is zero at local cells, so the per-class sum is exactly the
+        # offloaded communication charged to the covering edge
+        c_load = jnp.zeros_like(w).at[inst.cover].add(
+            jnp.sum(tf * inst.u, axis=(1, 2))
+        )
+        if ccfg.enabled:
+            pc = compute_inflation(bg + w, inst.gamma, ccfg)
+            pe = comm_inflation(be + c_load, inst.eta, ccfg)
+            bg = step_backlog(bg, w, inst.gamma, ccfg)
+            be = step_backlog(be, c_load, inst.eta, ccfg)
+        else:
+            pc = jnp.ones_like(inst.gamma)
+            pe = jnp.ones_like(inst.eta)
+        return (bg, be), (take, start, pc, pe, w, c_load, n_shed, n_refused,
+                          bg, be)
+
+    def per_rep(c0, inst_seq, us_seq, feas_seq, tq_seq, cnt_seq):
+        return jax.lax.scan(
+            step, c0, (inst_seq, us_seq, feas_seq, tq_seq, cnt_seq)
+        )
+
+    return jax.jit(jax.vmap(per_rep))
+
+
 def _simulate_fleet_hier(
+    spec: ClusterSpec,
+    cfg: SimConfig,
+    scn: Scenario,
+    sources: List[_RepFrameSource],
+    *,
+    n_rep: int,
+    T: int,
+    W: int,
+    opts: EngineOptions,
+    n_dev: int = 1,
+    gen_s: float = 0.0,
+    engine: Optional[ResilienceEngine] = None,
+    metrics: bool = False,
+    sw: Optional[Stopwatch] = None,
+    t_run0: Optional[float] = None,
+) -> FleetResult:
+    """Class-aggregate fleet path for ``EngineOptions(scheduler="hierarchical")``.
+
+    Never materializes a dense ``N x M x L`` request grid: each frame's
+    arrivals are bucketed into QoS classes
+    (:func:`repro.core.aggregation.aggregate_requests`), the count-weighted
+    class representatives become one padded ``Cp x M x L`` candidate grid
+    per (replication, frame), and the analytic allocator
+    (:func:`repro.core.aggregation.hier_cells` — jitted XLA scan or the
+    fused Pallas kernel, per ``opts.backend`` / ``REPRO_GUS_BACKEND``) runs
+    *inside* the same vmap-over-R / ``lax.scan``-over-T / prefetch pipeline
+    as the dense path, with the congestion backlog as the scan carry and
+    class-level admission control (deadline shedding + queue caps) inside
+    the jitted step.  ``REPRO_HIER_HOST_LOOP=1`` routes to the retained
+    PR-9 per-window host loop (:func:`_simulate_fleet_hier_host`), the
+    baseline the scaling benchmark compares against.
+
+    Satisfaction is accounted **per member** on the host after each window:
+    the fixed-shape ``(take, start)`` cells deaggregate deterministically
+    (ascending member index within each class), and every allocated
+    member's realized accuracy / completion time is recomputed with its
+    *own* size, queueing delay, and — when impairments are on — the frame's
+    per-edge link draw, using the exact op sequence of
+    :func:`_frame_arrays`; the class mean only ever steers the allocation,
+    never the accounting.  Memory and schedule time still scale with the
+    class count, which is what sustains 10^5+ users per frame.
+    """
+    if os.environ.get("REPRO_HIER_HOST_LOOP", "0") not in ("0", "", "false", "False"):
+        return _simulate_fleet_hier_host(
+            spec, cfg, scn, sources, n_rep=n_rep, T=T, W=W, gen_s=gen_s,
+            engine=engine, metrics=metrics, sw=sw, t_run0=t_run0,
+        )
+    from .aggregation import QuantizationConfig, aggregate_requests, hier_backend_fn
+
+    ccfg = cfg.congestion
+    acfg = cfg.admission
+    M = spec.n_servers
+    n_edge = spec.n_edge
+    prefetch = opts.prefetch
+    if sw is None:
+        sw = Stopwatch()
+    if t_run0 is None:
+        t_run0 = time.perf_counter()
+    quant = QuantizationConfig()
+    edges_q = np.asarray(QOS_ACC_EDGES, np.float64)
+    nq = len(QOS_ACC_EDGES) + 1
+    cells_fn = hier_backend_fn(opts.backend)
+    # congestion off -> the shed mask is carry-independent: precompute it in
+    # the (overlappable) window build and dispatch a slim instance
+    keep_pre = acfg.enabled and acfg.shed and not ccfg.enabled
+    run = _hier_runner_impl(cells_fn, ccfg, acfg, keep_pre)
+    # lean grid build: skip host-materializing the spec-gather candidate
+    # tensors and rebuild them on device (valid whenever the runner's keep
+    # mask is precomputable and the class axis is not host-sharded)
+    lean = keep_pre and n_dev <= 1
+    if lean:
+        spec_acc_j = jnp.asarray(spec.acc, jnp.float32)
+        spec_placed_tj = jnp.asarray(np.transpose(spec.placed, (1, 0, 2)))
+        spec_proc_tj = jnp.asarray(
+            np.transpose(spec.proc_ms, (1, 0, 2)), jnp.float32
+        )
+
+    reqs_per_rep = np.zeros(n_rep, np.int64)
+    served_per_rep = np.zeros(n_rep, np.int64)
+    sat_per_rep = np.zeros(n_rep, np.int64)
+    us_sum_per_rep = np.zeros(n_rep, np.float64)
+    phi_sum = 0.0
+    phi_cnt = 0
+    m_acc: Optional[Dict[str, np.ndarray]] = None
+    if metrics:
+        m_acc = {
+            "n_arrivals": np.zeros((n_rep, T), np.int32),
+            "n_served": np.zeros((n_rep, T), np.int32),
+            "n_satisfied": np.zeros((n_rep, T), np.int32),
+            "n_shed": np.zeros((n_rep, T), np.int32),
+            "n_refused": np.zeros((n_rep, T), np.int32),
+            "tier_hist": np.zeros((n_rep, T, 3), np.int32),
+            "qos_sat": np.zeros((n_rep, T, nq), np.int32),
+            "qos_count": np.zeros((n_rep, T, nq), np.int32),
+            "util_gamma": np.zeros((n_rep, T, M), np.float32),
+            "util_eta": np.zeros((n_rep, T, M), np.float32),
+            "backlog_gamma": np.zeros((n_rep, T, M), np.float32),
+            "backlog_eta": np.zeros((n_rep, T, M), np.float32),
+            "us_sum": np.zeros((n_rep, T), np.float32),
+        }
+
+    def build_window(t0: int):
+        """Host-side build of one window: aggregate every (rep, frame) into
+        sorted classes, assemble the padded class grid, and precompute the
+        class tensors.  Pure numpy + the sources' own RNGs, so it runs
+        unchanged inline (``prefetch=0``) or on the producer thread."""
+        t1 = min(t0 + W, T)
+        Tc = t1 - t0
+        with sw.span("fleet/hier_build", CAT_BUILD, t0=t0):
+            gb, eb = _frame_budgets_batch(
+                spec, cfg, scn, (t0 + np.arange(Tc)) * cfg.frame_ms, engine=engine,
+            )
+            budgets_by_k = [(gb[k], eb[k]) for k in range(Tc)]
+            links_by_k = (
+                [engine.link_frame(t0 + k) for k in range(Tc)]
+                if engine is not None else None
+            )
+        frames_rc: List[RequestColumns] = []
+        frame_starts: List[float] = []
+        infos: List[List[Optional[dict]]] = []
+        n_arr = np.zeros((n_rep, Tc), np.int32)
+        n_cls = np.zeros((n_rep, Tc), np.int32)
+        for rep, src in enumerate(sources):
+            with sw.span("fleet/arrivals", CAT_GEN, t0=t0, rep=rep):
+                buckets = src.take(t1)
+            rep_infos: List[Optional[dict]] = []
+            for k, bucket in enumerate(buckets):
+                frame_start = (t0 + k) * cfg.frame_ms
+                frame_end = frame_start + cfg.frame_ms
+                frame_starts.append(frame_start)
+                n = len(bucket)
+                n_arr[rep, k] = n
+                if not n:
+                    z = np.zeros(0)
+                    frames_rc.append(RequestColumns(
+                        arrival_ms=z, cover=np.zeros(0, np.int64),
+                        service=np.zeros(0, np.int64), A=z, C=z, size_bytes=z,
+                    ))
+                    rep_infos.append(None)
+                    continue
+                if isinstance(bucket, RequestColumns):
+                    cov, svc = bucket.cover, bucket.service
+                    A_r, C_r = bucket.A, bucket.C
+                    size = bucket.size_bytes
+                    arr_ms = bucket.arrival_ms
+                else:
+                    cov = np.array([r.cover for r in bucket], np.int64)
+                    svc = np.array([r.service for r in bucket], np.int64)
+                    A_r = np.array([r.A for r in bucket], np.float64)
+                    C_r = np.array([r.C for r in bucket], np.float64)
+                    size = np.array([r.size_bytes for r in bucket], np.float64)
+                    arr_ms = np.array([r.arrival_ms for r in bucket], np.float64)
+                with sw.span("fleet/hier_aggregate", CAT_BUILD, frame=t0 + k):
+                    tq = frame_end - np.asarray(arr_ms, np.float64)
+                    count, first_idx, members, offsets, repc = (
+                        aggregate_requests(cov, svc, A_r, C_r, size, tq, quant)
+                    )
+                    # allocation order is by first member index — sort once
+                    # here so the device allocator walks classes in order
+                    order = np.argsort(first_idx, kind="stable")
+                    n_c = count.shape[0]
+                    rank = np.empty(n_c, np.int64)
+                    rank[order] = np.arange(n_c)
+                    cls_of_member = np.repeat(np.arange(n_c), count)
+                    members_s = members[
+                        np.argsort(rank[cls_of_member], kind="stable")
+                    ]
+                    count_s = count[order]
+                    frames_rc.append(RequestColumns(
+                        arrival_ms=frame_end - repc["tq"][order],
+                        cover=repc["cover"][order],
+                        service=repc["service"][order],
+                        A=repc["A"][order],
+                        C=repc["C"][order],
+                        size_bytes=repc["size"][order],
+                    ))
+                    n_cls[rep, k] = n_c
+                    rep_infos.append(dict(
+                        members_s=members_s,
+                        off_s=np.concatenate([[0], np.cumsum(count_s)]),
+                        count_s=count_s,
+                        tq_s=repc["tq"][order],
+                        cov=cov, svc=svc, A=A_r, C=C_r, size=size, tq=tq,
+                    ))
+            infos.append(rep_infos)
+        Cp = _pad_bucket_fine(int(n_cls.max())) if frames_rc else 4
+        with sw.span("fleet/grid_build", CAT_BUILD, t0=t0):
+            built = _build_frame_batch(
+                frames_rc, spec, cfg, frame_starts, budgets_by_k * n_rep, Cp,
+                links=None if links_by_k is None else links_by_k * n_rep,
+                lean=lean,
+            )  # leading axis: n_rep * Tc class frames
+            if lean:
+                batch, svc_p, size_p = built
+                us_w, feas_w, v_w, u_w = _us_feas_lean(
+                    batch.ctime, batch.A, batch.C, batch.w_a, batch.w_c,
+                    batch.max_as, batch.max_cs, batch.cover, svc_p, size_p,
+                    spec_acc_j, spec_placed_tj, spec_proc_tj,
+                )
+            else:
+                batch = built
+                us_w, feas_w = _hier_class_tensors(batch, n_dev)
+            batch_rt = jax.tree.map(
+                lambda x: np.asarray(x).reshape((n_rep, Tc) + x.shape[1:]), batch
+            )
+            us_rt = us_w.reshape(n_rep, Tc, Cp, M, -1)
+            feas_rt = feas_w.reshape(n_rep, Tc, Cp, M, -1)
+            cnt_rt = np.zeros((n_rep, Tc, Cp), np.int32)
+            tq_rt = np.zeros((n_rep, Tc, Cp), np.float32)
+            for rep in range(n_rep):
+                for k in range(Tc):
+                    info = infos[rep][k]
+                    if info is None:
+                        continue
+                    nc = info["count_s"].shape[0]
+                    cnt_rt[rep, k, :nc] = info["count_s"]
+                    tq_rt[rep, k, :nc] = info["tq_s"]
+            if keep_pre:
+                # at unit inflation admission's candidate test is exactly
+                # hard_feasible (the phi-1 additions in congested_ctime are
+                # exact zeros), so the shed mask is a free reduction of the
+                # feas tensor already in hand; slim the dispatched instance:
+                # the runner never reads the per-cell candidate tensors, so
+                # their H2D transfer would be pure waste
+                tq_rt = feas_rt.any(axis=(-1, -2))
+                slim5 = np.zeros((n_rep, Tc, 1, 1, 1), np.float32)
+                slim3 = np.zeros((n_rep, Tc, 1), np.float32)
+                batch_rt = dataclasses.replace(
+                    batch_rt,
+                    acc=slim5, ctime=slim5,
+                    avail=np.zeros((n_rep, Tc, 1, 1, 1), bool),
+                    A=slim3, C=slim3, w_a=slim3, w_c=slim3,
+                )
+                if lean:  # the allocator's load tensors, rebuilt on device
+                    batch_rt = dataclasses.replace(
+                        batch_rt,
+                        v=v_w.reshape(n_rep, Tc, Cp, M, -1),
+                        u=u_w.reshape(n_rep, Tc, Cp, M, -1),
+                    )
+            if n_dev <= 1:
+                # commit the runner's inputs on the producer side so the
+                # dispatch thread never pays the H2D copies for the big
+                # class tensors — with prefetch they land here, overlapped
+                batch_rt = jax.tree.map(jnp.asarray, batch_rt)
+                cnt_rt = jnp.asarray(cnt_rt)
+                tq_rt = jnp.asarray(tq_rt)
+        return (t0, t1, Tc, batch_rt, us_rt, feas_rt, tq_rt, cnt_rt, infos,
+                gb, eb, links_by_k, n_arr)
+
+    window_starts = list(range(0, T, W))
+    prod_thread = None
+    if prefetch > 0 and len(window_starts) > 0:
+        work_q: queue_mod.Queue = queue_mod.Queue(maxsize=prefetch)
+        stop_producer = threading.Event()
+
+        def _offer(item) -> bool:
+            while not stop_producer.is_set():
+                try:
+                    work_q.put(item, timeout=0.05)
+                    return True
+                except queue_mod.Full:
+                    continue
+            return False
+
+        def _produce():
+            try:
+                for t0 in window_starts:
+                    if not _offer(build_window(t0)):
+                        return
+            except BaseException as e:  # delivered to the consumer's get()
+                _offer(e)
+
+        prod_thread = threading.Thread(
+            target=_produce, name="fleet-hier-producer", daemon=True
+        )
+        prod_thread.start()
+
+    def next_window(t0: int):
+        if prod_thread is None:
+            return build_window(t0)
+        item = work_q.get()
+        if isinstance(item, BaseException):
+            raise item
+        return item
+
+    carry = (jnp.zeros((n_rep, M), jnp.float32), jnp.zeros((n_rep, M), jnp.float32))
+    bw_true = spec.bandwidth_true
+    try:
+        def _post_window(wi, t0, Tc, infos, gb, eb, links_by_k, n_arr, outs):
+            """Host-side accounting for one dispatched window.  Called one
+            window *behind* the dispatch loop: ``outs`` are still-async
+            device futures at enqueue time, and draining them here — after
+            the next window's computation has already been issued — keeps
+            the device busy while the host deaggregates members."""
+            nonlocal phi_sum, phi_cnt, reqs_per_rep
+            with sw.span("fleet/hier_post", CAT_METRICS, window=wi):
+                (take_a, start_a, pc_a, pe_a, w_a_, c_a, shed_a, ref_a,
+                 bg_a, be_a) = jax.tree.map(np.asarray, outs)
+                if ccfg.enabled:
+                    phi_sum += float(pc_a.sum())
+                    phi_cnt += pc_a.size
+                reqs_per_rep += n_arr.sum(1)
+                for rep in range(n_rep):
+                    for k in range(Tc):
+                        tf_idx = t0 + k
+                        info = infos[rep][k]
+                        g_full, e_full = gb[k], eb[k]
+                        if metrics:
+                            m_acc["n_arrivals"][rep, tf_idx] = n_arr[rep, k]
+                            m_acc["n_shed"][rep, tf_idx] = shed_a[rep, k]
+                            m_acc["n_refused"][rep, tf_idx] = ref_a[rep, k]
+                            with np.errstate(invalid="ignore"):
+                                m_acc["util_gamma"][rep, tf_idx] = np.where(
+                                    g_full > 0.0,
+                                    w_a_[rep, k] / np.maximum(g_full, 1e-9), 0.0,
+                                )
+                                m_acc["util_eta"][rep, tf_idx] = np.where(
+                                    e_full > 0.0,
+                                    c_a[rep, k] / np.maximum(e_full, 1e-9), 0.0,
+                                )
+                            m_acc["backlog_gamma"][rep, tf_idx] = bg_a[rep, k]
+                            m_acc["backlog_eta"][rep, tf_idx] = be_a[rep, k]
+                        if info is None:
+                            continue
+                        if metrics:
+                            q_all = (info["A"][:, None] >= edges_q).sum(-1)
+                            np.add.at(m_acc["qos_count"][rep, tf_idx], q_all, 1)
+                        take = take_a[rep, k]
+                        ci, jj, ll = np.nonzero(take)
+                        if ci.size == 0:
+                            continue
+                        st = start_a[rep, k][ci, jj, ll]
+                        lens = take[ci, jj, ll]
+                        tot = int(lens.sum())
+                        cellid = np.repeat(np.arange(ci.size), lens)
+                        intra = np.arange(tot) - np.repeat(
+                            np.cumsum(lens) - lens, lens
+                        )
+                        base = info["off_s"][ci] + st
+                        midx = info["members_s"][base[cellid] + intra]
+                        jm = jj[cellid].astype(np.int64)
+                        lm = ll[cellid].astype(np.int64)
+                        # --- per-member realized accounting: the exact op
+                        # sequence of _frame_arrays at the chosen cells, so
+                        # every member's channel draw, size, and queueing
+                        # delay are its own (not the class mean's)
+                        svc_m = info["svc"][midx]
+                        cov_m = info["cov"][midx]
+                        A_m = info["A"][midx].astype(np.float32)
+                        C_m = info["C"][midx].astype(np.float32)
+                        Tq_m = info["tq"][midx].astype(np.float32)
+                        size_m = info["size"][midx].astype(np.float32)
+                        acc_m = spec.acc[svc_m, lm]
+                        proc_m = spec.proc_ms[jm, svc_m, lm]
+                        local_m = jm == cov_m
+                        transfer = size_m / bw_true
+                        if links_by_k is not None:  # per-member link draw
+                            sc, la = links_by_k[k]
+                            transfer = (
+                                transfer / np.asarray(sc, np.float64)[cov_m]
+                                + np.asarray(la, np.float64)[cov_m]
+                            )
+                        comm = transfer + np.where(
+                            jm >= n_edge, spec.cloud_extra_delay, 0.0
+                        )
+                        comm = np.where(local_m, 0.0, comm)
+                        ct = ((Tq_m + proc_m) + comm).astype(np.float32)
+                        if ccfg.enabled:  # congested_ctime, per member
+                            pc_k = pc_a[rep, k]
+                            pe_k = pe_a[rep, k]
+                            comm_f = ct - proc_m - Tq_m
+                            ct = (
+                                ct
+                                + proc_m * (pc_k[jm] - 1.0)
+                                + comm_f * (pe_k[cov_m] - 1.0)
+                            )
+                        sat_m = (acc_m >= A_m) & (ct <= C_m)
+                        us_m = (
+                            cfg.w_a * (acc_m - A_m) / cfg.max_as
+                            + cfg.w_c * (C_m - ct) / cfg.max_cs
+                        )
+                        served_per_rep[rep] += tot
+                        sat_per_rep[rep] += int(sat_m.sum())
+                        us_sum_per_rep[rep] += float(us_m.sum())
+                        if metrics:
+                            m_acc["n_served"][rep, tf_idx] = tot
+                            m_acc["n_satisfied"][rep, tf_idx] = int(sat_m.sum())
+                            cloud_m = (jm >= n_edge) & ~local_m
+                            eo_m = ~local_m & ~cloud_m
+                            m_acc["tier_hist"][rep, tf_idx] = (
+                                int(local_m.sum()), int(eo_m.sum()),
+                                int(cloud_m.sum()),
+                            )
+                            q_m = (A_m[:, None].astype(np.float64) >= edges_q).sum(-1)
+                            np.add.at(
+                                m_acc["qos_sat"][rep, tf_idx], q_m,
+                                sat_m.astype(np.int64),
+                            )
+                            m_acc["us_sum"][rep, tf_idx] = float(us_m.sum())
+
+        pending = None
+        for wi, wi_t0 in enumerate(window_starts):
+            with sw.span("fleet/window_wait", CAT_GEN, window=wi):
+                (t0, t1, Tc, batch_rt, us_rt, feas_rt, tq_rt, cnt_rt, infos,
+                 gb, eb, links_by_k, n_arr) = next_window(wi_t0)
+            with sw.span(
+                "fleet/dispatch", CAT_DISPATCH, window=wi
+            ), step_annotation("fleet/hier_window", wi):
+                carry, outs = run(
+                    carry, batch_rt, us_rt, feas_rt, tq_rt, cnt_rt
+                )
+            if pending is not None:
+                _post_window(*pending)
+            pending = (wi, t0, Tc, infos, gb, eb, links_by_k, n_arr, outs)
+        if pending is not None:
+            _post_window(*pending)
+    finally:
+        if prod_thread is not None:
+            stop_producer.set()
+            while prod_thread.is_alive():
+                try:
+                    work_q.get_nowait()
+                except queue_mod.Empty:
+                    pass
+                prod_thread.join(timeout=0.05)
+            prod_thread.join()
+
+    final_bg = np.asarray(carry[0])
+    # window_wait wraps the inline build (serial) or the producer-queue get
+    # (prefetch>0), so it already covers arrivals + aggregation blocking
+    gen_s += sw.total("fleet/window_wait")
+    timings = sw.as_dict()
+    timings["total_s"] = time.perf_counter() - t_run0
+    mres = None
+    if metrics:
+        mres = MetricsResult.from_stacked(
+            MetricsFrame(**m_acc),
+            t_ms=(np.arange(T) + 1.0) * cfg.frame_ms,
+            n_edge=spec.n_edge,
+            frame_ms=cfg.frame_ms,
+        )
+    return FleetResult(
+        n_rep=n_rep,
+        n_frames=T,
+        n_requests=int(reqs_per_rep.sum()),
+        n_served=int(served_per_rep.sum()),
+        satisfied_per_rep=100.0 * sat_per_rep / np.maximum(reqs_per_rep, 1),
+        mean_us_per_rep=us_sum_per_rep / np.maximum(reqs_per_rep, 1),
+        final_backlog_per_rep=final_bg if ccfg.enabled else None,
+        mean_compute_inflation=(
+            phi_sum / phi_cnt if ccfg.enabled and phi_cnt else 1.0
+        ),
+        n_devices=n_dev,
+        window=W,
+        dispatch_s=sw.total("fleet/dispatch"),
+        gen_s=gen_s,
+        prefetch=prefetch if prod_thread is not None else 0,
+        timings=timings,
+        metrics=mres,
+    )
+
+
+def _simulate_fleet_hier_host(
     spec: ClusterSpec,
     cfg: SimConfig,
     scn: Scenario,
@@ -2346,18 +3053,13 @@ def _simulate_fleet_hier(
     sw: Optional[Stopwatch] = None,
     t_run0: Optional[float] = None,
 ) -> FleetResult:
-    """Class-aggregate fleet path for ``EngineOptions(scheduler="hierarchical")``.
-
-    Never materializes a dense ``N x M x L`` request grid: each frame's
-    arrivals are bucketed into QoS classes
-    (:func:`repro.core.aggregation.aggregate_requests`), one
-    ``n_classes x M x L`` candidate grid is built from count-weighted class
-    representatives, the global chunked greedy
-    (:func:`repro.core.aggregation.hier_assign`) allocates against the
-    shared per-frame budgets, and satisfaction / US / metrics are accounted
-    *class-level*, weighted by member counts.  Memory and schedule time
-    scale with the class count (bounded by the QoS tier space), not the
-    request count — the 10^5-users-per-frame path.
+    """The PR-9 per-window *host loop* for the class-aggregate fleet, kept
+    as the device pipeline's reference baseline (``REPRO_HIER_HOST_LOOP=1``
+    routes here; ``benchmarks/fleet_scale.py`` uses it for the wall-time
+    comparison).  Satisfaction is accounted *class-level* from the
+    count-weighted representatives, admission control is not evaluated, and
+    scheduling runs one frame at a time on the host — the three things
+    :func:`_simulate_fleet_hier` fixes.
 
     Congestion mirrors the scan step in the same order: the scheduler sees
     the backlog-reduced budgets, inflation factors come from committed +

@@ -1,0 +1,195 @@
+"""Fused Pallas kernel for the hierarchical analytic allocator.
+
+One grid program allocates one frame's class queue: the padded (C, M, L)
+class tensors are loaded into VMEM once, and the whole class walk —
+masked argmax over the (M, L) slab, analytic chunk sizing by f32 floor
+division, budget depletion — runs fused on chip without round-tripping
+the shrinking ``gamma``/``eta`` vectors to HBM between classes.  Output
+is the fixed-shape ``(take, start)`` cell pair (see
+``repro.core.aggregation``): ``take[c, j, l]`` members of class ``c`` go
+to cell ``(j, l)`` starting at member offset ``start[c, j, l]``.
+
+Grid decision: the grid is ``(B,)`` — one program per frame in the batch,
+like the dense GUS kernel — **not** ``(B, class-chunks)``.  The budget
+vectors are a sequential carry across the entire class axis, so a
+class-chunked grid would need cross-program carry through scratch or
+revisited output blocks; both break under ``vmap`` batching (vmap
+prepends a grid axis and shifts ``pl.program_id`` semantics), and the
+fleet runner vmaps this kernel over replications inside ``lax.scan``.
+The class axis is walked in-kernel with ``fori_loop`` instead; classes
+are already the compressed representation, so ``C`` is small (padded to
+a power-of-two bucket) and the sequential walk is the algorithm, not a
+layout artifact.
+
+Layout per program (all VMEM):
+
+  us/v/u       : (1, C, M, L)  class candidate tensors, f32
+  feas         : (1, C, M, L)  feasibility mask, f32 0/1 (uniform tiling
+                               with the candidate tensors, as in the
+                               dense kernel)
+  cover/count  : (1, C)        class cover server / member count, int32
+  gamma/eta    : (1, M)        per-server budgets (loop carry)
+  out take     : (1, C, M, L)  int32 members allocated per cell
+  out start    : (1, C, M, L)  int32 first member offset per cell
+
+Bit-parity contract: the chunk-sizing arithmetic is op-for-op the f32
+sequence of ``repro.core.aggregation.hier_cells_np`` and its jitted XLA
+twin — ``floor(budget / cost)``, ``min`` against the remainder in f32
+*before* the int32 cast (overflow guard for tiny costs), commit via
+``budget + (-(f32(take) * cost))``.  Integer outputs must equal both
+exactly (``tests/test_hier_parity.py`` is the three-way harness).
+
+This module depends only on jax — never on ``repro.core`` (the core's
+aggregation module imports *us*, and a reverse import would cycle).
+``interpret=True`` runs the kernel body as plain jax ops (CPU CI); on a
+TPU backend the default is the compiled Mosaic path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["hier_cells_pallas"]
+
+#: matches ``repro.core.aggregation._NEG`` — the masked-out cell score.
+NEG = -1e30
+
+
+def _hier_kernel(
+    us_ref, feas_ref, v_ref, u_ref, cover_ref, count_ref,
+    gamma_ref, eta_ref,
+    take_ref, start_ref,
+    *, n_classes: int,
+):
+    us = us_ref[0]
+    feas = feas_ref[0] != 0.0
+    v = v_ref[0]
+    u = u_ref[0]
+    cover = cover_ref[0]
+    count = count_ref[0]
+    M, L = us.shape[1], us.shape[2]
+
+    def cls_body(c, state):
+        gamma, eta, take_all, start_all = state
+        s = jax.lax.dynamic_index_in_dim(cover, c, keepdims=False)
+        cnt = jax.lax.dynamic_index_in_dim(count, c, keepdims=False)
+        us_c = jax.lax.dynamic_index_in_dim(us, c, keepdims=False)
+        feas_c = jax.lax.dynamic_index_in_dim(feas, c, keepdims=False)
+        v_c = jax.lax.dynamic_index_in_dim(v, c, keepdims=False)
+        u_c = jax.lax.dynamic_index_in_dim(u, c, keepdims=False)
+        is_local = jnp.arange(M, dtype=jnp.int32) == s
+
+        def cond(st):
+            return st[-1]
+
+        def chunk(st):
+            rem, gamma, eta, take, start, used, _ = st
+            eta_s = jax.lax.dynamic_index_in_dim(eta, s, keepdims=False)
+            ok = (
+                feas_c
+                & (v_c <= gamma[:, None])
+                & (is_local[:, None] | (u_c <= eta_s))
+            )
+            score = jnp.where(ok, us_c, NEG).reshape(-1)
+            flat = jnp.argmax(score)
+            any_ok = score[flat] > NEG
+            j = (flat // L).astype(jnp.int32)
+            l = (flat % L).astype(jnp.int32)
+            vv = v_c[j, l]
+            uv = u_c[j, l]
+            offl = j != s
+            rem_f = rem.astype(jnp.float32)
+            cap_g = jnp.where(
+                vv > 0, jnp.floor(gamma[j] / jnp.where(vv > 0, vv, 1.0)), rem_f
+            )
+            cap_e = jnp.where(
+                offl & (uv > 0),
+                jnp.floor(eta_s / jnp.where(uv > 0, uv, 1.0)),
+                rem_f,
+            )
+            t_f = jnp.minimum(rem_f, jnp.minimum(cap_g, cap_e))
+            t = t_f.astype(jnp.int32)
+            do = any_ok & (t >= 1)
+            tf32 = jnp.where(do, t, 0).astype(jnp.float32)
+            gamma = gamma.at[j].add(-(tf32 * vv))
+            eta = eta.at[s].add(jnp.where(offl, -(tf32 * uv), 0.0))
+            first = take[j, l] == 0
+            start = start.at[j, l].set(
+                jnp.where(do & first, used, start[j, l])
+            )
+            take = take.at[j, l].add(jnp.where(do, t, 0))
+            used = used + jnp.where(do, t, 0)
+            rem = rem - jnp.where(do, t, 0)
+            return rem, gamma, eta, take, start, used, do & (rem > 0)
+
+        st0 = (
+            cnt,
+            gamma,
+            eta,
+            jnp.zeros((M, L), jnp.int32),
+            jnp.zeros((M, L), jnp.int32),
+            jnp.int32(0),
+            feas_c.any() & (cnt > 0),
+        )
+        _, gamma, eta, take, start, _, _ = jax.lax.while_loop(
+            cond, chunk, st0
+        )
+        take_all = jax.lax.dynamic_update_index_in_dim(take_all, take, c, 0)
+        start_all = jax.lax.dynamic_update_index_in_dim(start_all, start, c, 0)
+        return gamma, eta, take_all, start_all
+
+    init = (
+        gamma_ref[0],
+        eta_ref[0],
+        jnp.zeros((n_classes, M, L), jnp.int32),
+        jnp.zeros((n_classes, M, L), jnp.int32),
+    )
+    _, _, take, start = jax.lax.fori_loop(0, n_classes, cls_body, init)
+    take_ref[0] = take
+    start_ref[0] = start
+
+
+def hier_cells_pallas(
+    us, feas, v, u, cover, count, gamma, eta, *, interpret=None,
+):
+    """Run the fused hierarchical allocator on a batch of frames.
+
+    Shapes (leading batch axis ``B`` required; ``repro.core.aggregation``
+    adds it for single frames): ``us/feas/v/u`` ``(B, C, M, L)``;
+    ``cover/count`` ``(B, C)``; ``gamma/eta`` ``(B, M)``.  Returns
+    ``(take, start)`` int32 ``(B, C, M, L)``.  ``interpret=None`` resolves
+    via :func:`repro.kernels.gus_pallas.gus_pallas_interpret_default`.
+    """
+    if interpret is None:
+        from repro.kernels.gus_pallas import gus_pallas_interpret_default
+
+        interpret = gus_pallas_interpret_default()
+    B, C, M, L = us.shape
+    if C == 0:
+        empty = jnp.zeros((B, 0, M, L), jnp.int32)
+        return empty, empty
+
+    cls = pl.BlockSpec((1, C), lambda b: (b, 0))
+    cand = pl.BlockSpec((1, C, M, L), lambda b: (b, 0, 0, 0))
+    srv = pl.BlockSpec((1, M), lambda b: (b, 0))
+    take, start = pl.pallas_call(
+        functools.partial(_hier_kernel, n_classes=C),
+        grid=(B,),
+        in_specs=[cand, cand, cand, cand, cls, cls, srv, srv],
+        out_specs=[cand, cand],
+        out_shape=[jax.ShapeDtypeStruct((B, C, M, L), jnp.int32)] * 2,
+        interpret=interpret,
+    )(
+        us.astype(jnp.float32),
+        feas.astype(jnp.float32),
+        v.astype(jnp.float32),
+        u.astype(jnp.float32),
+        cover.astype(jnp.int32),
+        count.astype(jnp.int32),
+        gamma.astype(jnp.float32),
+        eta.astype(jnp.float32),
+    )
+    return take, start

@@ -1,0 +1,51 @@
+"""Regenerate the hierarchical member-jitter golden fixture.
+
+``hier_member_golden.npz`` pins the impaired duplicate-class hierarchical
+fleet run defined by ``tests/test_hier_parity.py::golden_run`` — the
+regime where per-member realized link impairments are applied at
+deaggregation.  Any change to the member expansion, the realized-channel
+arithmetic, or the class-level admission accounting shows up as a fixture
+diff instead of silent drift.
+
+Regenerate (and commit the result) only when the accounting semantics are
+*meant* to change:
+
+    PYTHONPATH=src python tests/fixtures/make_hier_golden.py
+"""
+from __future__ import annotations
+
+import importlib.util
+import sys
+from pathlib import Path
+
+import numpy as np
+
+OUT = Path(__file__).parent / "hier_member_golden.npz"
+
+
+def _load_golden_run():
+    # the run config lives next to the test that consumes the fixture, so
+    # the two can never diverge
+    test_path = Path(__file__).parent.parent / "test_hier_parity.py"
+    spec = importlib.util.spec_from_file_location("_hier_parity", test_path)
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[spec.name] = mod  # dataclass decorators resolve the module
+    spec.loader.exec_module(mod)
+    return mod.golden_run
+
+
+def main():
+    fr = _load_golden_run()()
+    np.savez_compressed(
+        OUT,
+        n_requests=np.int64(fr.n_requests),
+        n_served=np.int64(fr.n_served),
+        satisfied_per_rep=np.asarray(fr.satisfied_per_rep),
+        mean_us_per_rep=np.asarray(fr.mean_us_per_rep),
+    )
+    print(f"{OUT.name}: n_requests={fr.n_requests} n_served={fr.n_served} "
+          f"satisfied={np.asarray(fr.satisfied_per_rep)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,7 +16,9 @@ The contract under test (see ``docs/architecture.md`` section 11):
   within the 2% satisfaction band of the dense fleet on paper-scale
   scenarios, congestion on and off;
 * composition errors are loud: hierarchical + non-GUS policy, + raw
-  callable, + ``backend=``, + admission control all raise;
+  callable, + ``backend=`` under :func:`simulate` (which has no device
+  hier path) all raise — while admission control, which used to raise,
+  now composes (class-level shedding; parity in ``test_hier_parity.py``);
 * the ``mega-city`` scenario delivers 10^5+ users per frame to the
   hierarchical fleet within bounded memory and all-finite statistics
   (reduced-scale fast, full scale marked slow).
@@ -226,11 +228,55 @@ def test_hier_scheduler_composition_errors():
             SPEC, cfg, policy="gus", seed=0,
             options=EngineOptions(scheduler="hierarchical", backend="pallas"),
         )
-    with pytest.raises(ValueError, match="admission"):
-        simulate_fleet(
-            SPEC, fleet_cfg(admission=AdmissionConfig(enabled=True)),
-            policy="gus", n_rep=2, seed=0, options=hier,
+
+def test_hier_fleet_admission_no_longer_raises():
+    """Regression: ``scheduler="hierarchical"`` + admission used to raise."""
+    fr = simulate_fleet(
+        SPEC, fleet_cfg(admission=AdmissionConfig(enabled=True)),
+        policy="gus", n_rep=2, seed=0,
+        options=EngineOptions(scheduler="hierarchical"),
+    )
+    assert fr.n_requests > 0
+    assert np.isfinite(np.asarray(fr.satisfied_per_rep)).all()
+    assert np.isfinite(np.asarray(fr.mean_us_per_rep)).all()
+
+
+def test_class_keys_are_chunk_invariant_on_mega_city():
+    """Quantization bins must not depend on how the trace is chunked or on
+    the arrival-RNG mode: ``class_keys`` is anchored (fixed-width bins), so
+    keys for any slice of a trace equal the same rows of the full trace's
+    keys, and a columnar trace and its object-mode round trip key
+    identically."""
+    from repro.core.aggregation import class_keys
+
+    scn = get_scenario("mega-city")
+    cfg = SimConfig(horizon_ms=6_000.0)
+    cols = scn.generate_arrivals_columns(
+        np.random.default_rng(0), 6, 5, cfg
+    )
+    n = len(cols)
+    assert n > 100
+    tq = cfg.frame_ms - np.mod(cols.arrival_ms, cfg.frame_ms)
+    full = class_keys(cols.cover, cols.service, cols.A, cols.C,
+                      cols.size_bytes, tq)
+    # chunk invariance: keys of a slice == the slice of the keys
+    for lo, hi in ((0, n // 3), (n // 3, n), (n // 2, n // 2 + 7)):
+        part = class_keys(
+            cols.cover[lo:hi], cols.service[lo:hi], cols.A[lo:hi],
+            cols.C[lo:hi], cols.size_bytes[lo:hi], tq[lo:hi],
         )
+        np.testing.assert_array_equal(part, full[lo:hi])
+    # mode stability: the object-mode view of the same trace keys identically
+    reqs = cols.to_requests()
+    obj = class_keys(
+        np.array([r.cover for r in reqs]),
+        np.array([r.service for r in reqs]),
+        np.array([r.A for r in reqs]),
+        np.array([r.C for r in reqs]),
+        np.array([r.size_bytes for r in reqs]),
+        tq,
+    )
+    np.testing.assert_array_equal(obj, full)
 
 
 # ---------------------------------------------------------------------------
